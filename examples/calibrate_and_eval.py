@@ -1,0 +1,17 @@
+"""Calibration workflow (paper §5.1.1) + accuracy comparison (Table 2 proxy).
+
+Trains a small LM, calibrates per-layer sigma on held-out batches, then
+evaluates perplexity with exact / EXAQ / NAIVE softmax at INT2 and INT3.
+
+    PYTHONPATH=src:. python examples/calibrate_and_eval.py
+"""
+import benchmarks.bench_accuracy as acc
+
+res = acc.run(train_steps=150)
+print(f"calibrated sigma range: [{res['sigma_range'][0]:.2f}, {res['sigma_range'][1]:.2f}]"
+      f"  (paper Fig. 6: [0.9, 3.4])")
+print(f"{'method':>16s}  perplexity")
+print(f"{'exact (Algo.1)':>16s}  {res['exact']:.3f}")
+for bits in (2, 3):
+    for m in ("exaq_paper", "exaq_analytic", "naive"):
+        print(f"{m + f'_int{bits}':>16s}  {res[f'{m}_int{bits}']:.3f}")

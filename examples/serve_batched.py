@@ -1,0 +1,15 @@
+"""Batched serving example: prefill + greedy decode with EXAQ INT2 softmax,
+compared against exact-softmax serving.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import subprocess
+import sys
+
+for impl in ("exact", "exaq"):
+    print(f"--- impl={impl} ---")
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b", "--reduced",
+         "--batch", "4", "--prompt-len", "64", "--gen", "16", "--impl", impl],
+        check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )

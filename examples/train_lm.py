@@ -1,0 +1,22 @@
+"""End-to-end training driver example: train a small LM for a few hundred
+steps with checkpoint/restart and (optionally) EXAQ-STE quantized attention.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~2 min on CPU
+    PYTHONPATH=src python examples/train_lm.py --exaq     # EXAQ-STE softmax
+    # kill it mid-run and re-run: it resumes from the last checkpoint.
+
+Scale up (e.g. ~100M params): --d-model 768 --layers 12  (same code path the
+512-chip dry-run exercises; see src/repro/launch/train.py for the full CLI).
+"""
+import subprocess
+import sys
+
+args = [sys.executable, "-m", "repro.launch.train",
+        "--arch", "internlm2-1.8b", "--reduced",
+        "--steps", "120", "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/exaq_train_ckpt", "--ckpt-every", "40"]
+if "--exaq" in sys.argv:
+    args.append("--exaq-train")
+if "--big" in sys.argv:  # ~100M-param configuration
+    args += ["--d-model", "768", "--layers", "12"]
+subprocess.run(args, check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

@@ -1,0 +1,63 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dryrun JSONs (run after any re-sweep)."""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "/root/repo/src")
+sys.path.insert(0, "/root/repo")
+
+from benchmarks.bench_roofline import table  # noqa: E402
+
+DRY = "/root/repo/experiments/dryrun"
+
+
+def gb(x):
+    return f"{x/1e9:.2f}"
+
+
+def dryrun_table(tag):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRY, f"*__{tag}.json"))):
+        r = json.load(open(f))
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP: {r['skipped'][:60]} |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR |")
+            continue
+        ma = r.get("memory_analysis", {})
+        per_dev_gb = (ma.get("argument_bytes", 0) + ma.get("temp_bytes", 0) + ma.get("output_bytes", 0)) / 2**30
+        tc = r.get("tc_collectives", r["collectives"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['devices']} | {r.get('tc_flops', r['flops']):.3g} "
+            f"| {per_dev_gb:.2f} | {gb(tc['total'])} | compiled in {r['compile_s']}s |"
+        )
+    hdr = ("| arch | shape | devices | per-dev FLOPs (trip-counted) | per-dev mem GiB (arg+temp+out) "
+           "| per-dev collective GB | status |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_md():
+    rows = table("singlepod")
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | MODEL/HLO flops "
+           "| roofline frac | what would move it |\n|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+            f"| {r['collective_s']:.4g} | {r['dominant']} | {r['useful_flops_ratio']} "
+            f"| {r['roofline_fraction']} | {r['note'].split(':')[1].strip()[:70]} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## §Dry-run — single-pod (16x16 = 256 chips)\n")
+    print(dryrun_table("singlepod"))
+    print("\n## §Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table("multipod"))
+    print("\n## §Roofline (single-pod, trip-counted HLO cost model)\n")
+    print(roofline_md())

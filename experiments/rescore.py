@@ -1,0 +1,25 @@
+"""Recompute trip-counted cost fields in dryrun JSONs from stored HLO."""
+import glob, gzip, json, os, sys
+sys.path.insert(0, "/root/repo/src")
+from repro.utils import hlo_cost
+
+for jf in sorted(glob.glob("/root/repo/experiments/dryrun/*.json")):
+    rec = json.load(open(jf))
+    if "skipped" in rec or "error" in rec:
+        continue
+    tag = os.path.basename(jf).replace(".json", "")
+    hf = f"/root/repo/experiments/hlo/{tag}.hlo.gz"
+    if not os.path.exists(hf):
+        print("missing hlo:", tag); continue
+    with gzip.open(hf, "rt") as f:
+        hlo = f.read()
+    tc = hlo_cost.analyze(hlo, rec["devices"])
+    rec["tc_flops"] = tc.flops
+    rec["tc_bytes"] = tc.bytes
+    rec["tc_collectives"] = dict(tc.collectives); rec["tc_collectives"]["total"] = tc.collective_total
+    rec["tc_collective_counts"] = {k: float(v) for k, v in tc.collective_counts.items()}
+    rec["top_collective_sites"] = [
+        {"site": k, "bytes": b, "execs": e} for k, b, e in hlo_cost.per_collective_sites(hlo, rec["devices"], top=8)
+    ]
+    json.dump(rec, open(jf, "w"), indent=1)
+print("rescored")

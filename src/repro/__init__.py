@@ -1,0 +1,3 @@
+"""repro: EXAQ (Exponent Aware Quantization) — production JAX/Pallas framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,30 @@
+"""Architecture registry: importing this package registers all configs."""
+
+from repro.configs import (  # noqa: F401
+    deepseek_moe_16b,
+    internlm2_1_8b,
+    internvl2_1b,
+    llama1_7b,
+    mamba2_1_3b,
+    phi35_moe,
+    qwen3_32b,
+    stablelm_12b,
+    whisper_large_v3,
+    yi_6b,
+    zamba2_2_7b,
+)
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    QuantConfig,
+    ShapeConfig,
+    get_config,
+    list_configs,
+    shape_applicable,
+)
+
+__all__ = [
+    "SHAPES", "ModelConfig", "MoEConfig", "QuantConfig", "ShapeConfig",
+    "get_config", "list_configs", "shape_applicable",
+]

@@ -1,0 +1,11 @@
+"""DeepSeekMoE-16B: fine-grained experts, 2 shared + 64 routed top-6.
+[arXiv:2401.06066; hf] 28L d_model=2048 16H d_ff(expert)=1408 vocab=102400."""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    num_layers=28, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=102400, head_dim=128,
+    moe=MoEConfig(num_experts=64, top_k=6, num_shared=2, d_expert=1408),
+    source="arXiv:2401.06066; hf",
+))

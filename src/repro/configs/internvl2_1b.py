@@ -1,0 +1,11 @@
+"""InternVL2-1B: InternViT frontend (stub) + InternLM2-chat-1.8B-ish backbone.
+[arXiv:2404.16821; hf] 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-1b", family="vlm",
+    num_layers=24, d_model=896, num_heads=14, num_kv_heads=2,
+    d_ff=4864, vocab_size=151655, head_dim=64,
+    frontend="vlm", frontend_tokens=256, frontend_dim=1024,
+    source="arXiv:2404.16821; hf",
+))

@@ -1,0 +1,9 @@
+"""LLaMA-1-7B — the paper's own evaluation model (Table 2 reference arch)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama1-7b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    d_ff=11008, vocab_size=32000, head_dim=128,
+    source="arXiv:2302.13971 (paper's eval model)",
+))

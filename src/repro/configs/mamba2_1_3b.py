@@ -1,0 +1,12 @@
+"""Mamba2-1.3B: attention-free SSD. [arXiv:2405.21060] 48L d_model=2048 ssm_state=128.
+EXAQ is inapplicable (no softmax on the hot path) — see DESIGN.md §4."""
+from repro.configs.base import ModelConfig, QuantConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-1.3b", family="ssm",
+    num_layers=48, d_model=2048, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_head_dim=64,
+    quant=QuantConfig(softmax_impl="exact"),
+    source="arXiv:2405.21060",
+))

@@ -1,0 +1,11 @@
+"""Phi-3.5-MoE-instruct (41.9B total / 6.6B active).
+[hf:microsoft/Phi-3.5-MoE-instruct] 32L d_model=4096 32H (GQA kv=8) d_ff=6400, 16e top-2."""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    d_ff=6400, vocab_size=32064, head_dim=128,
+    moe=MoEConfig(num_experts=16, top_k=2, num_shared=0, d_expert=6400),
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+))

@@ -1,0 +1,9 @@
+"""Qwen3-32B (qk_norm, GQA). [hf:Qwen] 64L d_model=5120 64H (kv=8) d_ff=25600 vocab=151936."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-32b", family="dense",
+    num_layers=64, d_model=5120, num_heads=64, num_kv_heads=8,
+    d_ff=25600, vocab_size=151936, head_dim=128, qk_norm=True,
+    source="hf:Qwen/Qwen3-32B",
+))

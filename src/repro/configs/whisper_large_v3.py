@@ -1,0 +1,11 @@
+"""Whisper-large-v3: enc-dec, conv/mel frontend stubbed as precomputed frame embeddings.
+[arXiv:2212.04356] 32L(enc)+32L(dec) d_model=1280 20H d_ff=5120 vocab=51866."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-large-v3", family="audio",
+    num_layers=32, d_model=1280, num_heads=20, num_kv_heads=20,
+    d_ff=5120, vocab_size=51866, head_dim=64,
+    enc_layers=32, enc_seq=1500, frontend="audio", frontend_dim=128,
+    source="arXiv:2212.04356",
+))

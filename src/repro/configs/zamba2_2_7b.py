@@ -1,0 +1,11 @@
+"""Zamba2-2.7B: Mamba2 backbone + shared attention block every 6 layers.
+[arXiv:2411.15242; hf] 54L d_model=2560 32H (kv=32) d_ff=10240 ssm_state=64."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    d_ff=10240, vocab_size=32000, head_dim=80,
+    ssm_state=64, ssm_head_dim=64, hybrid_period=6,
+    source="arXiv:2411.15242; hf",
+))

@@ -1,0 +1,43 @@
+"""EXAQ core: the paper's contribution (clipping, quantizer, softmax, calibration)."""
+
+from repro.core.calibration import Calibrator
+from repro.core.clipping import (
+    PAPER_CLIP_COEFFS,
+    REDERIVED_CLIP_COEFFS,
+    exaq_mse,
+    fit_linear_rule,
+    get_clip_rule,
+    optimal_clip_analytic,
+    simulate_optimal_clip,
+)
+from repro.core.quantizer import (
+    QuantParams,
+    decode,
+    encode,
+    exaq_params,
+    histogram_denominator,
+    lut_lookup,
+    naive_params,
+)
+from repro.core.softmax import exact_softmax, quantized_softmax, softmax
+
+__all__ = [
+    "Calibrator",
+    "PAPER_CLIP_COEFFS",
+    "REDERIVED_CLIP_COEFFS",
+    "QuantParams",
+    "decode",
+    "encode",
+    "exaq_mse",
+    "exaq_params",
+    "exact_softmax",
+    "fit_linear_rule",
+    "get_clip_rule",
+    "histogram_denominator",
+    "lut_lookup",
+    "naive_params",
+    "optimal_clip_analytic",
+    "quantized_softmax",
+    "simulate_optimal_clip",
+    "softmax",
+]

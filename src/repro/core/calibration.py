@@ -1,0 +1,102 @@
+"""Calibration: collect softmax-input statistics (paper §5.1.1).
+
+The paper calibrates on ~100 samples (25 iters x batch 4), collecting the
+standard deviation of each softmax-input tensor; Table 1 then maps sigma -> C.
+
+We implement a Welford-style streaming collector keyed by site name
+(layer index / attention kind). Masked positions are excluded — a -inf row
+tail would otherwise destroy sigma. Stats are computed on the max-subtracted
+tensor (shift-invariant: per-row max subtraction changes the mean, not the
+within-row spread; we track both the global std and the mean row-std).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizer import QuantParams, exaq_params, naive_params
+
+
+@dataclass
+class SiteStats:
+    """Streaming moments for one softmax site."""
+
+    count: float = 0.0
+    mean: float = 0.0
+    m2: float = 0.0
+    min: float = float("inf")
+    max: float = float("-inf")
+
+    def update(self, values: np.ndarray) -> None:
+        v = np.asarray(values, dtype=np.float64).ravel()
+        if v.size == 0:
+            return
+        n_b = float(v.size)
+        mean_b = float(v.mean())
+        m2_b = float(((v - mean_b) ** 2).sum())
+        n_a, mean_a, m2_a = self.count, self.mean, self.m2
+        n = n_a + n_b
+        d = mean_b - mean_a
+        self.mean = mean_a + d * n_b / n
+        self.m2 = m2_a + m2_b + d * d * n_a * n_b / n
+        self.count = n
+        self.min = min(self.min, float(v.min()))
+        self.max = max(self.max, float(v.max()))
+
+    @property
+    def std(self) -> float:
+        return float(np.sqrt(self.m2 / max(self.count, 1.0)))
+
+
+@dataclass
+class Calibrator:
+    """Collects per-site sigma; emits QuantParams for EXAQ / NAIVE."""
+
+    stats: dict[str, SiteStats] = field(default_factory=dict)
+
+    def observe(self, site: str, x: jnp.ndarray, where: jnp.ndarray | None = None) -> None:
+        """x: softmax input logits (pre max-subtraction ok; we subtract)."""
+        x = jnp.asarray(x, dtype=jnp.float32)
+        if where is not None:
+            big_neg = jnp.full_like(x, -1e30)
+            x = jnp.where(where, x, big_neg)
+        shifted = x - jnp.max(x, axis=-1, keepdims=True)
+        arr = np.asarray(jax.device_get(shifted), dtype=np.float64)
+        if where is not None:
+            marr = np.asarray(jax.device_get(where)).astype(bool)
+            arr = arr[marr]
+        self.stats.setdefault(site, SiteStats()).update(arr)
+
+    def sigma(self, site: str) -> float:
+        return self.stats[site].std
+
+    def exaq_params(self, site: str, bits: int, rule: str = "paper") -> QuantParams:
+        return exaq_params(self.sigma(site), bits, rule=rule)
+
+    def naive_params(self, site: str, bits: int) -> QuantParams:
+        s = self.stats[site]
+        return naive_params(s.min, bits, xmax=min(s.max, 0.0))
+
+    # --- persistence (part of the serving config artifact) ---
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                k: {"count": v.count, "mean": v.mean, "m2": v.m2, "min": v.min, "max": v.max}
+                for k, v in self.stats.items()
+            }
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "Calibrator":
+        c = cls()
+        for k, d in json.loads(text).items():
+            c.stats[k] = SiteStats(**d)
+        return c
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        return {k: {"sigma": v.std, "min": v.min, "count": v.count} for k, v in self.stats.items()}

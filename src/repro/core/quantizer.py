@@ -1,0 +1,102 @@
+"""Uniform input-domain quantizer for softmax inputs (paper §3/§4, Algo. 2).
+
+The quantizer maps max-subtracted logits x <= 0 into M-bit codes over [C, 0]:
+
+    Delta = -C / 2^M
+    code(x) = clip( floor((x - C)/Delta), 0, 2^M - 1 )
+    level_k = C + (k + 1/2) * Delta            (mid-rise; see DESIGN.md §8)
+    LUT_exp[k] = exp(level_k)
+
+Because softmax is shift-invariant, only the partition {C, Delta} affects the
+normalized output — the mid-rise level placement matches the paper's uniform
+noise model exp(x + eps), eps ~ U[-Delta/2, Delta/2].
+
+All parameters are static (calibration-time) scalars so XLA folds them; the
+runtime cost is one FMA + floor + clamp per element.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clipping
+
+
+@dataclass(frozen=True)
+class QuantParams:
+    """Static quantization parameters for one softmax site."""
+
+    bits: int
+    clip: float  # C < 0
+
+    @property
+    def levels(self) -> int:
+        return 2**self.bits
+
+    @property
+    def delta(self) -> float:
+        return -self.clip / self.levels
+
+    def lut(self, dtype=jnp.float32) -> jnp.ndarray:
+        """LUT_exp: exp of each mid-rise level, ascending in code order."""
+        k = np.arange(self.levels, dtype=np.float64)
+        vals = np.exp(self.clip + (k + 0.5) * (-self.clip / self.levels))
+        return jnp.asarray(vals, dtype=dtype)
+
+    def lut_np(self) -> np.ndarray:
+        k = np.arange(self.levels, dtype=np.float64)
+        return np.exp(self.clip + (k + 0.5) * (-self.clip / self.levels))
+
+
+def exaq_params(sigma: float, bits: int, rule: str = "paper") -> QuantParams:
+    """EXAQ parameters from calibrated sigma (paper Table 1 / Eq. 14)."""
+    C = clipping.get_clip_rule(rule, bits)(float(sigma))
+    return QuantParams(bits=bits, clip=float(C))
+
+
+def naive_params(xmin: float, bits: int, xmax: float = 0.0) -> QuantParams:
+    """Paper's NAIVE baseline: C = (min + max)/2 (== min/2 after max-subtract)."""
+    C = clipping.naive_clip_from_minmax(float(xmin), float(xmax))
+    C = min(C, -1e-6)  # keep the range non-degenerate
+    return QuantParams(bits=bits, clip=float(C))
+
+
+def encode(x: jnp.ndarray, params: QuantParams) -> jnp.ndarray:
+    """x (already max-subtracted, x<=0) -> int32 codes in [0, 2^M)."""
+    inv_delta = 1.0 / params.delta
+    codes = jnp.floor((x - params.clip) * inv_delta)
+    return jnp.clip(codes, 0, params.levels - 1).astype(jnp.int32)
+
+
+def decode(codes: jnp.ndarray, params: QuantParams) -> jnp.ndarray:
+    """codes -> mid-rise dequantized input values (for analysis / oracles)."""
+    return params.clip + (codes.astype(jnp.float32) + 0.5) * params.delta
+
+
+def lut_lookup(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """e^Q(x) via the tiny LUT. jnp.take lowers to a gather; on TPU with a
+    4/8-entry table XLA emits vector selects (no transcendental unit)."""
+    return jnp.take(lut, codes, axis=0)
+
+
+def histogram_denominator(
+    codes: jnp.ndarray, lut: jnp.ndarray, axis: int = -1, where: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Denominator accumulation via the histogram trick (TPU analogue of LUT_sum).
+
+    sum_i e^{Q(x_i)} == sum_k count_k * LUT_exp[k]; counting 2-bit codes is
+    integer compare+add (VPU lanes), the final contraction is 2^M FMAs per row.
+    """
+    levels = lut.shape[0]
+    one_hot = codes[..., None] == jnp.arange(levels, dtype=codes.dtype)
+    if where is not None:
+        one_hot = one_hot & where[..., None]
+    counts = jnp.sum(one_hot, axis=axis if axis >= 0 else axis - 1, dtype=jnp.int32)
+    return jnp.einsum("...k,k->...", counts.astype(lut.dtype), lut)
+
+
+def with_clip(params: QuantParams, clip: float) -> QuantParams:
+    return replace(params, clip=float(clip))

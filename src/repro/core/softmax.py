@@ -1,0 +1,74 @@
+"""Softmax variants (paper Algo. 1 / Algo. 2), pure-jnp reference semantics.
+
+These are the *functional* definitions used across the framework; the Pallas
+kernels in ``repro.kernels`` implement the same math with explicit VMEM tiling
+and are verified against these references.
+
+Masking: the paper does not treat masked (=-inf) positions; clipping would map
+them to C and leak weight. We zero masked lanes after the LUT (DESIGN.md §5.4).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantParams, encode, histogram_denominator, lut_lookup
+
+_NEG_BIG = -1e30
+
+
+def exact_softmax(x: jnp.ndarray, axis: int = -1, where: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Paper Algo. 1 (numerically stable softmax), optional boolean mask."""
+    if where is not None:
+        x = jnp.where(where, x, _NEG_BIG)
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    if where is not None:
+        e = jnp.where(where, e, 0.0)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def quantized_softmax(
+    x: jnp.ndarray,
+    params: QuantParams,
+    axis: int = -1,
+    where: jnp.ndarray | None = None,
+    use_histogram: bool = True,
+) -> jnp.ndarray:
+    """Paper Algo. 2: quantize -> LUT exp -> (histogram) accumulate -> normalize.
+
+    Works for both EXAQ and NAIVE — they differ only in how ``params.clip`` was
+    chosen. ``use_histogram=True`` exercises the LUT_sum-equivalent accumulation
+    path; False sums the LUT outputs directly (identical result, different
+    op mix — kept for ablation).
+    """
+    if where is not None:
+        x = jnp.where(where, x, _NEG_BIG)
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    codes = encode(x, params)
+    lut = params.lut(dtype=x.dtype)
+    e = lut_lookup(codes, lut)
+    if where is not None:
+        e = jnp.where(where, e, 0.0)
+    if use_histogram:
+        denom = histogram_denominator(codes, lut, axis=axis, where=where)
+        denom = jnp.expand_dims(denom, axis)
+    else:
+        denom = jnp.sum(e, axis=axis, keepdims=True)
+    return e / denom
+
+
+def softmax(
+    x: jnp.ndarray,
+    impl: str = "exact",
+    params: QuantParams | None = None,
+    axis: int = -1,
+    where: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Dispatch: impl in {"exact", "exaq", "naive"}. exaq/naive need params."""
+    if impl == "exact":
+        return exact_softmax(x, axis=axis, where=where)
+    if impl in ("exaq", "naive"):
+        assert params is not None, f"{impl} softmax requires QuantParams"
+        return quantized_softmax(x, params, axis=axis, where=where)
+    raise ValueError(f"unknown softmax impl {impl!r}")

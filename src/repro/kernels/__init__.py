@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for EXAQ hot spots + jnp oracles and jit wrappers."""
+
+from repro.kernels.ops import decode_attention, exaq_attention, exaq_softmax
+
+__all__ = ["decode_attention", "exaq_attention", "exaq_softmax"]

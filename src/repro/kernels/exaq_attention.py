@@ -1,0 +1,303 @@
+"""Pallas TPU kernel: fused flash attention with EXAQ softmax (beyond-paper).
+
+Motivation (roofline): unfused attention materializes the (Sq, Skv) score
+matrix in HBM three times (write scores, read for softmax, read probs for PV)
+— at 32k prefill that is the dominant memory term. Fusing QK^T -> EXAQ
+softmax -> PV keeps scores in VMEM; EXAQ then removes the per-element
+transcendental: inside each block, exp() is replaced by quantize + a 2^M-way
+select, and the block denominator by an integer histogram dotted with the LUT
+(paper §4.1/§4.2 adapted to the VPU — see DESIGN.md §2).
+
+Online semantics: scores in each kv block are quantized on the grid anchored
+at the *running* row max, and accumulators are rescaled by exp(m_old - m_new)
+(one scalar exp per row per block — the per-element exps are gone). The
+matching oracle is ``ref.flash_exaq_attention_ref``; the global-grid (exact
+Algo. 2) semantics are provided by ``ref.exaq_attention_global_ref`` and used
+on the distributed seq-parallel path.
+
+Layouts: q (B, H, Sq, D); k, v (B, Hkv, Skv, D); GQA is handled by the kv
+index map (h // group). grid = (B, H, num_q_blocks, num_kv_blocks); the kv
+axis is innermost so the (m, l, acc) VMEM scratch carries across kv steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_BIG = -1e30
+_LANES = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _flash_body(
+    q,
+    k,
+    v,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    valid,
+    levels: int,
+    clip: float,
+    lut: tuple[float, ...],
+    scale: float,
+):
+    """Shared inner step: one (q_block, kv_block) EXAQ-flash update."""
+    bq = q.shape[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bkv); scale applied in fp32 (bit-exact vs the oracle)
+    s = jnp.where(valid, s, _NEG_BIG)
+
+    m_prev = m_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    inv_delta = levels / (-clip)
+    codes = jnp.clip(jnp.floor((s - m_new - clip) * inv_delta), 0, levels - 1).astype(jnp.int32)
+    e = jnp.full(s.shape, lut[0], jnp.float32)
+    for kk in range(1, levels):
+        e = jnp.where(codes == kk, lut[kk], e)
+    e = jnp.where(valid, e, 0.0)
+    # block denominator via integer histogram (LUT_sum analogue)
+    dden = jnp.zeros((bq, 1), jnp.float32)
+    for kk in range(levels):
+        cnt = jnp.sum(jnp.where(valid & (codes == kk), 1, 0).astype(jnp.int32), axis=-1, keepdims=True)
+        dden = dden + cnt.astype(jnp.float32) * lut[kk]
+    alpha = jnp.exp(m_prev - m_new)  # one scalar exp per row per block
+    l_new = alpha * l_ref[:, :1] + dden
+    pv = jax.lax.dot_general(
+        e, v.astype(jnp.float32), (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[...] = alpha * acc_ref[...] + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+
+def _causal_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    block_q: int,
+    block_kv: int,
+    nkv: int,
+    sq: int,
+    skv: int,
+    levels: int,
+    clip: float,
+    lut: tuple[float, ...],
+    scale: float,
+):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0]
+    offset = skv - sq  # align sequence ends (standard decoder convention)
+    row_ids = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0) + offset
+    col_ids = ikv * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    valid = (col_ids <= row_ids) & (col_ids < skv)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip fully-masked blocks above the causal diagonal
+    q_end = iq * block_q + block_q - 1 + offset
+    @pl.when(ikv * block_kv <= q_end)
+    def _compute():
+        _flash_body(q, k, v, m_ref, l_ref, acc_ref, valid=valid, levels=levels, clip=clip, lut=lut, scale=scale)
+
+    @pl.when(ikv == nkv - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30))[None, None].astype(o_ref.dtype)
+
+
+def _decode_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    lens_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    block_q: int,
+    block_kv: int,
+    nkv: int,
+    skv: int,
+    levels: int,
+    clip: float,
+    lut: tuple[float, ...],
+    scale: float,
+):
+    ikv = pl.program_id(3)
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0]
+    kv_len = lens_ref[0, 0]
+    col_ids = ikv * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    valid = (col_ids < kv_len) & (col_ids < skv)
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip kv blocks entirely beyond the live cache length
+    @pl.when(ikv * block_kv < kv_len)
+    def _compute():
+        _flash_body(q, k, v, m_ref, l_ref, acc_ref, valid=valid, levels=levels, clip=clip, lut=lut, scale=scale)
+
+    @pl.when(ikv == nkv - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30))[None, None].astype(o_ref.dtype)
+
+
+def _common_prep(q, k, v, scale):
+    """Pad head_dim to a lane multiple (scale is applied in-kernel, fp32)."""
+    del scale
+    D = q.shape[-1]
+    d_pad = _round_up(max(D, _LANES), _LANES)
+    if d_pad != D:
+        pad = [(0, 0)] * (q.ndim - 1) + [(0, d_pad - D)]
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return q, k, v, D, d_pad
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "scale", "causal", "block_q", "block_kv", "interpret"),
+)
+def flash_exaq_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    params,
+    scale: float,
+    causal: bool = True,
+    *,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused EXAQ flash attention forward. q:(B,H,Sq,D) k,v:(B,Hkv,Skv,D)."""
+    assert causal, "use exaq_decode_attention for the non-causal decode path"
+    B, H, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = H // Hkv
+    q, k, v, D, d_pad = _common_prep(q, k, v, scale)
+    sq_pad = _round_up(Sq, block_q)
+    skv_pad = _round_up(Skv, block_kv)
+    if sq_pad != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad - Sq), (0, 0)))
+    if skv_pad != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - Skv), (0, 0)))
+    nq, nkv = sq_pad // block_q, skv_pad // block_kv
+    lut = tuple(float(x) for x in params.lut_np())
+    kern = functools.partial(
+        _causal_kernel,
+        block_q=block_q, block_kv=block_kv, nkv=nkv, sq=Sq, skv=Skv,
+        levels=params.levels, clip=float(params.clip), lut=lut, scale=float(scale),
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d_pad), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, d_pad), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d_pad), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d_pad), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, sq_pad, d_pad), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, d_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq, :D]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "scale", "block_kv", "interpret"),
+)
+def exaq_decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kv_lens: jnp.ndarray,
+    params,
+    scale: float,
+    *,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Single-token decode attention with EXAQ softmax over the KV cache.
+
+    q: (B, H, 1, D); k, v: (B, Hkv, S, D) cache; kv_lens: (B,) live lengths.
+    The GQA query group for one kv head becomes the q-block rows.
+    """
+    B, H, one, D = q.shape
+    assert one == 1
+    _, Hkv, Skv, _ = k.shape
+    group = H // Hkv
+    q = q.reshape(B, Hkv, group, D)
+    q, k, v, D, d_pad = _common_prep(q, k, v, scale)
+    block_q = _round_up(max(group, 8), 8)
+    if block_q != group:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, block_q - group), (0, 0)))
+    skv_pad = _round_up(Skv, block_kv)
+    if skv_pad != Skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad - Skv), (0, 0)))
+    nkv = skv_pad // block_kv
+    lut = tuple(float(x) for x in params.lut_np())
+    lens2 = kv_lens.reshape(B, 1).astype(jnp.int32)
+    kern = functools.partial(
+        _decode_kernel,
+        block_q=block_q, block_kv=block_kv, nkv=nkv, skv=Skv,
+        levels=params.levels, clip=float(params.clip), lut=lut, scale=float(scale),
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hkv, 1, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d_pad), lambda b, h, i, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d_pad), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, d_pad), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, i, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d_pad), lambda b, h, i, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, block_q, d_pad), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, d_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lens2)
+    out = out[:, :, :group, :D].reshape(B, H, 1, D)
+    return out

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: fused EXAQ softmax (paper Algo. 2, TPU-native form).
+
+One pass over a (block_rows, n) VMEM tile:
+  max-subtract -> quantize (1 FMA + floor + clamp) -> LUT exp (select chain over
+  2^M constants, no transcendental) -> histogram denominator (integer counts x
+  2^M FMAs; the TPU analogue of the byte-packed LUT_sum) -> normalize.
+
+The LUT values and the clip C are compile-time constants (calibrated sigma),
+so the quantizer folds into immediate operands.
+
+Block sizing: rows are tiled by ``block_rows``; the full row (padded to a lane
+multiple) lives in VMEM — fp32 rows up to 32k cost 8*32k*4B = 1 MiB per tile.
+Longer rows go through ops.exaq_softmax_chunked.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantizer import QuantParams
+
+_NEG_BIG = -1e30
+_LANES = 128
+
+
+def _kernel(
+    x_ref,
+    o_ref,
+    *,
+    levels: int,
+    clip: float,
+    lut: tuple[float, ...],
+    valid_cols: int,
+):
+    x = x_ref[...].astype(jnp.float32)
+    bm, bn = x.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    valid = col < valid_cols
+    x = jnp.where(valid, x, _NEG_BIG)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    xs = x - m
+    inv_delta = levels / (-clip)
+    codes = jnp.clip(jnp.floor((xs - clip) * inv_delta), 0, levels - 1).astype(jnp.int32)
+    # LUT_exp: select chain over 2^M immediates (1-cycle-class VPU ops)
+    e = jnp.full((bm, bn), lut[0], jnp.float32)
+    for k in range(1, levels):
+        e = jnp.where(codes == k, lut[k], e)
+    e = jnp.where(valid, e, 0.0)
+    # LUT_sum analogue: integer histogram, then 2^M FMAs per row
+    denom = jnp.zeros((bm, 1), jnp.float32)
+    for k in range(levels):
+        cnt = jnp.sum(jnp.where(valid & (codes == k), 1, 0).astype(jnp.int32), axis=-1, keepdims=True)
+        denom = denom + cnt.astype(jnp.float32) * lut[k]
+    o_ref[...] = (e / denom).astype(o_ref.dtype)
+
+
+def _masked_kernel(
+    x_ref,
+    lens_ref,
+    o_ref,
+    *,
+    levels: int,
+    clip: float,
+    lut: tuple[float, ...],
+    valid_cols: int,
+):
+    """Variant with per-row valid lengths (e.g. ragged attention rows)."""
+    x = x_ref[...].astype(jnp.float32)
+    bm, bn = x.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    lens = lens_ref[...].reshape(bm, 1)
+    valid = (col < valid_cols) & (col < lens)
+    x = jnp.where(valid, x, _NEG_BIG)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    xs = x - m
+    inv_delta = levels / (-clip)
+    codes = jnp.clip(jnp.floor((xs - clip) * inv_delta), 0, levels - 1).astype(jnp.int32)
+    e = jnp.full((bm, bn), lut[0], jnp.float32)
+    for k in range(1, levels):
+        e = jnp.where(codes == k, lut[k], e)
+    e = jnp.where(valid, e, 0.0)
+    denom = jnp.zeros((bm, 1), jnp.float32)
+    for k in range(levels):
+        cnt = jnp.sum(jnp.where(valid & (codes == k), 1, 0).astype(jnp.int32), axis=-1, keepdims=True)
+        denom = denom + cnt.astype(jnp.float32) * lut[k]
+    denom = jnp.maximum(denom, 1e-30)  # fully-masked rows
+    o_ref[...] = (e / denom).astype(o_ref.dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("params", "block_rows", "interpret")
+)
+def exaq_softmax_pallas(
+    x: jnp.ndarray,
+    params: QuantParams,
+    lens: jnp.ndarray | None = None,
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """EXAQ softmax over the last axis. x: (..., n); lens: (...,) optional."""
+    orig_shape = x.shape
+    n = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, n)
+    n_pad = _round_up(max(n, _LANES), _LANES)
+    rows_pad = _round_up(max(rows, block_rows), block_rows)
+    if n_pad != n or rows_pad != rows:
+        x2 = jnp.pad(x2, ((0, rows_pad - rows), (0, n_pad - n)))
+    lut = tuple(float(v) for v in params.lut_np())
+    grid = (rows_pad // block_rows,)
+    kwargs = dict(levels=params.levels, clip=float(params.clip), lut=lut, valid_cols=n)
+    if lens is None:
+        out = pl.pallas_call(
+            functools.partial(_kernel, **kwargs),
+            grid=grid,
+            in_specs=[pl.BlockSpec((block_rows, n_pad), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((block_rows, n_pad), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows_pad, n_pad), x.dtype),
+            interpret=interpret,
+        )(x2)
+    else:
+        l2 = lens.reshape(rows).astype(jnp.int32)
+        if rows_pad != rows:
+            l2 = jnp.pad(l2, (0, rows_pad - rows))
+        out = pl.pallas_call(
+            functools.partial(_masked_kernel, **kwargs),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_rows, n_pad), lambda i: (i, 0)),
+                pl.BlockSpec((block_rows,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((block_rows, n_pad), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((rows_pad, n_pad), x.dtype),
+            interpret=interpret,
+        )(x2, l2)
+    return out[:rows, :n].reshape(orig_shape)

@@ -1,0 +1,135 @@
+"""Public kernel entry points.
+
+Auto-selects Pallas (TPU) vs interpret mode (CPU validation) vs pure-jnp
+reference, and provides the chunked two-pass path for rows too long for one
+VMEM tile. All functions are shape-polymorphic over leading dims.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantParams
+from repro.kernels import ref
+from repro.kernels.exaq_attention import exaq_decode_attention, flash_exaq_attention
+from repro.kernels.exaq_softmax import exaq_softmax_pallas
+
+# Rows longer than this take the chunked path (fp32 row bytes vs ~16 MiB VMEM).
+MAX_FUSED_COLS = 32768
+
+
+@functools.lru_cache(maxsize=1)
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def exaq_softmax(
+    x: jnp.ndarray,
+    params: QuantParams,
+    lens: jnp.ndarray | None = None,
+    *,
+    block_rows: int = 8,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """EXAQ softmax over the last axis (paper Algo. 2)."""
+    n = x.shape[-1]
+    if not use_kernel:
+        return ref.exaq_softmax_ref(x, params, lens=lens)
+    if n > MAX_FUSED_COLS:
+        return exaq_softmax_chunked(x, params, lens=lens)
+    return exaq_softmax_pallas(x, params, lens, block_rows=block_rows, interpret=on_cpu())
+
+
+def exaq_softmax_chunked(
+    x: jnp.ndarray,
+    params: QuantParams,
+    lens: jnp.ndarray | None = None,
+    chunk: int = 16384,
+) -> jnp.ndarray:
+    """Two-pass EXAQ softmax for very long rows (e.g. 512k decode scores).
+
+    Pass 1: global row max. Pass 2: per-chunk quantize + LUT + histogram
+    partials; partial *integer counts* compose exactly across chunks because
+    the quantization grid is anchored at the global max — the same property the
+    distributed seq-parallel combine exploits (counts all-reduce).
+    """
+    xf = x.astype(jnp.float32)
+    n = xf.shape[-1]
+    if lens is not None:
+        col = jnp.arange(n, dtype=jnp.int32)
+        valid = col < lens[..., None]
+        xf = jnp.where(valid, xf, -1e30)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    xs = xf - m
+    inv_delta = params.levels / (-params.clip)
+    codes = jnp.clip(jnp.floor((xs - params.clip) * inv_delta), 0, params.levels - 1).astype(jnp.int32)
+    lutv = params.lut_np()
+    e = jnp.full(xs.shape, float(lutv[0]), jnp.float32)
+    for k in range(1, params.levels):
+        e = jnp.where(codes == k, float(lutv[k]), e)
+    if lens is not None:
+        e = jnp.where(valid, e, 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(denom, 1e-30)
+
+
+def exaq_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    params: QuantParams,
+    scale: float,
+    causal: bool = True,
+    *,
+    block_q: int = 128,
+    block_kv: int = 128,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Fused flash attention with EXAQ softmax. q:(B,H,Sq,D) k,v:(B,Hkv,Skv,D)."""
+    if not use_kernel:
+        kr, vr = _repeat_kv(q, k, v)
+        return ref.flash_exaq_attention_ref(q, kr, vr, params, scale, causal=causal, block_kv=block_kv)
+    return flash_exaq_attention(
+        q, k, v, params, scale, causal, block_q=block_q, block_kv=block_kv, interpret=on_cpu()
+    )
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kv_lens: jnp.ndarray,
+    params: QuantParams,
+    scale: float,
+    *,
+    block_kv: int = 512,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Single-step decode attention over a KV cache with EXAQ softmax."""
+    if not use_kernel:
+        kr, vr = _repeat_kv(q, k, v)
+        n = kr.shape[2]
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) * scale
+        valid = jnp.arange(n)[None, None, None, :] < kv_lens[:, None, None, None]
+        s = jnp.where(valid, s, -1e30)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        inv_delta = params.levels / (-params.clip)
+        codes = jnp.clip(jnp.floor((s - m - params.clip) * inv_delta), 0, params.levels - 1)
+        lutv = params.lut_np()
+        e = jnp.full(s.shape, float(lutv[0]), jnp.float32)
+        for kk in range(1, params.levels):
+            e = jnp.where(codes == kk, float(lutv[kk]), e)
+        e = jnp.where(valid, e, 0.0)
+        p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return exaq_decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, interpret=on_cpu())
+
+
+def _repeat_kv(q, k, v):
+    group = q.shape[1] // k.shape[1]
+    if group == 1:
+        return k, v
+    return jnp.repeat(k, group, axis=1), jnp.repeat(v, group, axis=1)

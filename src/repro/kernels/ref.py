@@ -1,0 +1,168 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here with identical semantics
+(including the online-blocking order of the flash kernel, so tests can use
+tight tolerances). These are also the implementations the higher-level model
+code uses on paths where a kernel is not warranted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantParams
+
+_NEG_BIG = -1e30
+
+
+def _lut_select(codes: jnp.ndarray, lut_vals: tuple[float, ...]) -> jnp.ndarray:
+    """LUT lookup as a select chain (what the TPU VPU executes)."""
+    e = jnp.full(codes.shape, lut_vals[0], dtype=jnp.float32)
+    for k in range(1, len(lut_vals)):
+        e = jnp.where(codes == k, lut_vals[k], e)
+    return e
+
+
+def _encode(xs: jnp.ndarray, clip: float, levels: int) -> jnp.ndarray:
+    delta = -clip / levels
+    return jnp.clip(jnp.floor((xs - clip) / delta), 0, levels - 1).astype(jnp.int32)
+
+
+def exaq_softmax_ref(
+    x: jnp.ndarray,
+    params: QuantParams,
+    lens: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Oracle for the exaq_softmax kernel. x: (..., n). lens: (...,) int32 or None."""
+    x = x.astype(jnp.float32)
+    n = x.shape[-1]
+    if lens is not None:
+        col = jnp.arange(n, dtype=jnp.int32)
+        valid = col < lens[..., None]
+        x = jnp.where(valid, x, _NEG_BIG)
+    else:
+        valid = None
+    m = jnp.max(x, axis=-1, keepdims=True)
+    xs = x - m
+    codes = _encode(xs, params.clip, params.levels)
+    lut = tuple(float(v) for v in params.lut_np())
+    e = _lut_select(codes, lut)
+    if valid is not None:
+        e = jnp.where(valid, e, 0.0)
+    # histogram accumulation (LUT_sum analogue)
+    denom = jnp.zeros(x.shape[:-1] + (1,), jnp.float32)
+    for k in range(params.levels):
+        hit = codes == k
+        if valid is not None:
+            hit = hit & valid
+        denom = denom + jnp.sum(hit, axis=-1, keepdims=True).astype(jnp.float32) * lut[k]
+    return e / denom
+
+
+def mha_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    scale: float,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Exact attention oracle. q:(B,H,Sq,D) k,v:(B,H,Skv,D)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        sq, skv = q.shape[2], k.shape[2]
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(ki <= qi, s, _NEG_BIG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+def flash_exaq_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    params: QuantParams,
+    scale: float,
+    causal: bool = True,
+    block_kv: int = 256,
+) -> jnp.ndarray:
+    """Oracle for the fused flash-EXAQ kernel, mirroring its online blocking.
+
+    Semantics: per kv-block, scores are quantized on the grid anchored at the
+    *running* max; accumulators are rescaled exactly like flash attention.
+    q:(B,H,Sq,D) k,v:(B,H,Skv,D) -> (B,H,Sq,D) fp32.
+    """
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    lut = tuple(float(x) for x in params.lut_np())
+    levels = params.levels
+    nkv = -(-Skv // block_kv)
+    qi = jnp.arange(Sq, dtype=jnp.int32)[:, None] + (Skv - Sq)
+
+    m0 = jnp.full((B, H, Sq, 1), _NEG_BIG, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq, 1), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+
+    def body(carry, j):
+        m, l, acc = carry
+        start = j * block_kv
+        kj = jax.lax.dynamic_slice_in_dim(k, start, block_kv, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v, start, block_kv, axis=2)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kj.astype(jnp.float32)) * scale
+        ki = start + jnp.arange(block_kv, dtype=jnp.int32)[None, :]
+        valid = ki < Skv
+        if causal:
+            valid = valid & (ki <= qi)
+        s = jnp.where(valid, s, _NEG_BIG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        codes = _encode(s - m_new, params.clip, levels)
+        e = _lut_select(codes, lut)
+        e = jnp.where(valid, e, 0.0)
+        alpha = jnp.exp(m - m_new)
+        # histogram accumulation of the block denominator
+        dden = jnp.zeros_like(l)
+        for kk in range(levels):
+            cnt = jnp.sum((codes == kk) & valid, axis=-1, keepdims=True)
+            dden = dden + cnt.astype(jnp.float32) * lut[kk]
+        l_new = alpha * l + dden
+        acc_new = alpha * acc + jnp.einsum("bhqk,bhkd->bhqd", e, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    # pad kv to block multiple so dynamic_slice stays in range
+    pad = nkv * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nkv))
+    return acc / jnp.maximum(l, 1e-30)
+
+
+def exaq_attention_global_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    params: QuantParams,
+    scale: float,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """EXAQ attention with a *global* quantization grid (exact Algo. 2 semantics);
+    used by the unfused model path and the distributed seq-parallel combine."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    sq, skv = q.shape[2], k.shape[2]
+    if causal:
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        ki = jnp.arange(skv)[None, :]
+        valid = ki <= qi
+        s = jnp.where(valid, s, _NEG_BIG)
+    else:
+        valid = None
+    m = jnp.max(s, axis=-1, keepdims=True)
+    codes = _encode(s - m, params.clip, params.levels)
+    lut = tuple(float(x) for x in params.lut_np())
+    e = _lut_select(codes, lut)
+    if valid is not None:
+        e = jnp.where(valid, e, 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware. For every (arch x shape x mesh) cell:
+
+    jit(step, in_shardings, out_shardings).lower(*input_specs).compile()
+
+and extract cost_analysis / memory_analysis / per-device collective bytes
+(parsed from the post-SPMD HLO) into a JSON record consumed by
+benchmarks/bench_roofline.py and EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all [--multi-pod]   # every applicable cell
+"""
+
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import cosine_with_warmup
+from repro.runtime import serve as serve_rt
+from repro.runtime import sharding as shd
+from repro.runtime import train as train_rt
+from repro.runtime.sharding import activation_rules, make_activation_rules
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+# ------------------------------------------------------------ input specs
+
+def input_specs(cfg, shape) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((B, S), jnp.int32), "labels": sds((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), jnp.int32)}
+    else:  # decode
+        specs = {"tokens": sds((B, 1), jnp.int32)}
+    if cfg.frontend == "vlm" and shape.kind != "decode":
+        specs["vision_embeds"] = sds((B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+    if cfg.family == "audio" and shape.kind != "decode":
+        specs["audio_embeds"] = sds((B, cfg.enc_seq, cfg.frontend_dim), jnp.float32)
+    return specs
+
+
+# ----------------------------------------------------- collective parsing
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip() != ""]), 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)  # iota format [groups,size]
+    if m:
+        return int(m.group(2))
+    return total_devices
+
+
+def collective_bytes(hlo_text: str, total_devices: int) -> dict[str, float]:
+    """Per-device bytes moved over ICI per collective kind (ring algorithm
+    cost model: all-reduce 2(n-1)/n x payload; gather/scatter/a2a (n-1)/n)."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", ls)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in _COLLECTIVES:
+            continue
+        n = _group_size(ls, total_devices)
+        payload = _shape_bytes(result_type)
+        if op == "all-reduce":
+            moved = 2.0 * (n - 1) / max(n, 1) * payload
+        elif op == "all-gather":
+            moved = (n - 1) / max(n, 1) * payload
+        elif op == "reduce-scatter":
+            moved = (n - 1) * payload  # result is one shard; ring moves (n-1) shards
+        elif op == "all-to-all":
+            moved = (n - 1) / max(n, 1) * payload
+        else:  # collective-permute
+            moved = payload
+        out[op] += moved
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+# ------------------------------------------------------------- dry runs
+
+def _scan_multiplier(hlo_text: str) -> int:
+    return 1  # scan trip counts are already inside while loops in cost analysis
+
+
+VARIANTS = {
+    # §Perf hillclimb variants (EXPERIMENTS.md). Composable with '+'.
+    "padvocab": lambda c: __import__("dataclasses").replace(c, pad_vocab_to=256),
+    "bf16scores": lambda c: __import__("dataclasses").replace(c, attn_scores_bf16=True),
+    "spdecode": lambda c: c.with_quant(sp_decode=True),
+    "fusedattn": lambda c: c.with_quant(use_fused_kernel=True),
+    "mb4": lambda c: c,   # handled via microbatches arg below
+    "mb2": lambda c: c,
+    "qrows": lambda c: c,  # sequence-parallel attention rows (code default for
+                           # heads%tp!=0 archs; named for bookkeeping)
+    "donate": lambda c: c, # buffer donation (handled at jit below)
+    "selectlut": lambda c: c,  # select-chain LUT lookup (code default now; named for bookkeeping)
+    "maskfold": lambda c: c,   # mask folded into max-reduce only (code default; bookkeeping)
+    "groupq": lambda c: c,     # grouped-query einsum in SP decode (code default; bookkeeping)
+    "bq2048": lambda c: __import__("dataclasses").replace(c, attn_block_q=2048),
+    "divpv": lambda c: c,  # normalization folded into PV epilogue (code default; bookkeeping)
+}
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool = False, verbose: bool = True,
+                microbatches: int = 8, variant: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if variant:
+        for v in variant.split("+"):
+            cfg = VARIANTS[v](cfg)
+        if "mb4" in variant:
+            microbatches = 4
+        if "mb2" in variant:
+            microbatches = 2
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rules = make_activation_rules(cfg, mesh)
+    specs = input_specs(cfg, shape)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind, "variant": variant,
+        "mesh": dict(zip(mesh.axis_names, [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "devices": int(n_dev),
+    }
+
+    with mesh, activation_rules(mesh, rules):
+        if shape.kind == "train":
+            opt = AdamW(lr=cosine_with_warmup(3e-4, 100, 10000))
+            state_struct = jax.eval_shape(
+                lambda k: train_rt.init_train_state(cfg, opt, k), jax.ShapeDtypeStruct((2,), jnp.uint32)
+            )
+            st_sh = train_rt.state_shardings(cfg, mesh, state_struct)
+            b_sh = train_rt.batch_shardings(mesh, specs)
+            step = train_rt.make_train_step(cfg, opt, microbatches=microbatches)
+            rec["microbatches"] = microbatches
+            lowered = jax.jit(
+                step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None), donate_argnums=(0,)
+            ).lower(state_struct, specs)
+        else:
+            model_struct = jax.eval_shape(
+                lambda k: __import__("repro.models", fromlist=["build_model"]).build_model(cfg).init(k, jnp.bfloat16),
+                jax.ShapeDtypeStruct((2,), jnp.uint32),
+            )
+            p_sh = shd.tree_shardings(model_struct, cfg, mesh, mode="serve")
+            cache_struct = jax.eval_shape(
+                lambda: serve_rt.init_cache(cfg, shape.global_batch, shape.seq_len)
+            )
+            c_sh = serve_rt.cache_shardings(cfg, mesh, cache_struct)
+            prefill_step, decode_step = serve_rt.make_serve_fns(cfg)
+            dp = shd.data_axes(mesh)
+            tok_sh = jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, shd.validate_spec(P(dp, *([None] * (len(s.shape) - 1))), s.shape, mesh)
+                ),
+                specs,
+            )
+            if shape.kind == "prefill":
+                lowered = jax.jit(
+                    prefill_step, in_shardings=(p_sh, tok_sh, c_sh), out_shardings=(None, c_sh),
+                    donate_argnums=(2,),
+                ).lower(model_struct, specs, cache_struct)
+            else:
+                lowered = jax.jit(
+                    decode_step, in_shardings=(p_sh, tok_sh["tokens"], c_sh),
+                    out_shardings=(tok_sh["tokens"], c_sh, None), donate_argnums=(2,),
+                ).lower(model_struct, specs["tokens"], cache_struct)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis"] = {k: float(v) for k, v in ca.items() if isinstance(v, (int, float)) and k in (
+        "flops", "bytes accessed", "bytes accessed output", "optimal_seconds", "utilization operand 0 {}",
+    ) or k in ("flops", "bytes accessed")}
+    rec["flops"] = float(ca.get("flops", 0.0))
+    rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        rec["memory_analysis"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_bytes(hlo, n_dev)
+    # trip-counted cost model (XLA cost_analysis counts while bodies once)
+    from repro.utils import hlo_cost
+
+    tc = hlo_cost.analyze(hlo, n_dev)
+    rec["tc_flops"] = tc.flops
+    rec["tc_bytes"] = tc.bytes
+    rec["tc_collectives"] = dict(tc.collectives)
+    rec["tc_collectives"]["total"] = tc.collective_total
+    rec["tc_collective_counts"] = {k: float(v) for k, v in tc.collective_counts.items()}
+    rec["top_collective_sites"] = [
+        {"site": k, "bytes": b, "execs": e} for k, b, e in hlo_cost.per_collective_sites(hlo, n_dev, top=8)
+    ]
+    rec["hlo_bytes"] = len(hlo)
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    hlo_dir = os.path.join(os.path.dirname(os.path.abspath(RESULTS_DIR)), "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    tag = "multipod" if multi_pod else "singlepod"
+    if variant:
+        tag = tag + "__" + variant
+    with gzip.open(os.path.join(hlo_dir, f"{arch}__{shape_name}__{tag}.hlo.gz"), "wt") as f:
+        f.write(hlo)
+    if verbose:
+        print(json.dumps({k: rec[k] for k in ("arch", "shape", "devices", "flops", "bytes_accessed", "compile_s")}))
+        print("memory:", rec["memory_analysis"])
+        print("collectives:", {k: v for k, v in rec["collectives"].items() if k != "counts"})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    outdir = os.path.abspath(args.out or RESULTS_DIR)
+    os.makedirs(outdir, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in list_configs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        tag = "multipod" if args.multi_pod else "singlepod"
+        if args.variant:
+            tag = tag + "__" + args.variant
+        path = os.path.join(outdir, f"{arch}__{shape}__{tag}.json")
+        if os.path.exists(path):
+            print(f"skip (cached): {path}")
+            continue
+        try:
+            rec = dryrun_cell(arch, shape, multi_pod=args.multi_pod, variant=args.variant)
+        except Exception:
+            rec = {"arch": arch, "shape": shape, "error": traceback.format_exc()}
+            print(rec["error"])
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+A function (not a module-level constant) so importing never touches jax
+device state. Single-pod: (data=16, model=16) = 256 chips (TPU v5e pod);
+multi-pod: (pod=2, data=16, model=16) = 512 chips.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for unit tests (requires >= data*model local devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

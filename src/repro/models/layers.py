@@ -1,0 +1,80 @@
+"""Shared NN primitives (pure-functional, pytree params).
+
+Activation sharding hints go through ``repro.runtime.sharding.shard_activation``
+(no-op outside a mesh context) so the same model code runs on 1 CPU device and
+on the 512-chip production mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(dtype)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gated_mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP. params: wi (D, 2F) packing [gate, up]; wo (F, D)."""
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+    gate, up = jnp.split(h, 2, axis=-1)
+    return jnp.einsum("...f,fd->...d", silu(gate) * up, params["wo"].astype(x.dtype))
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": truncated_normal_init(k1, (d_model, 2 * d_ff), d_model**-0.5, dtype),
+        "wo": truncated_normal_init(k2, (d_ff, d_model), d_ff**-0.5, dtype),
+    }
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, N, Dh); positions: (S,) or (B, S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)  # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    if ang.ndim == 2:  # (S, Dh/2) -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jnp.ndarray:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d_model))
+    pe = jnp.zeros((seq_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d_model // 2)]))
+    return pe

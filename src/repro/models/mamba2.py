@@ -1,0 +1,156 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060), chunked JAX form.
+
+Train/prefill: chunked algorithm — intra-chunk quadratic term + inter-chunk
+state recurrence via lax.scan (never materializes the (S, S) kernel).
+Decode: O(1) recurrent state update. ng=1 (single B/C group), as in the
+released 1.3B model. EXAQ is inapplicable here (no softmax) — DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm, silu, truncated_normal_init
+from repro.runtime.sharding import shard_activation
+
+
+def conv_channels(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_mamba(key, cfg, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    ds = cfg.ssm_state
+    nh = cfg.ssm_heads
+    ch = conv_channels(cfg)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * din + 2 * ds + nh  # z, x, B, C, dt
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1)))
+    return {
+        "in_proj": truncated_normal_init(ks[0], (d, proj_out), d**-0.5, dtype),
+        "conv_w": truncated_normal_init(ks[1], (cfg.ssm_conv_width, ch), 0.3, dtype),
+        "conv_b": jnp.zeros((ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "ssm_norm": jnp.ones((din,), dtype),
+        "out_proj": truncated_normal_init(ks[3], (din, d), din**-0.5, dtype),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via shifted adds (width <= 4 — fuses on the VPU)."""
+    width = w.shape[0]
+    out = xbc * w[-1][None, None, :]
+    for i in range(1, width):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[-1 - i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _split_proj(proj: jnp.ndarray, cfg):
+    din, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xbc = proj[..., din : 2 * din + 2 * ds]
+    dt_raw = proj[..., 2 * din + 2 * ds :]
+    return z, xbc, dt_raw
+
+
+def _ssd_chunk(h, xs, dt, a, Bm, Cm):
+    """One chunk. h: (b, nh, hd, ds); xs: (b, Q, nh, hd); dt/a: (b, Q, nh);
+    Bm/Cm: (b, Q, ds). Returns (h_new, y)."""
+    cum = jnp.cumsum(a, axis=1)  # (b, Q, nh)
+    # inter-chunk: contribution of the carried state
+    y_inter = jnp.exp(cum)[..., None] * jnp.einsum("bqs,bnhs->bqnh", Cm, h)
+    # intra-chunk quadratic part
+    L = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (b, i, j, nh)
+    ii = jnp.arange(cum.shape[1])
+    L = jnp.where((ii[:, None] >= ii[None, :])[None, :, :, None], L, 0.0)
+    CB = jnp.einsum("bis,bjs->bij", Cm, Bm)
+    M = CB[..., None] * L * dt[:, None, :, :]  # (b, i, j, nh)
+    y_intra = jnp.einsum("bijn,bjnh->binh", M, xs)
+    # state update
+    decay_end = jnp.exp(cum[:, -1])  # (b, nh)
+    w = dt * jnp.exp(cum[:, -1:, :] - cum)  # (b, Q, nh)
+    h_add = jnp.einsum("bqn,bqs,bqnh->bnhs", w, Bm, xs)
+    h_new = decay_end[:, :, None, None] * h + h_add
+    return h_new, y_inter + y_intra
+
+
+def ssd_scan(xs, dt, a, Bm, Cm, h0, chunk: int):
+    """Full sequence via scan over chunks. xs: (b, S, nh, hd). Returns y, h_T."""
+    b, S, nh, hd = xs.shape
+    ds = Bm.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
+
+    def body(h, xs_t):
+        return _ssd_chunk(h, *xs_t)
+
+    h_T, ys = jax.lax.scan(body, h0, (to_chunks(xs), to_chunks(dt), to_chunks(a), to_chunks(Bm), to_chunks(Cm)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, nh, hd)[:, :S]
+    return y, h_T
+
+
+def mamba_forward(
+    params: dict,
+    x: jnp.ndarray,
+    cfg,
+    *,
+    mode: str = "train",
+    cache: dict | None = None,
+    chunk: int = 128,
+):
+    """x: (B, S, D). mode train/prefill returns (out, cache|None);
+    mode decode expects S==1 and a cache {'conv': (B,w-1,ch), 'ssm': (B,nh,hd,ds)}."""
+    din, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B, S, _ = x.shape
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    if mode == "decode":
+        conv_prev = cache["conv"]  # (B, w-1, ch)
+        full = jnp.concatenate([conv_prev.astype(xbc.dtype), xbc], axis=1)  # (B, w, ch)
+        conv_out = jnp.einsum("bwc,wc->bc", full, params["conv_w"].astype(xbc.dtype)) + params["conv_b"].astype(xbc.dtype)
+        xbc_t = silu(conv_out)[:, None, :]  # (B, 1, ch)
+        new_conv = full[:, 1:]
+    else:
+        xbc_t = silu(_causal_conv(xbc, params["conv_w"].astype(xbc.dtype), params["conv_b"].astype(xbc.dtype)))
+        new_conv = xbc[:, -(cfg.ssm_conv_width - 1) :] if S >= cfg.ssm_conv_width - 1 else jnp.pad(
+            xbc, ((0, 0), (cfg.ssm_conv_width - 1 - S, 0), (0, 0))
+        )
+
+    xs = xbc_t[..., :din].reshape(B, -1, nh, hd).astype(jnp.float32)
+    Bm = xbc_t[..., din : din + ds].astype(jnp.float32)
+    Cm = xbc_t[..., din + ds :].astype(jnp.float32)
+    xs = shard_activation(xs, "ssm_heads")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :])  # (B,S,nh)
+    a = -jnp.exp(params["A_log"])[None, None, :] * dt  # log-decay <= 0
+
+    if mode == "decode":
+        h = cache["ssm"].astype(jnp.float32)  # (B, nh, hd, ds)
+        da = jnp.exp(a[:, 0])  # (B, nh)
+        h_new = da[:, :, None, None] * h + jnp.einsum("bn,bs,bnh->bnhs", dt[:, 0], Bm[:, 0], xs[:, 0])
+        y = jnp.einsum("bs,bnhs->bnh", Cm[:, 0], h_new)[:, None]  # (B,1,nh,hd)
+        h_T = h_new
+    else:
+        h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+        y, h_T = ssd_scan(xs, dt, a, Bm, Cm, h0, chunk)
+
+    y = y + params["D_skip"][None, None, :, None] * xs[:, : y.shape[1]]
+    y = y.reshape(B, -1, din).astype(x.dtype)
+    y = rmsnorm(y * silu(z), params["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dp->bsp", y, params["out_proj"].astype(x.dtype))
+    new_cache = {"conv": new_conv, "ssm": h_T.astype(jnp.float32)}
+    return out, new_cache

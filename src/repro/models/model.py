@@ -1,0 +1,602 @@
+"""Composable model definition covering all assigned architecture families.
+
+One ``Model`` object (pure functions bound to a ModelConfig) provides:
+  init / forward_train / prefill / decode_step / init_cache / default_qstate
+
+Layer stacks are scan-over-layers (stacked params, per-layer EXAQ clip values
+as scan xs) so HLO size is O(1) in depth — required for tractable 512-device
+SPMD compiles. Families:
+
+  dense | vlm    : [attn -> mlp] x L, optional patch-embed prefix (stub frontend)
+  moe            : [attn -> moe_ffn] x L (+ shared experts)
+  ssm            : [mamba2] x L (attention-free; EXAQ n/a)
+  hybrid (zamba2): groups of `hybrid_period` mamba blocks + ONE weight-shared
+                   attention block applied on concat(h, h0) after each group
+  audio (whisper): enc-dec; encoder over stub frame embeddings, decoder with
+                   self + cross attention
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clipping
+from repro.models import attention as attn
+from repro.models import mamba2, moe
+from repro.models.attention import AttnStatics
+from repro.models.layers import gated_mlp, init_gated_mlp, rmsnorm, sinusoidal_positions, truncated_normal_init
+from repro.runtime.sharding import shard_activation
+
+
+def _statics(cfg) -> AttnStatics:
+    return AttnStatics(cfg.quant.softmax_impl, cfg.quant.bits, cfg.quant.use_fused_kernel)
+
+
+def default_qstate(cfg) -> dict[str, jnp.ndarray]:
+    """Per-site clip values from the default sigma (pre-calibration).
+
+    Calibration replaces these with per-layer values (core.calibration)."""
+    q = cfg.quant
+    if q.softmax_impl == "exact":
+        c = -1.0  # unused
+    elif q.softmax_impl == "naive":
+        # NAIVE default: C = min/2 with min ~ -4 sigma (calibration overwrites)
+        c = -2.0 * q.sigma_default
+    else:
+        c = clipping.get_clip_rule(q.clip_rule, q.bits)(q.sigma_default)
+    qs = {}
+    if cfg.family in ("dense", "vlm", "moe"):
+        qs["attn_clip"] = jnp.full((cfg.num_layers,), c, jnp.float32)
+    elif cfg.family == "hybrid":
+        qs["shared_clip"] = jnp.full((cfg.num_layers // cfg.hybrid_period,), c, jnp.float32)
+    elif cfg.family == "audio":
+        qs["enc_clip"] = jnp.full((cfg.enc_layers,), c, jnp.float32)
+        qs["attn_clip"] = jnp.full((cfg.num_layers,), c, jnp.float32)
+        qs["cross_clip"] = jnp.full((cfg.num_layers,), c, jnp.float32)
+    return qs
+
+
+def qstate_from_calibrator(cfg, calib) -> dict[str, jnp.ndarray]:
+    """Build per-layer clips from a core.calibration.Calibrator artifact."""
+    q = cfg.quant
+    qs = default_qstate(cfg)
+    for key, n in (("attn_clip", cfg.num_layers), ("enc_clip", cfg.enc_layers),
+                   ("cross_clip", cfg.num_layers if cfg.enc_dec else 0),
+                   ("shared_clip", cfg.num_layers // cfg.hybrid_period if cfg.hybrid_period else 0)):
+        if key not in qs:
+            continue
+        vals = []
+        for i in range(n):
+            site = f"{key[:-5]}/{i}"
+            if site in calib.stats:
+                if q.softmax_impl == "naive":
+                    vals.append(calib.naive_params(site, q.bits).clip)
+                else:
+                    vals.append(calib.exaq_params(site, q.bits, rule=q.clip_rule).clip)
+            else:
+                vals.append(float(qs[key][i]))
+        qs[key] = jnp.asarray(vals, jnp.float32)
+    return qs
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: object
+
+    # ----------------------------------------------------------- init
+    def init(self, key, dtype=jnp.float32) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        vp = cfg.padded_vocab
+        params: dict = {
+            "embed": {"tokens": truncated_normal_init(keys[0], (vp, cfg.d_model), 1.0, dtype)},
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+            "head": truncated_normal_init(keys[1], (cfg.d_model, vp), cfg.d_model**-0.5, dtype),
+        }
+        if cfg.frontend is not None:
+            params["frontend"] = {
+                "frontend_proj": truncated_normal_init(keys[2], (cfg.frontend_dim, cfg.d_model), cfg.frontend_dim**-0.5, dtype)
+            }
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            params["layers"] = self._init_decoder_stack(keys[3], cfg.num_layers, dtype)
+        elif fam == "ssm":
+            params["layers"] = self._init_ssm_stack(keys[3], cfg.num_layers, dtype)
+        elif fam == "hybrid":
+            n_groups = cfg.num_layers // cfg.hybrid_period
+            params["layers"] = jax.vmap(
+                lambda k: jax.vmap(lambda kk: self._init_ssm_layer(kk, dtype))(jax.random.split(k, cfg.hybrid_period))
+            )(jax.random.split(keys[3], n_groups))
+            params["shared"] = self._init_shared_block(keys[4], dtype)
+        elif fam == "audio":
+            params["enc_layers"] = jax.vmap(lambda k: self._init_enc_layer(k, dtype))(
+                jax.random.split(keys[3], cfg.enc_layers)
+            )
+            params["layers"] = jax.vmap(lambda k: self._init_dec_layer(k, dtype))(
+                jax.random.split(keys[4], cfg.num_layers)
+            )
+            params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+        else:
+            raise ValueError(fam)
+        return params
+
+    def _init_decoder_layer(self, key, dtype):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        p = {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.init_attention(k1, cfg, dtype=dtype),
+        }
+        if cfg.moe is not None:
+            p["moe"] = moe.init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = init_gated_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+        return p
+
+    def _init_decoder_stack(self, key, n, dtype):
+        return jax.vmap(lambda k: self._init_decoder_layer(k, dtype))(jax.random.split(key, n))
+
+    def _init_ssm_layer(self, key, dtype):
+        cfg = self.cfg
+        return {"ln1": jnp.ones((cfg.d_model,), dtype), "ssm": mamba2.init_mamba(key, cfg, dtype)}
+
+    def _init_ssm_stack(self, key, n, dtype):
+        return jax.vmap(lambda k: self._init_ssm_layer(k, dtype))(jax.random.split(key, n))
+
+    def _init_shared_block(self, key, dtype):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.ones((2 * cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.init_attention(k1, cfg, d_in=2 * cfg.d_model, dtype=dtype),
+            "mlp": init_gated_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def _init_enc_layer(self, key, dtype):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.init_attention(k1, cfg, dtype=dtype),
+            "mlp": init_gated_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def _init_dec_layer(self, key, dtype):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "ln3": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.init_attention(k1, cfg, dtype=dtype),
+            "cross": attn.init_attention(k2, cfg, dtype=dtype),
+            "mlp": init_gated_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    # ------------------------------------------------------- embedding
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+        if cfg.frontend == "vlm":
+            ve = jnp.einsum(
+                "bte,ed->btd", batch["vision_embeds"].astype(h.dtype), params["frontend"]["frontend_proj"].astype(h.dtype)
+            )
+            ft = min(cfg.frontend_tokens, h.shape[1])
+            h = jnp.concatenate([ve[:, :ft], h[:, ft:]], axis=1)
+        return shard_activation(h, "btd")
+
+    def _mask_padded_vocab(self, logits):
+        cfg = self.cfg
+        if cfg.padded_vocab == cfg.vocab_size:
+            return logits
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        return jnp.where(iota < cfg.vocab_size, logits, jnp.asarray(-1e30, logits.dtype))
+
+    def _remat(self, fn):
+        if self.cfg.remat == "none":
+            return fn
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if self.cfg.remat == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        return jax.checkpoint(fn, policy=policy)
+
+    # ------------------------------------------------------ train fwd
+    def forward_train(self, params, batch, qstate=None) -> tuple[jnp.ndarray, dict]:
+        """-> (logits (B,S,V), aux dict)."""
+        cfg = self.cfg
+        qstate = qstate or default_qstate(cfg)
+        statics = _statics(cfg)
+        fam = cfg.family
+
+        if fam == "audio":
+            return self._forward_whisper_train(params, batch, qstate)
+
+        h = self._embed(params, batch)
+        aux = {}
+        if fam in ("dense", "vlm", "moe"):
+            def body(carry, xs):
+                h, aux_lb, aux_z = carry
+                lp, clip = xs
+                a = attn.attention_train(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip)
+                h = h + a
+                if cfg.moe is not None:
+                    f, moe_aux = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+                    aux_lb = aux_lb + moe_aux["moe_lb"]
+                    aux_z = aux_z + moe_aux["moe_z"]
+                else:
+                    f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+                h = shard_activation(h + f, "btd")
+                return (h, aux_lb, aux_z), None
+
+            (h, lb, z), _ = jax.lax.scan(
+                self._remat(body), (h, 0.0, 0.0), (params["layers"], qstate["attn_clip"])
+            )
+            if cfg.moe is not None:
+                aux = {"moe_lb": lb / cfg.num_layers, "moe_z": z / cfg.num_layers}
+        elif fam == "ssm":
+            def body(h, lp):
+                out, _ = mamba2.mamba_forward(lp["ssm"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, mode="train")
+                return shard_activation(h + out, "btd"), None
+
+            h, _ = jax.lax.scan(self._remat(body), h, params["layers"])
+        elif fam == "hybrid":
+            h0 = h
+
+            def group(carry, xs):
+                h = carry
+                gp, clip = xs
+
+                def inner(hh, lp):
+                    out, _ = mamba2.mamba_forward(lp["ssm"], rmsnorm(hh, lp["ln1"], cfg.norm_eps), cfg, mode="train")
+                    return hh + out, None
+
+                h, _ = jax.lax.scan(inner, h, gp)
+                h = self._shared_block_train(params["shared"], h, h0, clip, statics)
+                return shard_activation(h, "btd"), None
+
+            h, _ = jax.lax.scan(self._remat(group), h, (params["layers"], qstate["shared_clip"]))
+        else:
+            raise ValueError(fam)
+
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype))
+        logits = self._mask_padded_vocab(logits)
+        return shard_activation(logits, "logits"), aux
+
+    def _shared_block_train(self, sp, h, h0, clip, statics, block_q=512):
+        cfg = self.cfg
+        cat = jnp.concatenate([h, h0], axis=-1)
+        a = attn.attention_train(sp["attn"], rmsnorm(cat, sp["ln1"], cfg.norm_eps), cfg, statics, clip, block_q=block_q)
+        h = h + a
+        f = gated_mlp(sp["mlp"], rmsnorm(h, sp["ln2"], cfg.norm_eps))
+        return h + f
+
+    def _forward_whisper_train(self, params, batch, qstate):
+        cfg = self.cfg
+        statics = _statics(cfg)
+        enc = self._encode_audio(params, batch, qstate, statics)
+        # decoder
+        tok = batch["tokens"]
+        h = jnp.take(params["embed"]["tokens"], tok, axis=0)
+        h = h + sinusoidal_positions(h.shape[1], cfg.d_model)[None].astype(h.dtype)
+        h = shard_activation(h, "btd")
+
+        def body(h, xs):
+            lp, clip, cclip = xs
+            a = attn.attention_train(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip, causal=True)
+            h = h + a
+            kv = attn.init_cross_kv(lp["cross"], enc, cfg)
+            c = attn.cross_attention(lp["cross"], rmsnorm(h, lp["ln2"], cfg.norm_eps), kv, cfg, statics, cclip)
+            h = h + c
+            f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps))
+            return shard_activation(h + f, "btd"), None
+
+        h, _ = jax.lax.scan(self._remat(body), h, (params["layers"], qstate["attn_clip"], qstate["cross_clip"]))
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype))
+        logits = self._mask_padded_vocab(logits)
+        return shard_activation(logits, "logits"), {}
+
+    def _encode_audio(self, params, batch, qstate, statics):
+        cfg = self.cfg
+        x = batch["audio_embeds"]
+        h = jnp.einsum("bse,ed->bsd", x, params["frontend"]["frontend_proj"].astype(x.dtype))
+        h = h + sinusoidal_positions(h.shape[1], cfg.d_model)[None].astype(h.dtype)
+        h = shard_activation(h, "btd")
+
+        def body(h, xs):
+            lp, clip = xs
+            a = attn.attention_train(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip, causal=False)
+            h = h + a
+            f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return shard_activation(h + f, "btd"), None
+
+        h, _ = jax.lax.scan(self._remat(body), h, (params["enc_layers"], qstate["enc_clip"]))
+        return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+    # ----------------------------------------------------- calibration
+    def calibrate(self, params, batch, qstate=None) -> dict[str, jnp.ndarray]:
+        """One forward pass collecting per-layer softmax-input stats
+        (paper §5.1.1: sigma of the max-subtracted attention logits, plus the
+        min for the NAIVE baseline). dense/vlm/moe families; other families
+        fall back to defaults (noted in DESIGN.md)."""
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm", "moe"), cfg.family
+        qstate = qstate or default_qstate(cfg)
+        statics = AttnStatics("exact", cfg.quant.bits, False)
+        h = self._embed(params, batch)
+
+        def body(h, lp):
+            x = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            sigma, smin = attn.attention_score_stats(lp["attn"], x, cfg)
+            a = attn.attention_train(lp["attn"], x, cfg, statics, jnp.float32(-1.0))
+            h = h + a
+            if cfg.moe is not None:
+                f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+            else:
+                f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return h + f, (sigma, smin)
+
+        _, (sigmas, mins) = jax.lax.scan(body, h, params["layers"])
+        return {"attn_sigma": sigmas, "attn_min": mins}
+
+    def qstate_from_stats(self, stats: dict) -> dict[str, jnp.ndarray]:
+        """Per-layer clip values from calibration stats, honoring cfg.quant."""
+        cfg = self.cfg
+        q = cfg.quant
+        if q.softmax_impl == "naive":
+            clips = jnp.minimum(0.5 * stats["attn_min"], -1e-3)  # (min+max)/2, max=0
+        else:
+            slope, intercept = clipping.PAPER_CLIP_COEFFS.get(q.bits, (None, None)) if q.clip_rule == "paper" else (None, None)
+            if slope is None:
+                clips = jnp.asarray(
+                    [clipping.optimal_clip_analytic(float(s), q.bits) for s in jax.device_get(stats["attn_sigma"])],
+                    jnp.float32,
+                )
+            else:
+                clips = slope * stats["attn_sigma"] + intercept
+        return {"attn_clip": clips.astype(jnp.float32)}
+
+    # --------------------------------------------------------- serving
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> dict:
+        cfg = self.cfg
+        dh = cfg.resolved_head_dim
+        cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+        fam = cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            cache["k"] = jnp.zeros((cfg.num_layers, batch, cfg.num_kv_heads, max_seq, dh), dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+        elif fam == "ssm":
+            cache.update(self._ssm_cache(cfg.num_layers, batch, dtype))
+        elif fam == "hybrid":
+            n_groups = cfg.num_layers // cfg.hybrid_period
+            ssm = self._ssm_cache(cfg.num_layers, batch, dtype)
+            cache["conv"] = ssm["conv"].reshape((n_groups, cfg.hybrid_period) + ssm["conv"].shape[1:])
+            cache["ssm"] = ssm["ssm"].reshape((n_groups, cfg.hybrid_period) + ssm["ssm"].shape[1:])
+            cache["k"] = jnp.zeros((n_groups, batch, cfg.num_kv_heads, max_seq, dh), dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+        elif fam == "audio":
+            cache["k"] = jnp.zeros((cfg.num_layers, batch, cfg.num_kv_heads, max_seq, dh), dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+            cache["cross_k"] = jnp.zeros((cfg.num_layers, batch, cfg.num_kv_heads, cfg.enc_seq, dh), dtype)
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        return cache
+
+    def _ssm_cache(self, n_layers, batch, dtype):
+        cfg = self.cfg
+        return {
+            "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_width - 1, mamba2.conv_channels(cfg)), dtype),
+            "ssm": jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        }
+
+    def prefill(self, params, batch, cache, qstate=None):
+        """Process the full prompt; fill the cache. Returns (last_logits, cache)."""
+        cfg = self.cfg
+        qstate = qstate or default_qstate(cfg)
+        statics = _statics(cfg)
+        fam = cfg.family
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+
+        if fam in ("dense", "vlm", "moe"):
+            h = self._embed(params, batch)
+
+            def body(carry, xs):
+                h = carry
+                lp, clip = xs
+                a, (kh, vh) = attn.attention_prefill(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip)
+                h = h + a
+                if cfg.moe is not None:
+                    f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+                else:
+                    f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+                return shard_activation(h + f, "btd"), (kh, vh)
+
+            h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], qstate["attn_clip"]))
+            cache = dict(cache)
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], ks.astype(cache["k"].dtype), 0, axis=3
+            )
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vs.astype(cache["v"].dtype), 0, axis=3
+            )
+        elif fam == "ssm":
+            h = self._embed(params, batch)
+
+            def body(h, lp):
+                out, c = mamba2.mamba_forward(lp["ssm"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, mode="prefill")
+                return shard_activation(h + out, "btd"), c
+
+            h, cs = jax.lax.scan(body, h, params["layers"])
+            cache = dict(cache)
+            cache["conv"] = cs["conv"].astype(cache["conv"].dtype)
+            cache["ssm"] = cs["ssm"]
+        elif fam == "hybrid":
+            h = self._embed(params, batch)
+            h0 = h
+
+            def group(carry, xs):
+                h = carry
+                gp, clip = xs
+
+                def inner(hh, lp):
+                    out, c = mamba2.mamba_forward(lp["ssm"], rmsnorm(hh, lp["ln1"], cfg.norm_eps), cfg, mode="prefill")
+                    return hh + out, c
+
+                h, cs = jax.lax.scan(inner, h, gp)
+                cat = jnp.concatenate([h, h0], axis=-1)
+                a, (kh, vh) = attn.attention_prefill(
+                    params["shared"]["attn"], rmsnorm(cat, params["shared"]["ln1"], cfg.norm_eps), cfg, statics, clip
+                )
+                h = h + a
+                f = gated_mlp(params["shared"]["mlp"], rmsnorm(h, params["shared"]["ln2"], cfg.norm_eps))
+                return shard_activation(h + f, "btd"), (cs, kh, vh)
+
+            h, (cs, ks, vs) = jax.lax.scan(group, h, (params["layers"], qstate["shared_clip"]))
+            cache = dict(cache)
+            cache["conv"] = cs["conv"].astype(cache["conv"].dtype)
+            cache["ssm"] = cs["ssm"]
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], ks.astype(cache["k"].dtype), 0, axis=3)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vs.astype(cache["v"].dtype), 0, axis=3)
+        elif fam == "audio":
+            enc = self._encode_audio(params, batch, qstate, statics)
+            h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+            h = h + sinusoidal_positions(S, cfg.d_model)[None].astype(h.dtype)
+
+            def body(h, xs):
+                lp, clip, cclip = xs
+                a, (kh, vh) = attn.attention_prefill(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip)
+                h = h + a
+                ckv = attn.init_cross_kv(lp["cross"], enc, cfg)
+                c = attn.cross_attention(lp["cross"], rmsnorm(h, lp["ln2"], cfg.norm_eps), ckv, cfg, statics, cclip)
+                h = h + c
+                f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps))
+                return shard_activation(h + f, "btd"), (kh, vh, ckv[0], ckv[1])
+
+            h, (ks, vs, cks, cvs) = jax.lax.scan(
+                body, h, (params["layers"], qstate["attn_clip"], qstate["cross_clip"])
+            )
+            cache = dict(cache)
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], ks.astype(cache["k"].dtype), 0, axis=3)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vs.astype(cache["v"].dtype), 0, axis=3)
+            cache["cross_k"] = cks.astype(cache["cross_k"].dtype)
+            cache["cross_v"] = cvs.astype(cache["cross_v"].dtype)
+        else:
+            raise ValueError(fam)
+
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"].astype(h.dtype))
+        logits = self._mask_padded_vocab(logits)
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache, qstate=None):
+        """tokens: (B, 1) -> (logits (B, V), new cache)."""
+        cfg = self.cfg
+        qstate = qstate or default_qstate(cfg)
+        statics = _statics(cfg)
+        fam = cfg.family
+        pos = cache["pos"]
+        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+        new_cache = dict(cache)
+
+        if fam in ("dense", "vlm", "moe"):
+            def body(h, xs):
+                lp, clip, ck, cv = xs
+                a, nk, nv = attn.attention_decode(
+                    lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip, ck, cv, pos,
+                    sp=cfg.quant.sp_decode,
+                )
+                h = h + a
+                if cfg.moe is not None:
+                    f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+                else:
+                    f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+                return h + f, (nk, nv)
+
+            h, (nk, nv) = jax.lax.scan(body, h, (params["layers"], qstate["attn_clip"], cache["k"], cache["v"]))
+            new_cache["k"], new_cache["v"] = nk, nv
+        elif fam == "ssm":
+            def body(h, xs):
+                lp, cc, cs = xs
+                out, c = mamba2.mamba_forward(
+                    lp["ssm"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, mode="decode",
+                    cache={"conv": cc, "ssm": cs},
+                )
+                return h + out, (c["conv"], c["ssm"])
+
+            h, (ncc, ncs) = jax.lax.scan(body, h, (params["layers"], cache["conv"], cache["ssm"]))
+            new_cache["conv"], new_cache["ssm"] = ncc.astype(cache["conv"].dtype), ncs
+        elif fam == "hybrid":
+            h0 = h
+
+            def group(h, xs):
+                gp, clip, cc, cs, ck, cv = xs
+
+                def inner(hh, ys):
+                    lp, icc, ics = ys
+                    out, c = mamba2.mamba_forward(
+                        lp["ssm"], rmsnorm(hh, lp["ln1"], cfg.norm_eps), cfg, mode="decode",
+                        cache={"conv": icc, "ssm": ics},
+                    )
+                    return hh + out, (c["conv"], c["ssm"])
+
+                h, (ncc, ncs) = jax.lax.scan(inner, h, (gp, cc, cs))
+                cat = jnp.concatenate([h, h0], axis=-1)
+                a, nk, nv = attn.attention_decode(
+                    params["shared"]["attn"], rmsnorm(cat, params["shared"]["ln1"], cfg.norm_eps),
+                    cfg, statics, clip, ck, cv, pos,
+                )
+                h = h + a
+                f = gated_mlp(params["shared"]["mlp"], rmsnorm(h, params["shared"]["ln2"], cfg.norm_eps))
+                return h + f, (ncc, ncs, nk, nv)
+
+            h, (ncc, ncs, nk, nv) = jax.lax.scan(
+                group, h, (params["layers"], qstate["shared_clip"], cache["conv"], cache["ssm"], cache["k"], cache["v"])
+            )
+            new_cache.update(conv=ncc.astype(cache["conv"].dtype), ssm=ncs, k=nk, v=nv)
+        elif fam == "audio":
+            smax = cache["k"].shape[3]
+            pe = sinusoidal_positions(smax, cfg.d_model)
+            h = h + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None].astype(h.dtype)
+
+            def body(h, xs):
+                lp, clip, cclip, ck, cv, xk, xv = xs
+                a, nk, nv = attn.attention_decode(
+                    lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip, ck, cv, pos
+                )
+                h = h + a
+                c = attn.cross_attention(lp["cross"], rmsnorm(h, lp["ln2"], cfg.norm_eps), (xk, xv), cfg, statics, cclip)
+                h = h + c
+                f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln3"], cfg.norm_eps))
+                return h + f, (nk, nv)
+
+            h, (nk, nv) = jax.lax.scan(
+                body, h,
+                (params["layers"], qstate["attn_clip"], qstate["cross_clip"],
+                 cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+            )
+            new_cache["k"], new_cache["v"] = nk, nv
+        else:
+            raise ValueError(fam)
+
+        new_cache["pos"] = pos + 1
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"].astype(h.dtype))
+        logits = self._mask_padded_vocab(logits)
+        return logits, new_cache
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,85 @@
+"""Mixture-of-Experts FFN (GShard/Mixtral-style capacity routing).
+
+Token-choice top-k with per-group capacity; dispatch/combine are einsums (the
+SPMD-friendly formulation — XLA turns them into all-to-alls under expert
+parallelism, experts sharded over the 'model' axis). Supports DeepSeekMoE
+fine-grained experts with always-on shared experts.
+
+The router softmax stays exact (rank-sensitive top-k, negligible cost) —
+documented design choice in DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_gated_mlp, silu, truncated_normal_init
+from repro.runtime.sharding import shard_activation
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    fe = m.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": truncated_normal_init(ks[0], (d, m.num_experts), d**-0.5, jnp.float32),
+        "moe_wi": truncated_normal_init(ks[1], (m.num_experts, d, 2 * fe), d**-0.5, dtype),
+        "moe_wo": truncated_normal_init(ks[2], (m.num_experts, fe, d), fe**-0.5, dtype),
+    }
+    if m.num_shared:
+        p["shared"] = init_gated_mlp(ks[3], d, m.num_shared * fe, dtype)
+    return p
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (out, aux) with load-balance / z losses."""
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    gs = min(m.group_size, T)
+    assert T % gs == 0, f"tokens {T} not divisible by moe group {gs}"
+    G = T // gs
+    xg = x.reshape(G, gs, D)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # exact router softmax
+    gate_vals, idx = jax.lax.top_k(probs, m.top_k)  # (G, gs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # capacity per expert per group
+    cap = int(-(-gs * m.top_k * m.capacity_factor // m.num_experts))
+    cap = max(4, -(-cap // 4) * 4)
+    E = m.num_experts
+
+    assign = jax.nn.one_hot(idx, E, dtype=jnp.int32).sum(axis=2)            # (G, gs, E) in {0,1}
+    weights = (jax.nn.one_hot(idx, E, dtype=jnp.float32) * gate_vals[..., None]).sum(axis=2)
+    pos = jnp.cumsum(assign, axis=1) - assign                                # (G, gs, E) slot ids
+    keep = (pos < cap) & (assign > 0)
+    # dispatch: (G, gs, E, C) one-hot of the slot; combine carries the gate
+    dispatch = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    combine = dispatch * weights[..., None].astype(x.dtype)
+
+    expert_in = jnp.einsum("gtec,gtd->egcd", dispatch, xg)                   # (E, G, C, D)
+    expert_in = shard_activation(expert_in, "experts")
+    h = jnp.einsum("egcd,edf->egcf", expert_in, params["moe_wi"].astype(x.dtype))
+    gate, up = jnp.split(h, 2, axis=-1)
+    hh = silu(gate) * up
+    expert_out = jnp.einsum("egcf,efd->egcd", hh, params["moe_wo"].astype(x.dtype))
+    expert_out = shard_activation(expert_out, "experts")
+    out = jnp.einsum("gtec,egcd->gtd", combine, expert_out).reshape(B, S, D)
+
+    if m.num_shared:
+        from repro.models.layers import gated_mlp
+
+        out = out + gated_mlp(params["shared"], x)
+
+    # aux: switch load-balance + router z-loss
+    density = assign.astype(jnp.float32).mean(axis=1)                         # (G, E) fraction routed
+    router_prob = probs.mean(axis=1)                                          # (G, E)
+    lb = E * jnp.mean(jnp.sum(density * router_prob, axis=-1)) * m.top_k
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - keep.sum() / jnp.maximum(assign.sum(), 1)
+    aux = {"moe_lb": lb, "moe_z": z, "moe_dropped": dropped}
+    return out, aux

@@ -1,0 +1,66 @@
+"""AdamW with decoupled weight decay, global-norm clipping and fp32 master
+moments — self-contained (no optax dependency), pytree-generic."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, count):
+        return self.lr(count) if callable(self.lr) else jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads, state, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9)) if self.clip_norm else 1.0
+        count = state["count"] + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+
+        def upd(g, m, v, p):
+            g = g * scale
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * g * g
+            step = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + self.eps)
+            # decoupled weight decay on matrices only (dim >= 2)
+            if p.ndim >= 2 and self.weight_decay:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_state = {"m": m, "v": v, "count": count}
+        return updates, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,89 @@
+"""Serving runtime: prefill + decode step factories with sharded KV caches,
+greedy/temperature sampling, and the EXAQ seq-parallel decode combine.
+
+Cache sharding policy (runtime/sharding.py): batch over ('pod','data'),
+kv-heads over 'model' when divisible, else sequence over 'model' (SP decode —
+the softmax max/denominator combine across sequence shards is where EXAQ's
+integer-histogram composition pays off; see DESIGN.md §2)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import build_model, default_qstate
+from repro.runtime import sharding as shd
+
+
+def make_serve_fns(cfg, qstate=None):
+    model = build_model(cfg)
+    qstate = qstate if qstate is not None else default_qstate(cfg)
+
+    def prefill_step(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache, qstate)
+        return logits, cache
+
+    def decode_step(params, tokens, cache):
+        """tokens (B,1) -> (next_tokens (B,1), new_cache, logits)."""
+        logits, cache = model.decode_step(params, tokens, cache, qstate)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache, logits
+
+    return prefill_step, decode_step
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return build_model(cfg).init_cache(batch, max_seq, dtype)
+
+
+def cache_shardings(cfg, mesh, cache_struct):
+    """NamedShardings for the cache pytree."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    kv_spec = shd.cache_spec(cfg, mesh)
+    ssm_specs = shd.ssm_cache_specs(cfg, mesh) if cfg.ssm_state else {}
+    dp = shd.data_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "cross_k", "cross_v"):
+            s = kv_spec
+        elif name == "conv":
+            s = ssm_specs["conv"]
+        elif name == "ssm":
+            s = ssm_specs["ssm"]
+        else:
+            s = P(None, dp)
+        if nd != len(s):
+            s = P(*((None,) * (nd - len(s)) + tuple(s)))
+        return shd.validate_spec(s, leaf.shape, mesh)
+
+    def to_sh(path, leaf):
+        return NamedSharding(mesh, spec_for(path, leaf))
+
+    return jax.tree_util.tree_map_with_path(to_sh, cache_struct)
+
+
+def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None):
+    """Simple batched greedy generation driver (example/tests scale)."""
+    prefill, decode = make_serve_fns(cfg, qstate)
+    B, S = prompt_tokens.shape
+    if cache is None:
+        cache = init_cache(cfg, B, S + max_new)
+    batch = {"tokens": prompt_tokens}
+    if cfg.frontend == "vlm":
+        batch["vision_embeds"] = jnp.zeros((B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+    if cfg.family == "audio":
+        batch["audio_embeds"] = jnp.zeros((B, cfg.enc_seq, cfg.frontend_dim), jnp.float32)
+    logits, cache = prefill(params, batch, cache)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    outs = [tok]
+    for _ in range(max_new - 1):
+        tok, cache, _ = decode(params, tok, cache)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)

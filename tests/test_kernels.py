@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exaq_params
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 8), (3, 100), (8, 128), (17, 250), (2, 1024), (5, 2000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [2, 3])
+def test_softmax_kernel_sweep(rows, cols, dtype, bits):
+    p = exaq_params(1.5, bits)
+    x = jnp.asarray(RNG.normal(0, 1.5, (rows, cols)), dtype)
+    got = ops.exaq_softmax(x, p)
+    want = ref.exaq_softmax_ref(x, p)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("shape", [(2, 3, 64), (1, 1, 1, 300)])
+def test_softmax_kernel_leading_dims(shape):
+    p = exaq_params(1.0, 2)
+    x = jnp.asarray(RNG.normal(0, 1, shape), jnp.float32)
+    got = ops.exaq_softmax(x, p)
+    want = ref.exaq_softmax_ref(x, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_softmax_kernel_with_lens():
+    p = exaq_params(1.0, 2)
+    x = jnp.asarray(RNG.normal(0, 1, (6, 200)), jnp.float32)
+    lens = jnp.asarray([1, 10, 50, 200, 128, 77], jnp.int32)
+    got = ops.exaq_softmax(x, p, lens=lens)
+    want = ref.exaq_softmax_ref(x, p, lens=lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    # masked tail carries no weight
+    assert float(jnp.abs(got[0, 1:]).max()) == 0.0
+
+
+def test_softmax_rowsum_one():
+    p = exaq_params(2.0, 2)
+    x = jnp.asarray(RNG.normal(0, 2, (16, 384)), jnp.float32)
+    y = ops.exaq_softmax(x, p)
+    np.testing.assert_allclose(np.asarray(y.sum(-1)), 1.0, rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d", [(1, 2, 1, 64, 32), (2, 4, 2, 96, 64), (1, 8, 8, 128, 80)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel_vs_oracle(b, h, hkv, s, d, dtype):
+    p = exaq_params(1.0, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)), dtype)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, s, d)), dtype)
+    scale = d**-0.5
+    got = ops.exaq_attention(q, k, v, p, scale, block_q=32, block_kv=32)
+    g = h // hkv
+    kr, vr = jnp.repeat(k, g, axis=1), jnp.repeat(v, g, axis=1)
+    want = ref.flash_exaq_attention_ref(q, kr, vr, p, scale, block_kv=32)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol)
+
+
+def test_flash_attention_close_to_exact():
+    """Statistical: EXAQ attention output stays near exact attention."""
+    p = exaq_params(1.0, 3)
+    b, h, s, d = 2, 4, 128, 64
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, h, s, d)), jnp.float32)
+    got = ops.exaq_attention(q, k, v, p, d**-0.5, block_q=64, block_kv=64)
+    exact = ref.mha_ref(q, k, v, d**-0.5)
+    assert float(jnp.abs(got - exact).mean()) < 0.08
+
+
+@pytest.mark.parametrize("b,h,hkv,sc,d", [(2, 4, 2, 128, 64), (1, 8, 2, 256, 32)])
+def test_decode_kernel_full_cache_matches_flash_ref(b, h, hkv, sc, d):
+    """With the cache full, decode == non-causal flash over the same blocks."""
+    p = exaq_params(1.0, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, 1, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, sc, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, sc, d)), jnp.float32)
+    lens = jnp.full((b,), sc, jnp.int32)
+    got = ops.decode_attention(q, k, v, lens, p, d**-0.5, block_kv=64)
+    g = h // hkv
+    kr, vr = jnp.repeat(k, g, axis=1), jnp.repeat(v, g, axis=1)
+    want = ref.flash_exaq_attention_ref(q, kr, vr, p, d**-0.5, causal=False, block_kv=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_decode_kernel_partial_lens_close_to_global_grid():
+    p = exaq_params(1.0, 2)
+    b, h, hkv, sc, d = 2, 4, 2, 256, 64
+    q = jnp.asarray(RNG.normal(0, 1, (b, h, 1, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, sc, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, sc, d)), jnp.float32)
+    lens = jnp.asarray([100, 256], jnp.int32)
+    got = ops.decode_attention(q, k, v, lens, p, d**-0.5, block_kv=64)
+    want = ops.decode_attention(q, k, v, lens, p, d**-0.5, use_kernel=False)
+    # online vs global grid: loose statistical agreement (DESIGN.md §2)
+    assert float(jnp.abs(got - want).mean()) < 0.1
+
+
+def test_chunked_softmax_long_rows():
+    """Rows beyond MAX_FUSED_COLS take the two-pass path."""
+    p = exaq_params(1.0, 2)
+    x = jnp.asarray(RNG.normal(0, 1, (2, ops.MAX_FUSED_COLS + 256)), jnp.float32)
+    y = ops.exaq_softmax(x, p)
+    want = ref.exaq_softmax_ref(x, p)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-6)
