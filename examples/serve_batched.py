@@ -1,15 +1,32 @@
-"""Batched serving example: prefill + greedy decode with EXAQ INT2 softmax,
-compared against exact-softmax serving.
+"""Continuous-batching serving example: ragged concurrent requests through the
+slot-based engine, EXAQ INT2 softmax vs exact, mixed per-request sampling.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
-import subprocess
-import sys
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-for impl in ("exact", "exaq"):
-    print(f"--- impl={impl} ---")
-    subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", "yi-6b", "--reduced",
-         "--batch", "4", "--prompt-len", "64", "--gen", "16", "--impl", impl],
-        check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-    )
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.engine import Engine
+from repro.runtime.sampling import GREEDY, SamplingParams
+
+ARCH, SLOTS, MAX_SEQ, GEN = "yi-6b", 4, 96, 16
+
+rng = np.random.default_rng(0)
+base = get_config(ARCH).reduced()
+params = build_model(base.with_quant(softmax_impl="exact")).init(jax.random.PRNGKey(0), jnp.bfloat16)
+# one shared ragged workload: 6 requests, 3 sampling styles, 4 slots
+prompts = [rng.integers(0, base.vocab_size, int(n)) for n in rng.integers(8, 48, 6)]
+styles = [GREEDY, SamplingParams(temperature=0.7, top_k=40), SamplingParams(temperature=1.0, top_p=0.9)]
+
+for impl, bits in (("exact", 2), ("exaq", 2)):
+    cfg = base.with_quant(softmax_impl=impl, bits=bits)
+    eng = Engine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ, seed=0)
+    uids = [eng.submit(p, GEN, styles[i % len(styles)]) for i, p in enumerate(prompts)]
+    results = eng.run()
+    print(f"--- impl={impl} int{bits}: {len(results)} requests, "
+          f"mean occupancy {eng.mean_occupancy:.2f}/{SLOTS} ---")
+    for uid in uids[:3]:
+        print(f"  req {uid} ({len(prompts[uid])}-tok prompt):", results[uid].tokens[:10])

@@ -51,29 +51,78 @@ def exaq_softmax_chunked(
 ) -> jnp.ndarray:
     """Two-pass EXAQ softmax for very long rows (e.g. 512k decode scores).
 
-    Pass 1: global row max. Pass 2: per-chunk quantize + LUT + histogram
-    partials; partial *integer counts* compose exactly across chunks because
-    the quantization grid is anchored at the global max — the same property the
-    distributed seq-parallel combine exploits (counts all-reduce).
+    Pass 1 scans ``chunk``-sized slices for the global row max. Pass 2
+    re-scans, quantizing each slice on the grid anchored at that max and
+    accumulating the 2^M *integer* histogram partials — counts compose exactly
+    across chunks because the grid is global, the same property the
+    distributed seq-parallel combine exploits (counts all-reduce). The
+    savings vs the one-shot path is in the *intermediates*: no fp32
+    LUT-select tensor or int32 code tensor is ever materialized row-wide —
+    each scan step touches one chunk and the row-wide residue is the narrow
+    integer codes (int8 up to 7-bit quantizers), which the final LUT + divide
+    replays chunk-by-chunk. (The fp32 input itself stays live as the scan
+    operand; XLA may alias it, but don't budget on that.)
     """
     xf = x.astype(jnp.float32)
-    n = xf.shape[-1]
-    if lens is not None:
-        col = jnp.arange(n, dtype=jnp.int32)
-        valid = col < lens[..., None]
-        xf = jnp.where(valid, xf, -1e30)
-    m = jnp.max(xf, axis=-1, keepdims=True)
-    xs = xf - m
-    inv_delta = params.levels / (-params.clip)
-    codes = jnp.clip(jnp.floor((xs - params.clip) * inv_delta), 0, params.levels - 1).astype(jnp.int32)
-    lutv = params.lut_np()
-    e = jnp.full(xs.shape, float(lutv[0]), jnp.float32)
-    for k in range(1, params.levels):
-        e = jnp.where(codes == k, float(lutv[k]), e)
-    if lens is not None:
-        e = jnp.where(valid, e, 0.0)
-    denom = jnp.sum(e, axis=-1, keepdims=True)
-    return e / jnp.maximum(denom, 1e-30)
+    orig_shape = xf.shape
+    n = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    xf = xf.reshape(rows, n)
+    eff = (lens.reshape(rows).astype(jnp.int32) if lens is not None
+           else jnp.full((rows,), n, jnp.int32))
+    nc = -(-n // chunk)
+    if nc * chunk != n:
+        xf = jnp.pad(xf, ((0, 0), (0, nc * chunk - n)))
+    # chunk axis leads so lax.scan slices one (rows, chunk) tile per step
+    xc = jnp.moveaxis(xf.reshape(rows, nc, chunk), 1, 0)
+    cols = jnp.arange(chunk, dtype=jnp.int32)
+    levels = params.levels
+    inv_delta = levels / (-params.clip)
+    lutv = tuple(float(v) for v in params.lut_np())
+    # int8 halves the stored-codes footprint but only holds codes <= 127
+    code_dtype = jnp.int8 if levels <= 128 else jnp.int32
+
+    def chunk_valid(j):
+        return (j * chunk + cols)[None, :] < eff[:, None]  # (rows, chunk)
+
+    # ---- pass 1: global row max over chunks
+    def max_body(m, xs):
+        sl, j = xs
+        m_j = jnp.max(jnp.where(chunk_valid(j), sl, -1e30), axis=-1)
+        return jnp.maximum(m, m_j), None
+
+    m, _ = jax.lax.scan(max_body, jnp.full((rows,), -1e30, jnp.float32),
+                        (xc, jnp.arange(nc)))
+    m = m[:, None]
+
+    # ---- pass 2: per-chunk quantize + histogram partials (int accumulators)
+    def quant_body(counts, xs):
+        sl, j = xs
+        valid = chunk_valid(j)
+        codes = jnp.clip(
+            jnp.floor((sl - m - params.clip) * inv_delta), 0, levels - 1
+        ).astype(code_dtype)
+        onehot = (codes[..., None] == jnp.arange(levels, dtype=code_dtype)) & valid[..., None]
+        counts = counts + jnp.sum(onehot, axis=1, dtype=jnp.int32)  # (rows, levels)
+        return counts, codes
+
+    counts, codes = jax.lax.scan(
+        quant_body, jnp.zeros((rows, levels), jnp.int32), (xc, jnp.arange(nc))
+    )
+    denom = counts.astype(jnp.float32) @ jnp.asarray(lutv, jnp.float32)  # (rows,)
+    denom = jnp.maximum(denom, 1e-30)[:, None]
+
+    # ---- emit: LUT + normalize, replayed from the stored int8 codes
+    def emit_body(_, xs):
+        cj, j = xs
+        e = jnp.where(chunk_valid(j), ref._lut_select(cj, lutv), 0.0)
+        return None, e / denom
+
+    _, out = jax.lax.scan(emit_body, None, (codes, jnp.arange(nc)))
+    out = jnp.moveaxis(out, 0, 1).reshape(rows, nc * chunk)[:, :n]
+    return out.reshape(orig_shape).astype(x.dtype)
 
 
 def exaq_attention(
@@ -118,11 +167,8 @@ def decode_attention(
         m = jnp.max(s, axis=-1, keepdims=True)
         inv_delta = params.levels / (-params.clip)
         codes = jnp.clip(jnp.floor((s - m - params.clip) * inv_delta), 0, params.levels - 1)
-        lutv = params.lut_np()
-        e = jnp.full(s.shape, float(lutv[0]), jnp.float32)
-        for kk in range(1, params.levels):
-            e = jnp.where(codes == kk, float(lutv[kk]), e)
-        e = jnp.where(valid, e, 0.0)
+        lutv = tuple(float(v) for v in params.lut_np())
+        e = jnp.where(valid, ref._lut_select(codes, lutv), 0.0)
         p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
         return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
     return exaq_decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, interpret=on_cpu())

@@ -1,7 +1,13 @@
-"""Serving driver: batched prefill + greedy decode with EXAQ softmax.
+"""Serving driver: continuous-batching engine with EXAQ softmax.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
-        --batch 4 --prompt-len 64 --gen 32 --impl exaq --bits 2
+        --requests 8 --slots 4 --prompt-len 64 --gen 32 --impl exaq --bits 2 \
+        --temperature 0.8 --top-k 40
+
+Attention token decoders (dense/moe) run through ``runtime.engine`` — ragged
+prompt lengths, slot refill, per-request sampling, one jitted decode step for
+all active slots. Other families fall back to the rectangular greedy loop in
+``runtime.serve.generate``.
 """
 
 from __future__ import annotations
@@ -16,18 +22,25 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.runtime import serve as serve_rt
+from repro.runtime.sampling import SamplingParams
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--impl", default="exaq", choices=["exact", "exaq", "naive"])
     ap.add_argument("--bits", type=int, default=2)
     ap.add_argument("--clip-rule", default="paper", choices=["paper", "analytic"])
+    ap.add_argument("--temperature", type=float, default=0.0, help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--eos-id", type=int, default=-1, help="-1 disables EOS stopping")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -36,41 +49,49 @@ def main():
     cfg = cfg.with_quant(softmax_impl=args.impl, bits=args.bits, clip_rule=args.clip_rule)
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0), jnp.bfloat16)
-    rng = np.random.default_rng(0)
-    B, S = args.batch, args.prompt_len
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
-    batch = {"tokens": prompts}
-    if cfg.frontend == "vlm":
-        batch["vision_embeds"] = jnp.asarray(rng.normal(0, 1, (B, cfg.frontend_tokens, cfg.frontend_dim)), jnp.float32)
-    if cfg.family == "audio":
-        batch["audio_embeds"] = jnp.asarray(rng.normal(0, 1, (B, cfg.enc_seq, cfg.frontend_dim)), jnp.float32)
+    rng = np.random.default_rng(args.seed)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k, top_p=args.top_p)
+    eos = None if args.eos_id < 0 else args.eos_id
 
-    prefill, decode = serve_rt.make_serve_fns(cfg)
-    cache = serve_rt.init_cache(cfg, B, S + args.gen)
-    jp = jax.jit(prefill)
-    jd = jax.jit(decode)
+    print(f"arch={cfg.name} impl={args.impl} int{args.bits} "
+          f"sampling=(T={sp.temperature}, k={sp.top_k}, p={sp.top_p})")
 
-    t0 = time.time()
-    logits, cache = jp(params, batch, cache)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    outs = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        tok, cache, _ = jd(params, tok, cache)
-        outs.append(tok)
-    jax.block_until_ready(outs[-1])
-    t_decode = time.time() - t0
-    gen = jnp.concatenate(outs, axis=1)
-    print(f"arch={cfg.name} impl={args.impl} int{args.bits}")
-    print(f"prefill: {B}x{S} tokens in {t_prefill*1e3:.1f} ms "
-          f"({B*S/t_prefill:.0f} tok/s, includes compile)")
-    print(f"decode:  {B}x{args.gen-1} tokens in {t_decode*1e3:.1f} ms "
-          f"({B*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s)")
-    print("sample generations (token ids):")
-    for b in range(min(B, 2)):
-        print(" ", np.asarray(gen[b])[:16].tolist())
+    if cfg.family in ("dense", "moe"):
+        from repro.runtime.engine import Engine
+
+        # ragged prompts: uniform in [prompt_len/2, prompt_len]
+        lens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1, args.requests)
+        eng = Engine(cfg, params, max_slots=args.slots,
+                     max_seq=args.prompt_len + args.gen, eos_id=eos, seed=args.seed)
+        t0 = time.time()
+        uids = [eng.submit(rng.integers(0, cfg.vocab_size, int(n)), args.gen, sp) for n in lens]
+        results = eng.run()
+        wall = time.time() - t0
+        n_out = sum(len(g.tokens) for g in results.values())
+        print(f"engine: {args.requests} requests (prompts {lens.min()}-{lens.max()} tok) "
+              f"through {args.slots} slots")
+        print(f"decoded {n_out} tokens in {wall*1e3:.1f} ms "
+              f"({n_out/max(wall, 1e-9):.0f} tok/s incl. compile); "
+              f"mean slot occupancy {eng.mean_occupancy:.2f}/{args.slots}")
+        for uid in uids[: min(2, len(uids))]:
+            print(f"  req {uid} [{results[uid].finish_reason}]:",
+                  results[uid].tokens[:16])
+    else:
+        if sp != SamplingParams() or eos is not None:
+            raise SystemExit(
+                f"--temperature/--top-k/--top-p/--eos-id are engine-only; "
+                f"family {cfg.family!r} uses the greedy rectangular loop"
+            )
+        B, S = args.slots, args.prompt_len
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+        t0 = time.time()
+        gen = serve_rt.generate(params, cfg, prompts, args.gen)
+        jax.block_until_ready(gen)
+        wall = time.time() - t0
+        print(f"rectangular loop ({cfg.family}): {B}x{args.gen} tokens in "
+              f"{wall*1e3:.1f} ms ({B*args.gen/max(wall,1e-9):.0f} tok/s incl. compile)")
+        for b in range(min(B, 2)):
+            print(" ", np.asarray(gen[b])[:16].tolist())
 
 
 if __name__ == "__main__":

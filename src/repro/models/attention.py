@@ -340,6 +340,51 @@ def attention_decode(params, x, cfg, statics: AttnStatics, clip, cache_k, cache_
     return out, new_k, new_v
 
 
+def attention_decode_ragged(params, x, cfg, statics: AttnStatics, clip, cache_k, cache_v, lens):
+    """Slot-batched one-token decode over a *ragged* KV cache (serving engine).
+
+    Unlike ``attention_decode`` (one scalar ``pos`` for the whole batch), every
+    slot carries its own live length: the new token is RoPE-rotated at
+    ``lens[b]``, written at cache index ``lens[b]``, and attends to the
+    ``lens[b]+1`` live positions of its slot — so requests of different lengths
+    share one jitted step and one attention dispatch.
+
+    x: (S, 1, D); cache_{k,v}: (S, KV, Smax, Dh); lens: (S,) int32.
+    Returns (out (S, 1, D), new_k, new_v).
+    """
+    B = x.shape[0]
+    positions = lens.astype(jnp.int32)[:, None]  # (S, 1) per-slot rope position
+    q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
+    kn = jnp.swapaxes(k, 1, 2)  # (S, KV, 1, Dh)
+    vn = jnp.swapaxes(v, 1, 2)
+    Smax = cache_k.shape[2]
+    upd = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(c, u, p, axis=1))
+    new_k = upd(cache_k, kn.astype(cache_k.dtype), positions[:, 0])
+    new_v = upd(cache_v, vn.astype(cache_v.dtype), positions[:, 0])
+    qh = jnp.swapaxes(q, 1, 2)  # (S, H, 1, Dh)
+    kv_lens = lens.astype(jnp.int32) + 1
+    dh = cfg.resolved_head_dim
+    if statics.use_fused_kernel and statics.impl == "exaq":
+        # single Pallas dispatch over all slots (static clip from default sigma,
+        # like the fused prefill path — traced per-layer clips stay on jnp)
+        from repro.core.quantizer import exaq_params
+        from repro.kernels import ops
+
+        p = exaq_params(cfg.quant.sigma_default, statics.bits, rule=cfg.quant.clip_rule)
+        o = ops.decode_attention(qh, new_k, new_v, kv_lens, p, dh**-0.5)
+    else:
+        group = cfg.num_heads // cfg.num_kv_heads
+        kk = _repeat_kv(new_k, group)
+        vv = _repeat_kv(new_v, group)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kk).astype(jnp.float32) * dh**-0.5
+        valid = jnp.arange(Smax, dtype=jnp.int32)[None, None, None, :] < kv_lens[:, None, None, None]
+        w = _weights(s, statics, clip, valid)
+        o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
+    o = jnp.swapaxes(o, 1, 2).reshape(B, 1, -1).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", o, params["wo"].astype(x.dtype))
+    return out, new_k, new_v
+
+
 def sp_decode_attention(qh, k_new, v_new, cache_k, cache_v, pos, cfg, statics: AttnStatics, clip):
     """Sequence-parallel decode attention (beyond-paper, EXAQ-native).
 

@@ -400,8 +400,13 @@ class Model:
             "ssm": jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
         }
 
-    def prefill(self, params, batch, cache, qstate=None):
-        """Process the full prompt; fill the cache. Returns (last_logits, cache)."""
+    def prefill(self, params, batch, cache, qstate=None, lens=None):
+        """Process the full prompt; fill the cache. Returns (last_logits, cache).
+
+        lens: optional (B,) true prompt lengths for right-padded batches —
+        logits are gathered at ``lens - 1`` per row instead of the last
+        position (causal masking keeps the padded tail from affecting live
+        positions; the serving engine masks it out of decode via kv_lens)."""
         cfg = self.cfg
         qstate = qstate or default_qstate(cfg)
         statics = _statics(cfg)
@@ -497,9 +502,51 @@ class Model:
 
         cache["pos"] = jnp.asarray(S, jnp.int32)
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
-        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"].astype(h.dtype))
+        if lens is None:
+            h_last = h[:, -1]
+        else:
+            idx = jnp.clip(lens.astype(jnp.int32) - 1, 0, S - 1)
+            h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+        logits = jnp.einsum("bd,dv->bv", h_last, params["head"].astype(h.dtype))
         logits = self._mask_padded_vocab(logits)
         return logits, cache
+
+    def decode_step_ragged(self, params, tokens, cache, lens, qstate=None):
+        """Slot-batched decode over a ragged KV cache (continuous batching).
+
+        tokens: (S, 1) one next-token per slot; cache k/v: (L, S, KV, Smax, Dh);
+        lens: (S,) live cache length per slot (the new token is written at
+        index lens[b] and attends to lens[b]+1 positions). Returns
+        (logits (S, V), new_cache). Attention families only — SSM/hybrid/audio
+        caches have no ragged sequence axis to batch over.
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm", "moe"), (
+            f"ragged decode requires an attention KV cache, got family={cfg.family!r}"
+        )
+        qstate = qstate or default_qstate(cfg)
+        statics = _statics(cfg)
+        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+        new_cache = dict(cache)
+
+        def body(h, xs):
+            lp, clip, ck, cv = xs
+            a, nk, nv = attn.attention_decode_ragged(
+                lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip, ck, cv, lens
+            )
+            h = h + a
+            if cfg.moe is not None:
+                f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+            else:
+                f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return h + f, (nk, nv)
+
+        h, (nk, nv) = jax.lax.scan(body, h, (params["layers"], qstate["attn_clip"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = nk, nv
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"].astype(h.dtype))
+        logits = self._mask_padded_vocab(logits)
+        return logits, new_cache
 
     def decode_step(self, params, tokens, cache, qstate=None):
         """tokens: (B, 1) -> (logits (B, V), new cache)."""

@@ -1,0 +1,365 @@
+"""Continuous-batching decode engine over a slot-based ragged KV cache.
+
+The serving problem EXAQ targets (paper §4: attention-heavy decode) is only
+won at the *runtime* level: many concurrent requests of different lengths
+must share one jitted step, or the kernel savings drown in per-request
+dispatch and padding waste (cf. QUIK/SoftmAP — low-bit inference pays off
+when the surrounding runtime is batched and fused). This engine provides:
+
+  * Slot cache   — fixed (L, max_slots, KV, max_seq, Dh) K/V buffers plus a
+                   per-slot ``kv_lens`` vector. Shapes never change, so the
+                   decode step compiles exactly once; raggedness lives in the
+                   lengths, and ``attention_decode_ragged`` masks/writes per
+                   slot (DESIGN.md §Serving).
+  * Scheduler    — requests queue up host-side; free slots are filled by a
+                   bucketed single-request prefill (padded to a power-of-two
+                   length; the true length picks the logits row), finished
+                   slots (EOS / token budget / max_seq) are evicted and
+                   immediately refilled.
+  * Decode chunk — ``steps_per_sync`` decode steps run inside one jitted
+                   ``lax.scan``; every step batches ALL active slots through
+                   one ragged attention dispatch per layer and one batched
+                   sampling dispatch (greedy / temperature / top-k / top-p
+                   with per-slot params — runtime/sampling.py).
+
+Families: dense / moe (token-only attention decoders). SSM/hybrid/audio
+caches have no ragged sequence axis to slot-batch; vlm decode would work
+(its KV cache is regular) but the engine's prefill builds token-only
+batches — admitting vlm needs per-request ``vision_embeds`` plumbing first.
+``runtime.serve.generate`` keeps the rectangular loop for all of these.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_model, default_qstate
+from repro.runtime import sampling as smp
+from repro.runtime import sharding as shd
+
+
+@dataclass(frozen=True)
+class Request:
+    uid: int
+    prompt: tuple[int, ...]
+    max_new: int
+    sampling: smp.SamplingParams = smp.GREEDY
+
+
+@dataclass
+class Generation:
+    """Finished request: generated ids (EOS included when hit) + why it ended."""
+
+    uid: int
+    tokens: list[int]
+    finish_reason: str  # "eos" | "length"
+
+
+@dataclass
+class _Slot:
+    uid: int = -1
+    generated: list[int] = field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.uid < 0
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class Engine:
+    """Continuous-batching serving engine for one model + qstate.
+
+    Typical use::
+
+        eng = Engine(cfg, params, max_slots=8, max_seq=512, eos_id=2)
+        eng.submit([1, 5, 7], max_new=32)
+        eng.submit([9, 9], max_new=16, sampling=SamplingParams(temperature=0.8))
+        results = eng.run()          # {uid: Generation}
+
+    or incrementally (arrival-driven traces): ``submit`` whenever requests
+    arrive, ``step_chunk()`` to advance ``steps_per_sync`` decode steps.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        max_slots: int,
+        max_seq: int,
+        qstate=None,
+        eos_id: int | None = None,
+        steps_per_sync: int = 8,
+        cache_dtype=jnp.bfloat16,
+        seed: int = 0,
+        mesh=None,
+    ):
+        if cfg.family not in ("dense", "moe") or cfg.frontend is not None:
+            raise ValueError(
+                f"Engine supports token-only attention decoders (dense/moe), got "
+                f"family={cfg.family!r} frontend={cfg.frontend!r} (frontend models need "
+                "per-request embeds at prefill; ssm/hybrid/audio caches aren't slot-ragged)"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.model = build_model(cfg)
+        self.qstate = qstate if qstate is not None else default_qstate(cfg)
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.steps_per_sync = steps_per_sync
+        self.cache_dtype = cache_dtype
+        self._key = jax.random.PRNGKey(seed)
+
+        cache = self.model.init_cache(max_slots, max_seq, cache_dtype)
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            spec = shd.slot_cache_spec(cfg, mesh)
+            cache["k"] = jax.device_put(cache["k"], NamedSharding(mesh, spec))
+            cache["v"] = jax.device_put(cache["v"], NamedSharding(mesh, spec))
+        self._cache_k, self._cache_v = cache["k"], cache["v"]
+
+        # host-side slot state (small; shipped to device each chunk)
+        self._slots = [_Slot() for _ in range(max_slots)]
+        self.kv_lens = np.zeros((max_slots,), np.int32)
+        self._active = np.zeros((max_slots,), bool)
+        self._budget = np.zeros((max_slots,), np.int32)
+        self._tokens = np.zeros((max_slots, 1), np.int32)
+        self._temperature = np.zeros((max_slots,), np.float32)
+        self._top_k = np.zeros((max_slots,), np.int32)
+        self._top_p = np.ones((max_slots,), np.float32)
+
+        self._queue: deque[Request] = deque()
+        self._results: dict[int, Generation] = {}
+        self._next_uid = 0
+
+        # telemetry for bench_serving
+        self.stats = {"decode_steps": 0, "tokens_out": 0, "occupancy_sum": 0.0,
+                      "max_active": 0, "prefills": 0, "decode_time": 0.0}
+
+        # donate the K/V buffers on the hot paths: the engine rebinds them from
+        # the outputs immediately, so XLA may update the cache in place instead
+        # of copying the full (L, slots, KV, max_seq, Dh) arrays per chunk /
+        # admission (CPU ignores donation; TPU/GPU halve peak cache memory)
+        self._jit_prefill = jax.jit(self._prefill_fn)
+        self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0, 1))
+        self._jit_sample = jax.jit(smp.sample_tokens)
+        self._jit_chunk = jax.jit(self._chunk_fn, static_argnames=("steps", "sampler"),
+                                  donate_argnums=(1, 2))
+
+    # ------------------------------------------------------------ jitted fns
+
+    def _prefill_fn(self, params, tokens, length):
+        """tokens (1, P) right-padded; length (1,) true prompt length."""
+        cache = self.model.init_cache(1, tokens.shape[1], self.cache_dtype)
+        logits, cache = self.model.prefill(
+            params, {"tokens": tokens}, cache, self.qstate, lens=length
+        )
+        return logits, cache["k"], cache["v"]
+
+    def _insert_fn(self, big_k, big_v, ks, vs, slot):
+        """Write a (L, 1, KV, P, Dh) prefill cache into slot ``slot``."""
+        start = (0, slot, 0, 0, 0)
+        return (
+            jax.lax.dynamic_update_slice(big_k, ks.astype(big_k.dtype), start),
+            jax.lax.dynamic_update_slice(big_v, vs.astype(big_v.dtype), start),
+        )
+
+    def _chunk_fn(self, params, k, v, tokens, lens, active, budget, temperature,
+                  top_k, top_p, key, *, steps, sampler):
+        """``steps`` decode iterations under one jit: per step, one ragged
+        attention dispatch over all slots + one batched sampling dispatch.
+        EOS/budget/max_seq transitions update the active mask *inside* the
+        scan, so a slot that finishes mid-chunk stops consuming budget and
+        its later emissions are masked. ``sampler`` (static, known host-side
+        from the active slots' params) picks the cheapest variant: "greedy"
+        is pure argmax, "temperature" is sort-free Gumbel-max, "full" is the
+        general top-k/top-p sampler."""
+        eos = -1 if self.eos_id is None else self.eos_id
+
+        def step(carry, _):
+            k, v, tokens, lens, active, budget, key = carry
+            logits, cache = self.model.decode_step_ragged(
+                params, tokens, {"k": k, "v": v}, lens, self.qstate
+            )
+            key, sub = jax.random.split(key)
+            if sampler == "greedy":
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            elif sampler == "temperature":
+                nxt = smp.sample_temperature(logits, temperature, sub)
+            else:
+                nxt = smp.sample_tokens(logits, temperature, top_k, top_p, sub)
+            emit_mask = active
+            new_lens = jnp.where(active, lens + 1, lens)
+            new_budget = jnp.where(active, budget - 1, budget)
+            finished = (nxt == eos) | (new_budget <= 0) | (new_lens >= self.max_seq)
+            new_active = active & ~finished
+            new_tokens = jnp.where(active, nxt, tokens[:, 0])[:, None]
+            emitted = jnp.where(emit_mask, nxt, -1)
+            return (cache["k"], cache["v"], new_tokens, new_lens, new_active, new_budget, key), (
+                emitted,
+                emit_mask,
+            )
+
+        init = (k, v, tokens, lens, active, budget, key)
+        (k, v, tokens, lens, active, budget, key), (emitted, masks) = jax.lax.scan(
+            step, init, None, length=steps
+        )
+        return k, v, tokens, lens, active, budget, key, emitted, masks
+
+    # ------------------------------------------------------------- scheduling
+
+    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY) -> int:
+        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_seq:
+            raise ValueError(f"prompt length {len(prompt)} >= max_seq {self.max_seq}")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(Request(uid, prompt, max_new, sampling))
+        return uid
+
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def num_queued(self) -> int:
+        return len(self._queue)
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or self.num_active > 0
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s.free]
+
+    def _admit(self) -> int:
+        """Prefill queued requests into free slots; returns #admitted."""
+        admitted = 0
+        free = self._free_slots()
+        while free and self._queue:
+            req = self._queue.popleft()
+            slot = free.pop(0)
+            P = min(_bucket(len(req.prompt)), self.max_seq)
+            padded = np.zeros((1, P), np.int32)
+            padded[0, : len(req.prompt)] = req.prompt
+            logits, ks, vs = self._jit_prefill(
+                self.params, jnp.asarray(padded), jnp.asarray([len(req.prompt)], jnp.int32)
+            )
+            self._cache_k, self._cache_v = self._jit_insert(
+                self._cache_k, self._cache_v, ks, vs, slot
+            )
+            self.stats["prefills"] += 1
+            self._key, sub = jax.random.split(self._key)
+            sp = req.sampling
+            first = int(
+                self._jit_sample(
+                    logits,
+                    jnp.asarray([sp.temperature], jnp.float32),
+                    jnp.asarray([sp.top_k], jnp.int32),
+                    jnp.asarray([sp.top_p], jnp.float32),
+                    sub,
+                )[0]
+            )
+            self.stats["tokens_out"] += 1
+            s = self._slots[slot]
+            s.uid, s.generated = req.uid, [first]
+            self.kv_lens[slot] = len(req.prompt)
+            self._tokens[slot, 0] = first
+            self._temperature[slot] = sp.temperature
+            self._top_k[slot] = sp.top_k
+            self._top_p[slot] = sp.top_p
+            self._budget[slot] = req.max_new - 1
+            hit_eos = self.eos_id is not None and first == self.eos_id
+            if hit_eos or req.max_new == 1:
+                self._finish(slot, "eos" if hit_eos else "length")
+            else:
+                self._active[slot] = True
+            admitted += 1
+        return admitted
+
+    def _finish(self, slot: int, reason: str):
+        s = self._slots[slot]
+        self._results[s.uid] = Generation(s.uid, list(s.generated), reason)
+        self._slots[slot] = _Slot()
+        self._active[slot] = False
+
+    def step_chunk(self, steps: int | None = None) -> int:
+        """Admit + run one jitted decode chunk; returns #tokens emitted."""
+        self._admit()
+        if self.num_active == 0:
+            return 0
+        # clamp to the largest remaining budget among active slots: a tail
+        # chunk never runs whole-model decode steps nobody can consume (at
+        # most steps_per_sync distinct scan lengths ever compile)
+        max_budget = int(self._budget[self._active].max())
+        steps = min(steps or self.steps_per_sync, max(max_budget, 1))
+        t0 = time.perf_counter()
+        act = self._active
+        if (self._temperature[act] <= 0.0).all():
+            sampler = "greedy"
+        elif (self._top_k[act] == 0).all() and (self._top_p[act] >= 1.0).all():
+            sampler = "temperature"
+        else:
+            sampler = "full"
+        out = self._jit_chunk(
+            self.params, self._cache_k, self._cache_v,
+            jnp.asarray(self._tokens), jnp.asarray(self.kv_lens),
+            jnp.asarray(self._active), jnp.asarray(self._budget),
+            jnp.asarray(self._temperature), jnp.asarray(self._top_k),
+            jnp.asarray(self._top_p), self._key, steps=steps, sampler=sampler,
+        )
+        k, v, tokens, lens, active, budget, self._key, emitted, masks = out
+        jax.block_until_ready(emitted)
+        self.stats["decode_time"] += time.perf_counter() - t0
+        self._cache_k, self._cache_v = k, v
+        was_active = self._active
+        self._tokens = np.array(tokens)
+        self.kv_lens = np.array(lens)
+        self._active = np.array(active)
+        self._budget = np.array(budget)
+        emitted = np.asarray(emitted)  # (steps, S)
+        masks = np.asarray(masks)
+        n_out = 0
+        for t in range(emitted.shape[0]):
+            self.stats["decode_steps"] += 1
+            self.stats["occupancy_sum"] += float(masks[t].sum())
+            self.stats["max_active"] = max(self.stats["max_active"], int(masks[t].sum()))
+            for slot in np.nonzero(masks[t])[0]:
+                self._slots[slot].generated.append(int(emitted[t, slot]))
+                n_out += 1
+        self.stats["tokens_out"] += n_out
+        for slot in range(self.max_slots):
+            if was_active[slot] and not self._active[slot]:
+                last = self._slots[slot].generated[-1]
+                hit_eos = self.eos_id is not None and last == self.eos_id
+                self._finish(slot, "eos" if hit_eos else "length")
+        return n_out
+
+    def run(self) -> dict[int, Generation]:
+        """Drain the queue and all active slots; returns {uid: Generation}."""
+        while self.has_work():
+            self.step_chunk()
+        out, self._results = self._results, {}
+        return out
+
+    @property
+    def mean_occupancy(self) -> float:
+        steps = max(self.stats["decode_steps"], 1)
+        return self.stats["occupancy_sum"] / steps

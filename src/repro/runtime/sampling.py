@@ -1,0 +1,102 @@
+"""Per-request token sampling for the serving engine.
+
+One jitted ``sample_tokens`` call handles a whole slot batch with *per-row*
+sampling parameters (temperature / top-k / top-p packed as arrays), so
+heterogeneous requests share a single dispatch — the sampling analogue of the
+ragged decode-attention step. Greedy is temperature == 0 (exact argmax, no
+RNG consumed), which keeps exact-vs-EXAQ greedy parity checks deterministic.
+
+Filtering order follows the common serving convention: temperature scale ->
+top-k rank cut -> top-p nucleus cut (on the renormalized top-k distribution)
+-> Gumbel-max draw over the surviving tokens.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_NEG_BIG = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration.
+
+    temperature: 0 => greedy (argmax); > 0 => softmax temperature.
+    top_k: keep only the k highest-probability tokens (0 => disabled).
+    top_p: nucleus sampling — keep the smallest prefix of the sorted
+           distribution with cumulative probability >= top_p (1.0 => disabled).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+GREEDY = SamplingParams()
+
+
+def sample_temperature(
+    logits: jnp.ndarray,
+    temperature: jnp.ndarray,
+    key: jax.Array,
+) -> jnp.ndarray:
+    """Temperature-only sampling: Gumbel-max over scaled logits, no sort.
+
+    The filterless fast path for batches where no row uses top-k/top-p —
+    O(B·V) instead of the full-vocab sort + cumsum of ``sample_tokens``.
+    Rows with temperature == 0 still take the exact argmax.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = temperature <= 0.0
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    gumbel = jax.random.gumbel(key, logits.shape, jnp.float32)
+    sampled = jnp.argmax(logits / t + gumbel, axis=-1)
+    return jnp.where(greedy, jnp.argmax(logits, axis=-1), sampled).astype(jnp.int32)
+
+
+def sample_tokens(
+    logits: jnp.ndarray,
+    temperature: jnp.ndarray,
+    top_k: jnp.ndarray,
+    top_p: jnp.ndarray,
+    key: jax.Array,
+) -> jnp.ndarray:
+    """Sample one token per row. logits: (B, V); params: (B,) each -> (B,) int32.
+
+    Rows with temperature == 0 take the exact argmax (ties break to the lowest
+    index, matching ``jnp.argmax``); other rows draw via Gumbel-max over the
+    top-k/top-p-filtered, temperature-scaled distribution.
+    """
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    greedy = temperature <= 0.0
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+
+    # Sort once (descending); all filters become rank/cumsum predicates.
+    sorted_logits, sorted_idx = jax.lax.top_k(logits, V)
+    scaled = sorted_logits / t
+    ranks = jnp.arange(V, dtype=jnp.int32)[None, :]
+    k_eff = jnp.where(top_k > 0, top_k, V)[:, None]
+    keep = ranks < k_eff
+    probs = jax.nn.softmax(jnp.where(keep, scaled, _NEG_BIG), axis=-1)
+    # nucleus: keep tokens whose *preceding* cumulative mass is < top_p, so the
+    # boundary token is included and rank 0 always survives
+    cum_before = jnp.cumsum(probs, axis=-1) - probs
+    keep = keep & (cum_before < top_p[:, None])
+    masked = jnp.where(keep, scaled, _NEG_BIG)
+    gumbel = jax.random.gumbel(key, (B, V), jnp.float32)
+    choice = jnp.argmax(masked + gumbel, axis=-1)
+    sampled = jnp.take_along_axis(sorted_idx, choice[:, None], axis=1)[:, 0]
+    return jnp.where(greedy, jnp.argmax(logits, axis=-1), sampled).astype(jnp.int32)

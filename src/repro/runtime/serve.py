@@ -1,5 +1,7 @@
-"""Serving runtime: prefill + decode step factories with sharded KV caches,
-greedy/temperature sampling, and the EXAQ seq-parallel decode combine.
+"""Serving runtime: prefill + decode step factories with sharded KV caches
+and the EXAQ seq-parallel decode combine. ``generate`` is a thin wrapper over
+the continuous-batching engine (``runtime.engine``) for attention token
+decoders, falling back to the rectangular loop for cache-stateful families.
 
 Cache sharding policy (runtime/sharding.py): batch over ('pod','data'),
 kv-heads over 'model' when divisible, else sequence over 'model' (SP decode —
@@ -12,6 +14,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import build_model, default_qstate
 from repro.runtime import sharding as shd
@@ -69,10 +72,53 @@ def cache_shardings(cfg, mesh, cache_struct):
     return jax.tree_util.tree_map_with_path(to_sh, cache_struct)
 
 
-def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None):
-    """Simple batched greedy generation driver (example/tests scale)."""
-    prefill, decode = make_serve_fns(cfg, qstate)
+def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
+             sampling=None, eos_id=None, seed: int = 0):
+    """Batched generation driver (example/tests scale).
+
+    Attention token decoders (dense/moe) route through the continuous-batching
+    engine (``runtime.engine``): each prompt row becomes a request, all rows
+    decode through one jitted ragged step, and ``sampling`` (a
+    ``sampling.SamplingParams`` or a per-row list of them) selects greedy /
+    temperature / top-k / top-p per request. Other families keep the
+    rectangular greedy loop — ssm/hybrid/audio caches have no ragged
+    sequence axis for slots to share, and vlm needs per-request
+    vision_embeds plumbing the engine's prefill doesn't have yet.
+
+    Returns (B, <= max_new) int32; rows are right-padded with ``eos_id`` (or 0)
+    when EOS ends a row early, so the legacy rectangular contract holds.
+    The fallback loop is greedy-only: passing ``sampling`` or ``eos_id`` for a
+    family it can't honor raises rather than silently ignoring them.
+    """
     B, S = prompt_tokens.shape
+    if cfg.family in ("dense", "moe") and cfg.frontend is None and cache is None:
+        from repro.runtime.engine import Engine
+        from repro.runtime.sampling import GREEDY, SamplingParams
+
+        if sampling is None:
+            sampling = GREEDY
+        per_row = list(sampling) if isinstance(sampling, (list, tuple)) else [sampling] * B
+        if len(per_row) != B:
+            raise ValueError(f"sampling list has {len(per_row)} entries for batch of {B}")
+        if not all(isinstance(p, SamplingParams) for p in per_row):
+            raise ValueError("sampling entries must be SamplingParams")
+        eng = Engine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
+                     eos_id=eos_id, seed=seed)
+        uids = [eng.submit(np.asarray(prompt_tokens[b]), max_new, per_row[b]) for b in range(B)]
+        results = eng.run()
+        pad = eos_id if eos_id is not None else 0
+        out = np.full((B, max_new), pad, np.int32)
+        for b, uid in enumerate(uids):
+            toks = results[uid].tokens
+            out[b, : len(toks)] = toks
+        return jnp.asarray(out)
+
+    if sampling is not None or eos_id is not None:
+        raise ValueError(
+            f"sampling/eos_id require the engine path (dense/moe, no explicit cache); "
+            f"the rectangular loop for family={cfg.family!r} is greedy-only"
+        )
+    prefill, decode = make_serve_fns(cfg, qstate)
     if cache is None:
         cache = init_cache(cfg, B, S + max_new)
     batch = {"tokens": prompt_tokens}

@@ -179,6 +179,22 @@ def cache_spec(cfg, mesh: Mesh) -> P:
     return P(None, dp, None, "model", None)
 
 
+def slot_cache_spec(cfg, mesh: Mesh) -> P:
+    """Serving-engine slot cache (L, max_slots, KV, max_seq, Dh).
+
+    The slot axis takes the batch position: requests land in slots, so DP
+    shards *slots* over ('pod', 'data') — each data shard runs its own slice
+    of the continuous batch. Within a shard the same TP policy as the
+    rectangular cache applies: kv-heads over 'model' when divisible, else
+    sequence over 'model' (SP decode; the EXAQ histogram combine composes the
+    softmax across sequence shards — DESIGN.md §2/§Serving)."""
+    tp = model_axis_size(mesh)
+    dp = data_axes(mesh)
+    if cfg.num_kv_heads and _div(cfg.num_kv_heads, tp):
+        return P(None, dp, "model", None, None)
+    return P(None, dp, None, "model", None)
+
+
 def ssm_cache_specs(cfg, mesh: Mesh) -> dict[str, P]:
     dp = data_axes(mesh)
     tp = model_axis_size(mesh)

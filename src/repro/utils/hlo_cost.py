@@ -37,6 +37,18 @@ _FREE_OPS = {
 }
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Compat shim over ``Compiled.cost_analysis()``.
+
+    JAX <= 0.4.x returns a list with one per-device dict; newer releases
+    return the dict directly. Always returns a (possibly empty) dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _type_bytes(type_str: str) -> float:
     total = 0.0
     for dt, dims in _SHAPE_RE.findall(type_str):
@@ -319,9 +331,15 @@ def analyze(text: str, n_devices: int) -> CostSummary:
                 mb = re.search(r"body=%?([\w.\-]+)", ins.line)
                 if mb:
                     cs.add(cost_of(mb.group(1), True, stk).scaled(trips))
-            elif ins.op in ("fusion", "call", "conditional") or (
-                ins.op not in ("while",) and _called_comps(ins)
-            ):
+            elif ins.op == "call":
+                # a call body executes at the caller's level: its instructions
+                # materialize to HBM exactly as if inlined (XLA:CPU wraps
+                # parallelized elementwise ops in %parallel_* calls), so bytes
+                # count — unlike fusion internals, which stay in VMEM/registers
+                for cn in _called_comps(ins):
+                    if cn in comps:
+                        cs.add(cost_of(cn, top_level, stk))
+            elif ins.op in ("fusion", "conditional") or _called_comps(ins):
                 for cn in _called_comps(ins):
                     if cn in comps:
                         sub = cost_of(cn, False, stk)
@@ -406,6 +424,9 @@ def per_bytes_sites(text: str, top: int = 14) -> list[tuple[str, float, float]]:
                 mb = re.search(r"body=%?([\w.\-]+)", ins.line)
                 if mb:
                     walk(mb.group(1), mult * trips, stk)
+            elif ins.op == "call":  # call bodies materialize (see analyze())
+                for cn in _called_comps(ins):
+                    walk(cn, mult, stk)
 
     if entry:
         walk(entry, 1.0, frozenset())

@@ -113,3 +113,25 @@ def test_chunked_softmax_long_rows():
     y = ops.exaq_softmax(x, p)
     want = ref.exaq_softmax_ref(x, p)
     np.testing.assert_allclose(np.asarray(y), np.asarray(want), atol=1e-6)
+
+
+@pytest.mark.parametrize("n,chunk", [(200, 64), (256, 64), (63, 64), (130, 32)])
+def test_chunked_softmax_matches_ref_at_n_gt_chunk(n, chunk):
+    """The chunked scan (global max pass + per-chunk quantize/histogram
+    partials) is exact vs the one-shot reference for any n/chunk ratio."""
+    p = exaq_params(1.2, 2)
+    x = jnp.asarray(RNG.normal(0, 1.2, (5, n)), jnp.float32)
+    got = ops.exaq_softmax_chunked(x, p, chunk=chunk)
+    want = ref.exaq_softmax_ref(x, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_chunked_softmax_ragged_lens_and_leading_dims():
+    p = exaq_params(1.0, 3)
+    x = jnp.asarray(RNG.normal(0, 1, (2, 3, 150)), jnp.float32)
+    lens = jnp.asarray([[1, 40, 150], [97, 64, 5]], jnp.int32)
+    got = ops.exaq_softmax_chunked(x, p, lens=lens, chunk=32)
+    want = ref.exaq_softmax_ref(x, p, lens=lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+    # masked tail carries no weight
+    assert float(jnp.abs(got[0, 0, 1:]).max()) == 0.0
