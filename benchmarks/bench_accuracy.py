@@ -1,7 +1,7 @@
 """Paper Table 2 (accuracy, EXAQ vs NAIVE) — offline-reproducible proxy.
 
-LLaMA checkpoints / lm-eval-harness are unavailable offline (DESIGN.md §5.2),
-so the claim is reproduced at reachable scale, preserving the protocol:
+LLaMA checkpoints / lm-eval-harness are unavailable offline, so the claim
+is reproduced at reachable scale, preserving the protocol:
 
   1. Train a small LM in-repo (exact softmax — PTQ setting).
   2. Calibrate per-layer sigma/min on a held-out calibration set

@@ -1,8 +1,10 @@
-"""Continuous-batching serving benchmark: Poisson arrivals, exact vs EXAQ.
+"""Continuous-batching serving benchmark: Poisson arrivals, exact vs EXAQ,
+slot engine vs paged engine with shared-prefix reuse.
 
-    PYTHONPATH=src python benchmarks/bench_serving.py [--requests 12] [--slots 4]
+    PYTHONPATH=src python benchmarks/bench_serving.py [--requests 12] [--slots 4] \
+        [--json out.json]
 
-Drives ``runtime.engine.Engine`` with a Poisson request-arrival trace
+Part 1 drives ``runtime.engine.Engine`` with a Poisson request-arrival trace
 (exponential inter-arrival times measured in decode steps — the engine is
 step-clocked, so the trace is backend-independent and reproducible) and
 reports, for exact / EXAQ-2bit / EXAQ-3bit softmax:
@@ -11,17 +13,30 @@ reports, for exact / EXAQ-2bit / EXAQ-3bit softmax:
   * mean + max slot occupancy (how full the continuous batch ran)
   * greedy-token agreement vs the exact-softmax engine on the same trace
 
+Part 2 replays a *shared-system-prompt* Poisson trace (every request opens
+with the same system prefix, as a production endpoint would) through the slot
+engine and ``runtime.engine.PagedEngine`` and reports the paged headline
+metrics (DESIGN.md §3):
+
+  * prefix-cache hit rate on prompt tokens (asserted >= 50%)
+  * tokens of live KV per byte of cache, paged pool vs rectangular slot cache
+  * copy-on-write copies / evictions / prefill chunks
+  * bit-exact greedy parity with the slot engine on the same trace (asserted)
+
 The smoke model is a 2-layer reduced config briefly overfit on a periodic
 token sequence: a random-init model has near-tied logits (argmax margins
 below any quantizer's noise floor, so agreement would measure tie-breaking,
 not EXAQ), while the trained head has the confident margins of a real LM —
 there the paper's serving claim (INT2 softmax preserves greedy outputs) is
 checkable and asserted. Runs on CPU (kernels auto-select interpret/jnp).
+
+``--json`` dumps every reported metric for CI artifact upload.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +45,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.optim.adamw import AdamW
-from repro.runtime.engine import Engine
+from repro.runtime.engine import Engine, PagedEngine
 from repro.runtime.train import init_train_state, make_train_step
 
 PERIOD, TOK0 = 7, 5  # the learned pattern: TOK0, TOK0+1, ..., cyclic
@@ -63,9 +78,13 @@ def make_trace(rng, n_requests: int, rate: float, lo: int, hi: int):
     return list(zip(arrivals.tolist(), lens.tolist()))
 
 
-def run_trace(cfg, params, qstate, trace, prompts, *, slots, max_seq, gen, chunk):
-    eng = Engine(cfg, params, qstate=qstate, max_slots=slots, max_seq=max_seq,
-                 steps_per_sync=chunk, seed=0)
+def run_trace(cfg, params, qstate, trace, prompts, *, slots, max_seq, gen, chunk,
+              paged=False, block_size=8, prefill_chunk=16):
+    kw = dict(qstate=qstate, max_slots=slots, max_seq=max_seq, steps_per_sync=chunk, seed=0)
+    if paged:
+        eng = PagedEngine(cfg, params, block_size=block_size, prefill_chunk=prefill_chunk, **kw)
+    else:
+        eng = Engine(cfg, params, **kw)
     pending = list(range(len(trace)))
     uid_of = {}
     step_clock = 0  # monotone: advances by decode steps executed, or idle-skips
@@ -84,39 +103,28 @@ def run_trace(cfg, params, qstate, trace, prompts, *, slots, max_seq, gen, chunk
     return eng, {i: results[uid_of[i]].tokens for i in range(len(trace))}
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="yi-6b")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--rate", type=float, default=0.5, help="arrivals per decode step")
-    ap.add_argument("--chunk", type=int, default=4, help="decode steps per jitted chunk")
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    rng = np.random.default_rng(args.seed)
-    base, params, loss = make_smoke_model(args.arch)
+def calibrate_smoke(base, params, hi: int = 24):
+    """EXAQ clip calibration from observed sigma (paper §5.1.1) — both the
+    slot-engine and paged-engine parity claims are about the *calibrated*
+    quantizer, so every exaq engine below shares this qstate source."""
     m_exact = build_model(base.with_quant(softmax_impl="exact"))
+    pattern = np.arange(hi + PERIOD) % PERIOD + TOK0
+    calib_batch = {"tokens": jnp.asarray(np.stack([pattern[:hi], pattern[1 : hi + 1]]), jnp.int32)}
+    return m_exact.calibrate(params, calib_batch)
 
+
+def bench_impl_agreement(base, params, calib_stats, args, rng, report):
+    """Part 1: exact vs EXAQ greedy agreement on the slot engine."""
     lo, hi = 8, 24
     trace = make_trace(rng, args.requests, args.rate, lo, hi)
     pattern = np.arange(hi + PERIOD) % PERIOD + TOK0
     prompts = [np.roll(pattern, -int(rng.integers(0, PERIOD)))[:n] for _, n in trace]
     max_seq = hi + args.gen
 
-    # calibrate the EXAQ clip from observed sigma (paper §5.1.1) — the serving
-    # parity claim is about the *calibrated* quantizer
-    calib_batch = {"tokens": jnp.asarray(np.stack([pattern[:hi], pattern[1 : hi + 1]]), jnp.int32)}
-    stats = m_exact.calibrate(params, calib_batch)
-
     outputs = {}
-    print(f"arch={base.name} (2-layer smoke, train loss {loss:.4f}) "
-          f"requests={args.requests} slots={args.slots} gen={args.gen} "
-          f"Poisson rate={args.rate}/step")
     for label, impl, bits in (("exact", "exact", 2), ("exaq-int2", "exaq", 2), ("exaq-int3", "exaq", 3)):
         cfg = base.with_quant(softmax_impl=impl, bits=bits)
-        qstate = build_model(cfg).qstate_from_stats(stats) if impl == "exaq" else None
+        qstate = build_model(cfg).qstate_from_stats(calib_stats) if impl == "exaq" else None
         eng, outs = run_trace(cfg, params, qstate, trace, prompts,
                               slots=args.slots, max_seq=max_seq, gen=args.gen, chunk=args.chunk)
         outputs[label] = outs
@@ -128,15 +136,117 @@ def main():
               f"occupancy mean {eng.mean_occupancy:.2f} / max {eng.stats['max_active']} "
               f"of {args.slots} slots")
         assert eng.stats["max_active"] >= 2, "trace never reached 2 concurrent requests"
+        report["impls"][label] = {"tokens": toks, "tok_per_s": tps,
+                                  "mean_occupancy": eng.mean_occupancy,
+                                  "max_active": eng.stats["max_active"]}
 
     for label in ("exaq-int2", "exaq-int3"):
         a = np.concatenate([np.asarray(outputs["exact"][i]) for i in range(args.requests)])
         b = np.concatenate([np.asarray(outputs[label][i]) for i in range(args.requests)])
         agree = float((a == b).mean())
         print(f"greedy agreement vs exact: {label} {100*agree:.1f}%")
+        report["impls"][label]["agreement_vs_exact"] = agree
         if label == "exaq-int2":
             assert agree == 1.0, f"EXAQ-2bit greedy tokens diverged from exact ({agree:.3f})"
-    print("OK: >=2 concurrent ragged requests per jitted step; EXAQ-2bit greedy == exact")
+
+
+def bench_paged(base, params, calib_stats, args, rng, report):
+    """Part 2: shared-system-prompt trace, slot engine vs paged engine.
+
+    Every request's prompt is a prefix of the same periodic sequence —
+    ``sys_len`` shared system tokens plus a ragged user tail — exactly the
+    workload the prefix cache targets (and still in-distribution for the
+    overfit smoke head, keeping greedy margins confident)."""
+    sys_len, tail_lo, tail_hi = args.shared_prefix, 1, 8
+    trace = make_trace(rng, args.requests, args.paged_rate, tail_lo, tail_hi)
+    pattern = np.arange(sys_len + tail_hi + PERIOD) % PERIOD + TOK0
+    prompts = [pattern[: sys_len + n] for _, n in trace]
+    max_seq = sys_len + tail_hi + args.gen
+
+    for impl, bits in (("exact", 2), ("exaq", 2)):
+        cfg = base.with_quant(softmax_impl=impl, bits=bits)
+        qstate = build_model(cfg).qstate_from_stats(calib_stats) if impl == "exaq" else None
+        slot_eng, slot_out = run_trace(cfg, params, qstate, trace, prompts,
+                                       slots=args.slots, max_seq=max_seq, gen=args.gen,
+                                       chunk=args.chunk)
+        paged_eng, paged_out = run_trace(cfg, params, qstate, trace, prompts,
+                                         slots=args.slots, max_seq=max_seq, gen=args.gen,
+                                         chunk=args.chunk, paged=True,
+                                         block_size=args.block_size,
+                                         prefill_chunk=args.prefill_chunk)
+        parity = all(slot_out[i] == paged_out[i] for i in range(len(trace)))
+        hit = paged_eng.prefix_hit_rate
+        st = paged_eng.stats
+        pst = paged_eng.pool.stats
+        # tokens of KV a byte of cache buys: the paged pool only holds blocks,
+        # the slot cache holds max_slots * max_seq rows no matter what
+        slot_bytes = slot_eng._cache_k.nbytes + slot_eng._cache_v.nbytes
+        used_blocks = paged_eng.pool.num_blocks - 1 - paged_eng.pool.num_free
+        paged_used_bytes = (paged_eng.kv_pool_bytes // paged_eng.pool.num_blocks) * max(used_blocks, 1)
+        tok_per_kib_slot = st["prompt_tokens"] / (slot_bytes / 1024)
+        tok_per_kib_paged = st["prompt_tokens"] / (paged_used_bytes / 1024)
+        label = f"paged-{impl}{'' if impl == 'exact' else f'-int{bits}'}"
+        print(f"{label:16s} prefix-cache hit rate {100*hit:.1f}% "
+              f"({st['prefix_hit_tokens']}/{st['prompt_tokens']} prompt tokens), "
+              f"{st['prefill_chunks']} prefill chunks of {args.prefill_chunk}, "
+              f"{pst.cow_copies} CoW, {pst.evictions} evictions")
+        print(f"{'':16s} KV density: {tok_per_kib_paged:.1f} tok/KiB paged (blocks touched) "
+              f"vs {tok_per_kib_slot:.1f} tok/KiB slot cache; "
+              f"greedy parity vs slot engine: {parity}")
+        assert parity, f"paged engine diverged from slot engine ({impl})"
+        assert hit >= 0.5, f"prefix-cache hit rate {hit:.2f} < 0.5 on the shared-prefix trace"
+        report["paged"][impl] = {
+            "prefix_hit_rate": hit,
+            "prompt_tokens": st["prompt_tokens"],
+            "prefix_hit_tokens": st["prefix_hit_tokens"],
+            "prefill_chunks": st["prefill_chunks"],
+            "cow_copies": pst.cow_copies,
+            "evictions": pst.evictions,
+            "tok_per_kib_paged": tok_per_kib_paged,
+            "tok_per_kib_slot": tok_per_kib_slot,
+            "greedy_parity_vs_slot": parity,
+        }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=0.5, help="arrivals per decode step")
+    ap.add_argument("--chunk", type=int, default=4, help="decode steps per jitted chunk")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shared-prefix", type=int, default=48,
+                    help="system-prompt tokens shared by every request (paged part)")
+    ap.add_argument("--paged-rate", type=float, default=0.25,
+                    help="arrivals per decode step for the shared-prefix trace")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--json", default=None, help="write all metrics to this path")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(args.seed)
+    base, params, loss = make_smoke_model(args.arch)
+    report = {"arch": base.name, "train_loss": loss, "requests": args.requests,
+              "slots": args.slots, "gen": args.gen, "impls": {}, "paged": {}}
+
+    print(f"arch={base.name} (2-layer smoke, train loss {loss:.4f}) "
+          f"requests={args.requests} slots={args.slots} gen={args.gen} "
+          f"Poisson rate={args.rate}/step")
+    calib_stats = calibrate_smoke(base, params)
+    bench_impl_agreement(base, params, calib_stats, args, rng, report)
+
+    print(f"--- shared-prefix trace: {args.shared_prefix} system tokens, "
+          f"rate={args.paged_rate}/step, block_size={args.block_size} ---")
+    bench_paged(base, params, calib_stats, args, rng, report)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote metrics to {args.json}")
+    print("OK: >=2 concurrent ragged requests per jitted step; EXAQ-2bit greedy == exact; "
+          ">=50% prefix-cache hits with slot-engine parity on the paged engine")
 
 
 if __name__ == "__main__":

@@ -179,3 +179,53 @@ def _repeat_kv(q, k, v):
     if group == 1:
         return k, v
     return jnp.repeat(k, group, axis=1), jnp.repeat(v, group, axis=1)
+
+
+def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.ndarray):
+    """Assemble per-slot contiguous KV from a paged block pool (DESIGN.md §3).
+
+    pool_{k,v}: (N, KV, bs, Dh) global block pool; block_tables: (S, MB) int32
+    block ids per slot -> (S, KV, MB*bs, Dh) laid out in block-table order, so
+    flat position ``p`` of slot ``s`` is block ``block_tables[s, p // bs]``
+    offset ``p % bs`` — the invariant every paged caller masks against via
+    ``kv_lens``. Table padding (the null block, id 0) gathers garbage that the
+    length mask excludes.
+
+    The gather materializes each slot's window once per layer — the same
+    transient the slot engine's per-slot cache view costs; a future Pallas
+    paged-decode kernel would stream blocks through VMEM instead.
+    """
+
+    def g(pool):
+        b = pool[block_tables]  # (S, MB, KV, bs, Dh)
+        b = jnp.swapaxes(b, 1, 2)  # (S, KV, MB, bs, Dh)
+        S, KV, MB, bs, Dh = b.shape
+        return b.reshape(S, KV, MB * bs, Dh)
+
+    return g(pool_k), g(pool_v)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    kv_lens: jnp.ndarray,
+    params: QuantParams,
+    scale: float,
+    *,
+    block_kv: int = 512,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Decode attention over a block-paged KV cache with EXAQ softmax.
+
+    Gather via the block table, then the existing EXAQ histogram dispatch:
+    the quantization grid is anchored at the global row max, so per-block
+    partial counts add exactly and paging composes with the DESIGN.md §2
+    combine — block boundaries are invisible to the softmax.
+
+    q: (S, H, 1, Dh); pool_{k,v}: (N, KV, bs, Dh); block_tables: (S, MB);
+    kv_lens: (S,) live positions per slot -> (S, H, 1, Dh).
+    """
+    k, v = gather_block_kv(pool_k, pool_v, block_tables)
+    return decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, use_kernel=use_kernel)

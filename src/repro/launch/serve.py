@@ -6,7 +6,12 @@
 
 Attention token decoders (dense/moe) run through ``runtime.engine`` — ragged
 prompt lengths, slot refill, per-request sampling, one jitted decode step for
-all active slots. Other families fall back to the rectangular greedy loop in
+all active slots. ``--paged`` swaps in the block-paged engine (DESIGN.md §3):
+a global KV block pool with shared-prefix reuse and chunked prefill
+(``--block-size`` / ``--prefill-chunk`` / ``--num-blocks`` tune it); with
+``--shared-prefix N`` every request opens with the same N-token system
+prompt, so the printed prefix-cache hit rate shows the reuse win. Other
+families fall back to the rectangular greedy loop in
 ``runtime.serve.generate``.
 """
 
@@ -41,6 +46,15 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--eos-id", type=int, default=-1, help="-1 disables EOS stopping")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache with shared-prefix reuse (DESIGN.md §3)")
+    ap.add_argument("--block-size", type=int, default=16, help="tokens per KV block (paged)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prompt tokens prefilled per interleaved chunk (paged)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="pool size in blocks; 0 = full provisioning (paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend the same N-token system prompt to every request")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -57,22 +71,41 @@ def main():
           f"sampling=(T={sp.temperature}, k={sp.top_k}, p={sp.top_p})")
 
     if cfg.family in ("dense", "moe"):
-        from repro.runtime.engine import Engine
+        from repro.runtime.engine import Engine, PagedEngine
 
         # ragged prompts: uniform in [prompt_len/2, prompt_len]
         lens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1, args.requests)
-        eng = Engine(cfg, params, max_slots=args.slots,
-                     max_seq=args.prompt_len + args.gen, eos_id=eos, seed=args.seed)
+        shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
+        prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, int(n))])
+                   for n in lens]
+        max_seq = args.prompt_len + args.shared_prefix + args.gen
+        if args.paged:
+            eng = PagedEngine(cfg, params, max_slots=args.slots, max_seq=max_seq,
+                              eos_id=eos, seed=args.seed, block_size=args.block_size,
+                              prefill_chunk=args.prefill_chunk,
+                              num_blocks=args.num_blocks or None)
+        else:
+            eng = Engine(cfg, params, max_slots=args.slots, max_seq=max_seq,
+                         eos_id=eos, seed=args.seed)
         t0 = time.time()
-        uids = [eng.submit(rng.integers(0, cfg.vocab_size, int(n)), args.gen, sp) for n in lens]
+        uids = [eng.submit(p, args.gen, sp) for p in prompts]
         results = eng.run()
         wall = time.time() - t0
         n_out = sum(len(g.tokens) for g in results.values())
-        print(f"engine: {args.requests} requests (prompts {lens.min()}-{lens.max()} tok) "
+        kind = "paged engine" if args.paged else "engine"
+        print(f"{kind}: {args.requests} requests (prompts "
+              f"{min(map(len, prompts))}-{max(map(len, prompts))} tok) "
               f"through {args.slots} slots")
         print(f"decoded {n_out} tokens in {wall*1e3:.1f} ms "
               f"({n_out/max(wall, 1e-9):.0f} tok/s incl. compile); "
               f"mean slot occupancy {eng.mean_occupancy:.2f}/{args.slots}")
+        if args.paged:
+            st = eng.pool.stats
+            print(f"prefix-cache hit rate {100*eng.prefix_hit_rate:.1f}% "
+                  f"({eng.stats['prefix_hit_tokens']}/{eng.stats['prompt_tokens']} prompt tokens); "
+                  f"{eng.stats['prefill_chunks']} prefill chunks of {args.prefill_chunk}; "
+                  f"pool {eng.kv_pool_bytes/2**20:.1f} MiB, "
+                  f"{st.cow_copies} CoW copies, {st.evictions} evictions")
         for uid in uids[: min(2, len(uids))]:
             print(f"  req {uid} [{results[uid].finish_reason}]:",
                   results[uid].tokens[:16])

@@ -385,6 +385,104 @@ def attention_decode_ragged(params, x, cfg, statics: AttnStatics, clip, cache_k,
     return out, new_k, new_v
 
 
+def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, pool_v,
+                           block_tables, lens, active):
+    """Slot-batched one-token decode over a *block-paged* KV cache (DESIGN.md §3).
+
+    The paged sibling of ``attention_decode_ragged``: per-slot raggedness still
+    lives in ``lens``, but KV now resides in a global block pool shared by all
+    slots — each slot's window is the blocks its table names. The new token is
+    RoPE-rotated at ``lens[b]`` and scattered into block
+    ``block_tables[b, lens[b] // bs]`` at offset ``lens[b] % bs``; inactive
+    slots scatter to the reserved null block (id 0) so a freed slot can never
+    corrupt blocks that were recycled to another request. Attention gathers
+    each slot's blocks back into table order (``kernels.ops.gather_block_kv``)
+    and then runs the exact same EXAQ histogram dispatch as the ragged path —
+    the grid is anchored at the global row max, so per-block partial counts
+    add exactly (§2 combine; block boundaries are invisible to the softmax).
+
+    x: (S, 1, D); pool_{k,v}: (N, KV, bs, Dh); block_tables: (S, MB) int32;
+    lens: (S,) int32; active: (S,) bool.
+    Returns (out (S, 1, D), new_pool_k, new_pool_v).
+    """
+    B = x.shape[0]
+    bs = pool_k.shape[2]
+    positions = lens.astype(jnp.int32)[:, None]  # (S, 1) per-slot rope position
+    q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
+    kn, vn = k[:, 0], v[:, 0]  # (S, KV, Dh)
+    blk = jnp.take_along_axis(block_tables, (lens // bs)[:, None], axis=1)[:, 0]
+    blk = jnp.where(active, blk, 0)  # gate writes of inactive slots to the null block
+    off = lens % bs
+    new_pool_k = pool_k.at[blk, :, off].set(kn.astype(pool_k.dtype))
+    new_pool_v = pool_v.at[blk, :, off].set(vn.astype(pool_v.dtype))
+    qh = jnp.swapaxes(q, 1, 2)  # (S, H, 1, Dh)
+    kv_lens = lens.astype(jnp.int32) + 1
+    dh = cfg.resolved_head_dim
+    if statics.use_fused_kernel and statics.impl == "exaq":
+        from repro.core.quantizer import exaq_params
+        from repro.kernels import ops
+
+        p = exaq_params(cfg.quant.sigma_default, statics.bits, rule=cfg.quant.clip_rule)
+        o = ops.paged_decode_attention(qh, new_pool_k, new_pool_v, block_tables, kv_lens, p, dh**-0.5)
+    else:
+        from repro.kernels.ops import gather_block_kv
+
+        kg, vg = gather_block_kv(new_pool_k, new_pool_v, block_tables)  # (S, KV, W, Dh)
+        group = cfg.num_heads // cfg.num_kv_heads
+        kk = _repeat_kv(kg, group)
+        vv = _repeat_kv(vg, group)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kk).astype(jnp.float32) * dh**-0.5
+        W = kk.shape[2]
+        valid = jnp.arange(W, dtype=jnp.int32)[None, None, None, :] < kv_lens[:, None, None, None]
+        w = _weights(s, statics, clip, valid)
+        o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
+    o = jnp.swapaxes(o, 1, 2).reshape(B, 1, -1).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", o, params["wo"].astype(x.dtype))
+    return out, new_pool_k, new_pool_v
+
+
+def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, pool_v,
+                            block_table, start, blk_t, off_t):
+    """One chunk of chunked prefill against a paged cache (DESIGN.md §3).
+
+    Processes ``C`` prompt tokens at global positions ``start + i`` for one
+    request: projects chunk K/V, scatters them into the pool at the host-
+    computed targets (``blk_t[i]``, ``off_t[i]``; padded rows target the null
+    block), then gathers the request's whole window — which now includes this
+    chunk's keys — and attends causally by *global position*
+    (``key_pos <= start + row``). Because the EXAQ grid anchors at each row's
+    global max, chunking the prefill leaves the softmax bit-identical to a
+    one-shot prefill of the same prompt (§2: partial histograms add exactly).
+
+    x: (1, C, D) chunk embeddings (right-padded); block_table: (MB,) int32;
+    start: scalar int32 (tokens already cached); blk_t/off_t: (C,) int32.
+    Returns (out (1, C, D), new_pool_k, new_pool_v).
+    """
+    B, C, _ = x.shape
+    bs = pool_k.shape[2]
+    positions = (start + jnp.arange(C, dtype=jnp.int32))[None, :]  # (1, C)
+    q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
+    new_pool_k = pool_k.at[blk_t, :, off_t].set(k[0].astype(pool_k.dtype))  # (C, KV, Dh) targets
+    new_pool_v = pool_v.at[blk_t, :, off_t].set(v[0].astype(pool_v.dtype))
+    from repro.kernels.ops import gather_block_kv
+
+    kg, vg = gather_block_kv(new_pool_k, new_pool_v, block_table[None])  # (1, KV, W, Dh)
+    qh = jnp.swapaxes(q, 1, 2)  # (1, H, C, Dh)
+    group = cfg.num_heads // cfg.num_kv_heads
+    kk = _repeat_kv(kg, group)
+    vv = _repeat_kv(vg, group)
+    dh = cfg.resolved_head_dim
+    s = jnp.einsum("bhqd,bhkd->bhqk", qh, kk).astype(jnp.float32) * dh**-0.5
+    W = kk.shape[2]
+    rows = start + jnp.arange(C, dtype=jnp.int32)
+    valid = jnp.arange(W, dtype=jnp.int32)[None, None, None, :] <= rows[None, None, :, None]
+    w = _weights(s, statics, clip, valid)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
+    o = jnp.swapaxes(o, 1, 2).reshape(B, C, -1).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", o, params["wo"].astype(x.dtype))
+    return out, new_pool_k, new_pool_v
+
+
 def sp_decode_attention(qh, k_new, v_new, cache_k, cache_v, pos, cfg, statics: AttnStatics, clip):
     """Sequence-parallel decode attention (beyond-paper, EXAQ-native).
 

@@ -393,6 +393,22 @@ class Model:
             cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
         return cache
 
+    def init_block_pool(self, num_blocks: int, block_size: int, dtype=jnp.bfloat16) -> dict:
+        """Global paged KV pool: {"k","v"} of (L, num_blocks, KV, bs, Dh).
+
+        The device half of the paged cache (DESIGN.md §3): blocks are the unit
+        of allocation/sharing; ``runtime.kv_pool.BlockPool`` owns the ids and
+        block 0 is the reserved null sink for gated writes. Attention token
+        decoders only — paging needs a ragged KV sequence axis to page.
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm", "moe"), (
+            f"paged KV pool requires an attention KV cache, got family={cfg.family!r}"
+        )
+        dh = cfg.resolved_head_dim
+        k = jnp.zeros((cfg.num_layers, num_blocks, cfg.num_kv_heads, block_size, dh), dtype)
+        return {"k": k, "v": jnp.zeros_like(k)}
+
     def _ssm_cache(self, n_layers, batch, dtype):
         cfg = self.cfg
         return {
@@ -547,6 +563,84 @@ class Model:
         logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"].astype(h.dtype))
         logits = self._mask_padded_vocab(logits)
         return logits, new_cache
+
+    def decode_step_paged(self, params, tokens, pool, block_tables, lens, active, qstate=None):
+        """Slot-batched decode over a block-paged KV pool (DESIGN.md §3).
+
+        The paged sibling of ``decode_step_ragged``: tokens (S, 1); pool k/v
+        (L, N, KV, bs, Dh); block_tables (S, MB); lens (S,) live length per
+        slot; active (S,) bool — inactive slots' KV writes are gated to the
+        null block so recycled blocks can't be corrupted mid-chunk. Returns
+        (logits (S, V), new_pool).
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm", "moe"), (
+            f"paged decode requires an attention KV cache, got family={cfg.family!r}"
+        )
+        qstate = qstate or default_qstate(cfg)
+        statics = _statics(cfg)
+        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+
+        def body(h, xs):
+            lp, clip, pk, pv = xs
+            a, nk, nv = attn.attention_decode_paged(
+                lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip,
+                pk, pv, block_tables, lens, active,
+            )
+            h = h + a
+            if cfg.moe is not None:
+                f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+            else:
+                f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return h + f, (nk, nv)
+
+        h, (nk, nv) = jax.lax.scan(body, h, (params["layers"], qstate["attn_clip"], pool["k"], pool["v"]))
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"].astype(h.dtype))
+        logits = self._mask_padded_vocab(logits)
+        return logits, {"k": nk, "v": nv}
+
+    def prefill_paged_chunk(self, params, tokens, pool, block_table, start, chunk_len,
+                            blk_t, off_t, qstate=None):
+        """One fixed-size chunk of a paged prefill for a single request.
+
+        tokens (1, C) right-padded chunk; block_table (MB,) the request's
+        table; start scalar — tokens already cached (prefix hits + previous
+        chunks); chunk_len scalar — live tokens in this chunk; blk_t/off_t
+        (C,) host-computed scatter targets (padded rows -> null block).
+        Attends causally by global position against the gathered window, so
+        a prompt prefilled in chunks matches a one-shot prefill bit-for-bit
+        (DESIGN.md §3). Returns (logits (1, V) at the chunk's last live row,
+        new_pool) — only the final chunk's logits seed sampling.
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm", "moe"), (
+            f"paged prefill requires an attention KV cache, got family={cfg.family!r}"
+        )
+        qstate = qstate or default_qstate(cfg)
+        statics = _statics(cfg)
+        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+
+        def body(h, xs):
+            lp, clip, pk, pv = xs
+            a, nk, nv = attn.attention_prefill_chunk(
+                lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip,
+                pk, pv, block_table, start, blk_t, off_t,
+            )
+            h = h + a
+            if cfg.moe is not None:
+                f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+            else:
+                f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return h + f, (nk, nv)
+
+        h, (nk, nv) = jax.lax.scan(body, h, (params["layers"], qstate["attn_clip"], pool["k"], pool["v"]))
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        idx = jnp.clip(chunk_len - 1, 0, tokens.shape[1] - 1)
+        h_last = jax.lax.dynamic_index_in_dim(h[0], idx, axis=0, keepdims=False)
+        logits = jnp.einsum("d,dv->v", h_last, params["head"].astype(h.dtype))[None]
+        logits = self._mask_padded_vocab(logits)
+        return logits, {"k": nk, "v": nv}
 
     def decode_step(self, params, tokens, cache, qstate=None):
         """tokens: (B, 1) -> (logits (B, V), new cache)."""

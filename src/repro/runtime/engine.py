@@ -1,10 +1,13 @@
-"""Continuous-batching decode engine over a slot-based ragged KV cache.
+"""Continuous-batching decode engines: slot-ragged and block-paged KV caches.
 
 The serving problem EXAQ targets (paper §4: attention-heavy decode) is only
 won at the *runtime* level: many concurrent requests of different lengths
 must share one jitted step, or the kernel savings drown in per-request
 dispatch and padding waste (cf. QUIK/SoftmAP — low-bit inference pays off
-when the surrounding runtime is batched and fused). This engine provides:
+when the surrounding runtime is batched and fused). Two engines share the
+host scheduler scaffolding:
+
+``Engine`` — slot cache (PR 1 baseline, kept as the parity oracle):
 
   * Slot cache   — fixed (L, max_slots, KV, max_seq, Dh) K/V buffers plus a
                    per-slot ``kv_lens`` vector. Shapes never change, so the
@@ -22,9 +25,28 @@ when the surrounding runtime is batched and fused). This engine provides:
                    sampling dispatch (greedy / temperature / top-k / top-p
                    with per-slot params — runtime/sampling.py).
 
+``PagedEngine`` — block-paged cache (DESIGN.md §3): the slot engine's memory
+model scales as ``max_slots x max_seq`` regardless of live lengths and
+re-prefills identical prefixes per request. The paged engine replaces the
+rectangular buffers with a global block pool (``runtime/kv_pool.py``) plus
+per-request block tables:
+
+  * Block pool    — K/V live in (L, num_blocks, KV, block_size, Dh); a slot's
+                    cache is the blocks its table names, so memory tracks the
+                    sum of live lengths, not slots x max_seq.
+  * Prefix reuse  — prompt blocks are published under a rolling chain hash;
+                    later requests sharing a prefix retain the cached blocks
+                    (refcounted, copy-on-write on append) and skip their
+                    prefill entirely.
+  * Chunked prefill — prompts prefill in fixed-size chunks interleaved with
+                    decode chunks, so a long prompt never stalls the running
+                    batch; chunking is bit-exact vs one-shot prefill because
+                    the EXAQ histogram combine composes across partitions
+                    (DESIGN.md §2/§3).
+
 Families: dense / moe (token-only attention decoders). SSM/hybrid/audio
 caches have no ragged sequence axis to slot-batch; vlm decode would work
-(its KV cache is regular) but the engine's prefill builds token-only
+(its KV cache is regular) but the engines' prefill builds token-only
 batches — admitting vlm needs per-request ``vision_embeds`` plumbing first.
 ``runtime.serve.generate`` keeps the rectangular loop for all of these.
 """
@@ -42,6 +64,7 @@ import numpy as np
 from repro.models import build_model, default_qstate
 from repro.runtime import sampling as smp
 from repro.runtime import sharding as shd
+from repro.runtime.kv_pool import NULL_BLOCK, BlockPool, PoolExhausted, chain_hashes
 
 
 @dataclass(frozen=True)
@@ -69,6 +92,10 @@ class _Slot:
     @property
     def free(self) -> bool:
         return self.uid < 0
+
+    @property
+    def prefilling(self) -> bool:
+        return False  # slot-engine prefill is synchronous at admission
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -106,6 +133,32 @@ class Engine:
         seed: int = 0,
         mesh=None,
     ):
+        self._init_common(cfg, params, max_slots=max_slots, max_seq=max_seq, qstate=qstate,
+                          eos_id=eos_id, steps_per_sync=steps_per_sync,
+                          cache_dtype=cache_dtype, seed=seed)
+
+        cache = self.model.init_cache(max_slots, max_seq, cache_dtype)
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            spec = shd.slot_cache_spec(cfg, mesh)
+            cache["k"] = jax.device_put(cache["k"], NamedSharding(mesh, spec))
+            cache["v"] = jax.device_put(cache["v"], NamedSharding(mesh, spec))
+        self._cache_k, self._cache_v = cache["k"], cache["v"]
+
+        # donate the K/V buffers on the hot paths: the engine rebinds them from
+        # the outputs immediately, so XLA may update the cache in place instead
+        # of copying the full (L, slots, KV, max_seq, Dh) arrays per chunk /
+        # admission (CPU ignores donation; TPU/GPU halve peak cache memory)
+        self._jit_prefill = jax.jit(self._prefill_fn)
+        self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0, 1))
+        self._jit_chunk = jax.jit(self._chunk_fn, static_argnames=("steps", "sampler"),
+                                  donate_argnums=(1, 2))
+
+    # --------------------------------------------------- shared host scaffold
+
+    def _init_common(self, cfg, params, *, max_slots, max_seq, qstate, eos_id,
+                     steps_per_sync, cache_dtype, seed):
         if cfg.family not in ("dense", "moe") or cfg.frontend is not None:
             raise ValueError(
                 f"Engine supports token-only attention decoders (dense/moe), got "
@@ -123,17 +176,8 @@ class Engine:
         self.cache_dtype = cache_dtype
         self._key = jax.random.PRNGKey(seed)
 
-        cache = self.model.init_cache(max_slots, max_seq, cache_dtype)
-        if mesh is not None:
-            from jax.sharding import NamedSharding
-
-            spec = shd.slot_cache_spec(cfg, mesh)
-            cache["k"] = jax.device_put(cache["k"], NamedSharding(mesh, spec))
-            cache["v"] = jax.device_put(cache["v"], NamedSharding(mesh, spec))
-        self._cache_k, self._cache_v = cache["k"], cache["v"]
-
         # host-side slot state (small; shipped to device each chunk)
-        self._slots = [_Slot() for _ in range(max_slots)]
+        self._slots = [self._new_slot() for _ in range(max_slots)]
         self.kv_lens = np.zeros((max_slots,), np.int32)
         self._active = np.zeros((max_slots,), bool)
         self._budget = np.zeros((max_slots,), np.int32)
@@ -150,86 +194,22 @@ class Engine:
         self.stats = {"decode_steps": 0, "tokens_out": 0, "occupancy_sum": 0.0,
                       "max_active": 0, "prefills": 0, "decode_time": 0.0}
 
-        # donate the K/V buffers on the hot paths: the engine rebinds them from
-        # the outputs immediately, so XLA may update the cache in place instead
-        # of copying the full (L, slots, KV, max_seq, Dh) arrays per chunk /
-        # admission (CPU ignores donation; TPU/GPU halve peak cache memory)
-        self._jit_prefill = jax.jit(self._prefill_fn)
-        self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0, 1))
         self._jit_sample = jax.jit(smp.sample_tokens)
-        self._jit_chunk = jax.jit(self._chunk_fn, static_argnames=("steps", "sampler"),
-                                  donate_argnums=(1, 2))
 
-    # ------------------------------------------------------------ jitted fns
+    def _new_slot(self):
+        return _Slot()
 
-    def _prefill_fn(self, params, tokens, length):
-        """tokens (1, P) right-padded; length (1,) true prompt length."""
-        cache = self.model.init_cache(1, tokens.shape[1], self.cache_dtype)
-        logits, cache = self.model.prefill(
-            params, {"tokens": tokens}, cache, self.qstate, lens=length
-        )
-        return logits, cache["k"], cache["v"]
-
-    def _insert_fn(self, big_k, big_v, ks, vs, slot):
-        """Write a (L, 1, KV, P, Dh) prefill cache into slot ``slot``."""
-        start = (0, slot, 0, 0, 0)
-        return (
-            jax.lax.dynamic_update_slice(big_k, ks.astype(big_k.dtype), start),
-            jax.lax.dynamic_update_slice(big_v, vs.astype(big_v.dtype), start),
-        )
-
-    def _chunk_fn(self, params, k, v, tokens, lens, active, budget, temperature,
-                  top_k, top_p, key, *, steps, sampler):
-        """``steps`` decode iterations under one jit: per step, one ragged
-        attention dispatch over all slots + one batched sampling dispatch.
-        EOS/budget/max_seq transitions update the active mask *inside* the
-        scan, so a slot that finishes mid-chunk stops consuming budget and
-        its later emissions are masked. ``sampler`` (static, known host-side
-        from the active slots' params) picks the cheapest variant: "greedy"
-        is pure argmax, "temperature" is sort-free Gumbel-max, "full" is the
-        general top-k/top-p sampler."""
-        eos = -1 if self.eos_id is None else self.eos_id
-
-        def step(carry, _):
-            k, v, tokens, lens, active, budget, key = carry
-            logits, cache = self.model.decode_step_ragged(
-                params, tokens, {"k": k, "v": v}, lens, self.qstate
-            )
-            key, sub = jax.random.split(key)
-            if sampler == "greedy":
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            elif sampler == "temperature":
-                nxt = smp.sample_temperature(logits, temperature, sub)
-            else:
-                nxt = smp.sample_tokens(logits, temperature, top_k, top_p, sub)
-            emit_mask = active
-            new_lens = jnp.where(active, lens + 1, lens)
-            new_budget = jnp.where(active, budget - 1, budget)
-            finished = (nxt == eos) | (new_budget <= 0) | (new_lens >= self.max_seq)
-            new_active = active & ~finished
-            new_tokens = jnp.where(active, nxt, tokens[:, 0])[:, None]
-            emitted = jnp.where(emit_mask, nxt, -1)
-            return (cache["k"], cache["v"], new_tokens, new_lens, new_active, new_budget, key), (
-                emitted,
-                emit_mask,
-            )
-
-        init = (k, v, tokens, lens, active, budget, key)
-        (k, v, tokens, lens, active, budget, key), (emitted, masks) = jax.lax.scan(
-            step, init, None, length=steps
-        )
-        return k, v, tokens, lens, active, budget, key, emitted, masks
-
-    # ------------------------------------------------------------- scheduling
-
-    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY) -> int:
-        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+    def _validate_request(self, prompt, max_new: int) -> None:
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.max_seq:
             raise ValueError(f"prompt length {len(prompt)} >= max_seq {self.max_seq}")
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
+
+    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY) -> int:
+        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+        self._validate_request(prompt, max_new)
         uid = self._next_uid
         self._next_uid += 1
         self._queue.append(Request(uid, prompt, max_new, sampling))
@@ -244,92 +224,67 @@ class Engine:
         return len(self._queue)
 
     def has_work(self) -> bool:
-        return bool(self._queue) or self.num_active > 0
+        return (bool(self._queue) or self.num_active > 0
+                or any(not s.free and s.prefilling for s in self._slots))
 
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self._slots) if s.free]
 
-    def _admit(self) -> int:
-        """Prefill queued requests into free slots; returns #admitted."""
-        admitted = 0
-        free = self._free_slots()
-        while free and self._queue:
-            req = self._queue.popleft()
-            slot = free.pop(0)
-            P = min(_bucket(len(req.prompt)), self.max_seq)
-            padded = np.zeros((1, P), np.int32)
-            padded[0, : len(req.prompt)] = req.prompt
-            logits, ks, vs = self._jit_prefill(
-                self.params, jnp.asarray(padded), jnp.asarray([len(req.prompt)], jnp.int32)
-            )
-            self._cache_k, self._cache_v = self._jit_insert(
-                self._cache_k, self._cache_v, ks, vs, slot
-            )
-            self.stats["prefills"] += 1
-            self._key, sub = jax.random.split(self._key)
-            sp = req.sampling
-            first = int(
-                self._jit_sample(
-                    logits,
-                    jnp.asarray([sp.temperature], jnp.float32),
-                    jnp.asarray([sp.top_k], jnp.int32),
-                    jnp.asarray([sp.top_p], jnp.float32),
-                    sub,
-                )[0]
-            )
-            self.stats["tokens_out"] += 1
-            s = self._slots[slot]
-            s.uid, s.generated = req.uid, [first]
-            self.kv_lens[slot] = len(req.prompt)
-            self._tokens[slot, 0] = first
-            self._temperature[slot] = sp.temperature
-            self._top_k[slot] = sp.top_k
-            self._top_p[slot] = sp.top_p
-            self._budget[slot] = req.max_new - 1
-            hit_eos = self.eos_id is not None and first == self.eos_id
-            if hit_eos or req.max_new == 1:
-                self._finish(slot, "eos" if hit_eos else "length")
-            else:
-                self._active[slot] = True
-            admitted += 1
-        return admitted
+    def _sample_first(self, slot: int, req: Request, logits) -> None:
+        """Sample the first generated token from prefill logits and flip the
+        slot into decode state (or finish immediately on EOS / budget 1)."""
+        self._key, sub = jax.random.split(self._key)
+        sp = req.sampling
+        first = int(
+            self._jit_sample(
+                logits,
+                jnp.asarray([sp.temperature], jnp.float32),
+                jnp.asarray([sp.top_k], jnp.int32),
+                jnp.asarray([sp.top_p], jnp.float32),
+                sub,
+            )[0]
+        )
+        self.stats["tokens_out"] += 1
+        s = self._slots[slot]
+        s.uid, s.generated = req.uid, [first]
+        self.kv_lens[slot] = len(req.prompt)
+        self._tokens[slot, 0] = first
+        self._temperature[slot] = sp.temperature
+        self._top_k[slot] = sp.top_k
+        self._top_p[slot] = sp.top_p
+        self._budget[slot] = req.max_new - 1
+        hit_eos = self.eos_id is not None and first == self.eos_id
+        if hit_eos or req.max_new == 1:
+            self._finish(slot, "eos" if hit_eos else "length")
+        else:
+            self._active[slot] = True
 
     def _finish(self, slot: int, reason: str):
         s = self._slots[slot]
         self._results[s.uid] = Generation(s.uid, list(s.generated), reason)
-        self._slots[slot] = _Slot()
+        self._slots[slot] = self._new_slot()
         self._active[slot] = False
 
-    def step_chunk(self, steps: int | None = None) -> int:
-        """Admit + run one jitted decode chunk; returns #tokens emitted."""
-        self._admit()
-        if self.num_active == 0:
-            return 0
+    def _pick_sampler(self) -> str:
+        """Cheapest chunk sampler covering every active slot's params."""
+        act = self._active
+        if (self._temperature[act] <= 0.0).all():
+            return "greedy"
+        if (self._top_k[act] == 0).all() and (self._top_p[act] >= 1.0).all():
+            return "temperature"
+        return "full"
+
+    def _clamp_steps(self, steps: int | None) -> int:
         # clamp to the largest remaining budget among active slots: a tail
         # chunk never runs whole-model decode steps nobody can consume (at
         # most steps_per_sync distinct scan lengths ever compile)
         max_budget = int(self._budget[self._active].max())
-        steps = min(steps or self.steps_per_sync, max(max_budget, 1))
-        t0 = time.perf_counter()
-        act = self._active
-        if (self._temperature[act] <= 0.0).all():
-            sampler = "greedy"
-        elif (self._top_k[act] == 0).all() and (self._top_p[act] >= 1.0).all():
-            sampler = "temperature"
-        else:
-            sampler = "full"
-        out = self._jit_chunk(
-            self.params, self._cache_k, self._cache_v,
-            jnp.asarray(self._tokens), jnp.asarray(self.kv_lens),
-            jnp.asarray(self._active), jnp.asarray(self._budget),
-            jnp.asarray(self._temperature), jnp.asarray(self._top_k),
-            jnp.asarray(self._top_p), self._key, steps=steps, sampler=sampler,
-        )
-        k, v, tokens, lens, active, budget, self._key, emitted, masks = out
-        jax.block_until_ready(emitted)
-        self.stats["decode_time"] += time.perf_counter() - t0
-        self._cache_k, self._cache_v = k, v
-        was_active = self._active
+        return min(steps or self.steps_per_sync, max(max_budget, 1))
+
+    def _absorb_chunk(self, tokens, lens, active, budget, emitted, masks, was_active) -> int:
+        """Pull a finished decode chunk's state back to host: emissions per
+        slot, occupancy telemetry, and finish transitions for slots that
+        went inactive inside the chunk."""
         self._tokens = np.array(tokens)
         self.kv_lens = np.array(lens)
         self._active = np.array(active)
@@ -352,6 +307,120 @@ class Engine:
                 self._finish(slot, "eos" if hit_eos else "length")
         return n_out
 
+    def _decode_scan(self, step_kv, k, v, tokens, lens, active, budget, temperature,
+                     top_k, top_p, key, *, steps, sampler):
+        """``steps`` decode iterations under one jit: per step, one attention
+        dispatch over all slots + one batched sampling dispatch. EOS/budget/
+        max_seq transitions update the active mask *inside* the scan, so a
+        slot that finishes mid-chunk stops consuming budget and its later
+        emissions are masked. ``sampler`` (static, known host-side from the
+        active slots' params) picks the cheapest variant: "greedy" is pure
+        argmax, "temperature" is sort-free Gumbel-max, "full" is the general
+        top-k/top-p sampler. ``step_kv(tokens, k, v, lens, active)`` is the
+        engine-specific model call (slot-ragged or paged)."""
+        eos = -1 if self.eos_id is None else self.eos_id
+
+        def step(carry, _):
+            k, v, tokens, lens, active, budget, key = carry
+            logits, k, v = step_kv(tokens, k, v, lens, active)
+            key, sub = jax.random.split(key)
+            if sampler == "greedy":
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            elif sampler == "temperature":
+                nxt = smp.sample_temperature(logits, temperature, sub)
+            else:
+                nxt = smp.sample_tokens(logits, temperature, top_k, top_p, sub)
+            emit_mask = active
+            new_lens = jnp.where(active, lens + 1, lens)
+            new_budget = jnp.where(active, budget - 1, budget)
+            finished = (nxt == eos) | (new_budget <= 0) | (new_lens >= self.max_seq)
+            new_active = active & ~finished
+            new_tokens = jnp.where(active, nxt, tokens[:, 0])[:, None]
+            emitted = jnp.where(emit_mask, nxt, -1)
+            return (k, v, new_tokens, new_lens, new_active, new_budget, key), (
+                emitted,
+                emit_mask,
+            )
+
+        init = (k, v, tokens, lens, active, budget, key)
+        (k, v, tokens, lens, active, budget, key), (emitted, masks) = jax.lax.scan(
+            step, init, None, length=steps
+        )
+        return k, v, tokens, lens, active, budget, key, emitted, masks
+
+    # ------------------------------------------------------------ jitted fns
+
+    def _prefill_fn(self, params, tokens, length):
+        """tokens (1, P) right-padded; length (1,) true prompt length."""
+        cache = self.model.init_cache(1, tokens.shape[1], self.cache_dtype)
+        logits, cache = self.model.prefill(
+            params, {"tokens": tokens}, cache, self.qstate, lens=length
+        )
+        return logits, cache["k"], cache["v"]
+
+    def _insert_fn(self, big_k, big_v, ks, vs, slot):
+        """Write a (L, 1, KV, P, Dh) prefill cache into slot ``slot``."""
+        start = (0, slot, 0, 0, 0)
+        return (
+            jax.lax.dynamic_update_slice(big_k, ks.astype(big_k.dtype), start),
+            jax.lax.dynamic_update_slice(big_v, vs.astype(big_v.dtype), start),
+        )
+
+    def _chunk_fn(self, params, k, v, tokens, lens, active, budget, temperature,
+                  top_k, top_p, key, *, steps, sampler):
+        def step_kv(tokens, k, v, lens, active):
+            logits, cache = self.model.decode_step_ragged(
+                params, tokens, {"k": k, "v": v}, lens, self.qstate
+            )
+            return logits, cache["k"], cache["v"]
+
+        return self._decode_scan(step_kv, k, v, tokens, lens, active, budget,
+                                 temperature, top_k, top_p, key, steps=steps, sampler=sampler)
+
+    # ------------------------------------------------------------- scheduling
+
+    def _admit(self) -> int:
+        """Prefill queued requests into free slots; returns #admitted."""
+        admitted = 0
+        free = self._free_slots()
+        while free and self._queue:
+            req = self._queue.popleft()
+            slot = free.pop(0)
+            P = min(_bucket(len(req.prompt)), self.max_seq)
+            padded = np.zeros((1, P), np.int32)
+            padded[0, : len(req.prompt)] = req.prompt
+            logits, ks, vs = self._jit_prefill(
+                self.params, jnp.asarray(padded), jnp.asarray([len(req.prompt)], jnp.int32)
+            )
+            self._cache_k, self._cache_v = self._jit_insert(
+                self._cache_k, self._cache_v, ks, vs, slot
+            )
+            self.stats["prefills"] += 1
+            self._sample_first(slot, req, logits)
+            admitted += 1
+        return admitted
+
+    def step_chunk(self, steps: int | None = None) -> int:
+        """Admit + run one jitted decode chunk; returns #tokens emitted."""
+        self._admit()
+        if self.num_active == 0:
+            return 0
+        steps = self._clamp_steps(steps)
+        t0 = time.perf_counter()
+        out = self._jit_chunk(
+            self.params, self._cache_k, self._cache_v,
+            jnp.asarray(self._tokens), jnp.asarray(self.kv_lens),
+            jnp.asarray(self._active), jnp.asarray(self._budget),
+            jnp.asarray(self._temperature), jnp.asarray(self._top_k),
+            jnp.asarray(self._top_p), self._key, steps=steps, sampler=self._pick_sampler(),
+        )
+        k, v, tokens, lens, active, budget, self._key, emitted, masks = out
+        jax.block_until_ready(emitted)
+        self.stats["decode_time"] += time.perf_counter() - t0
+        self._cache_k, self._cache_v = k, v
+        was_active = self._active
+        return self._absorb_chunk(tokens, lens, active, budget, emitted, masks, was_active)
+
     def run(self) -> dict[int, Generation]:
         """Drain the queue and all active slots; returns {uid: Generation}."""
         while self.has_work():
@@ -363,3 +432,368 @@ class Engine:
     def mean_occupancy(self) -> float:
         steps = max(self.stats["decode_steps"], 1)
         return self.stats["occupancy_sum"] / steps
+
+
+# ===================================================================== paged
+
+
+@dataclass
+class _PagedSlot:
+    uid: int = -1
+    generated: list[int] = field(default_factory=list)
+    req: Request | None = None
+    table: list[int] = field(default_factory=list)   # host truth; mirrored to _tables
+    hashes: list[tuple[int, int]] = field(default_factory=list)
+    filled: int = 0        # prompt tokens with KV materialized (hits + chunks)
+    cached: int = 0        # tokens satisfied from the prefix cache
+    _prefilling: bool = False
+
+    @property
+    def free(self) -> bool:
+        return self.uid < 0
+
+    @property
+    def prefilling(self) -> bool:
+        return self._prefilling
+
+
+class PagedEngine(Engine):
+    """Continuous batching over a block-paged KV cache (DESIGN.md §3).
+
+    Same public surface as ``Engine`` (submit / step_chunk / run), same
+    sampling and finish semantics, different memory model:
+
+      * KV lives in a global pool of ``num_blocks`` blocks of ``block_size``
+        tokens; each slot's cache is the blocks its table names
+        (``runtime/kv_pool.BlockPool`` owns ids, refcounts, the prefix index
+        and CoW adjudication — this engine performs the device copies).
+      * Admission matches the prompt's rolling block hashes against the
+        prefix index; hits retain cached blocks and skip their prefill. At
+        least the prompt's last token is always re-prefilled so sampling has
+        logits.
+      * Remaining prompt tokens prefill in ``prefill_chunk``-token chunks —
+        one chunk per prefilling slot per ``step_chunk``, *interleaved* with
+        decode chunks for the already-active slots, so a long prompt never
+        stalls the running batch.
+      * Greedy outputs are bit-exact vs the slot engine on the same trace:
+        chunking and paging both compose under the EXAQ histogram combine
+        (§2), and the benchmark asserts it (benchmarks/bench_serving.py).
+
+    ``num_blocks`` defaults to full provisioning (every slot can reach
+    ``max_seq``), which makes pool exhaustion impossible; smaller pools are
+    allowed (prefix sharing usually covers the gap) and exhaustion becomes
+    back-pressure, never KV corruption: admission leaves requests queued,
+    and decode growth preempts the newest active request — its blocks free
+    up (prompt blocks stay parked in the prefix cache) and it is requeued
+    for recompute with prompt+generated-so-far, which reproduces greedy
+    output bit-exactly (chunked prefill is exact, DESIGN.md §3).
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        max_slots: int,
+        max_seq: int,
+        block_size: int = 16,
+        prefill_chunk: int = 32,
+        num_blocks: int | None = None,
+        qstate=None,
+        eos_id: int | None = None,
+        steps_per_sync: int = 8,
+        cache_dtype=jnp.bfloat16,
+        seed: int = 0,
+        mesh=None,
+    ):
+        self._init_common(cfg, params, max_slots=max_slots, max_seq=max_seq, qstate=qstate,
+                          eos_id=eos_id, steps_per_sync=steps_per_sync,
+                          cache_dtype=cache_dtype, seed=seed)
+        self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        self.blocks_per_table = -(-max_seq // block_size)
+        if num_blocks is None:
+            num_blocks = 1 + max_slots * self.blocks_per_table  # +1: reserved null block
+        self.pool = BlockPool(num_blocks, block_size)
+        self._tables = np.full((max_slots, self.blocks_per_table), NULL_BLOCK, np.int32)
+
+        kv = self.model.init_block_pool(num_blocks, block_size, cache_dtype)
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            spec = shd.block_pool_spec(cfg, mesh)
+            kv["k"] = jax.device_put(kv["k"], NamedSharding(mesh, spec))
+            kv["v"] = jax.device_put(kv["v"], NamedSharding(mesh, spec))
+        self._pool_k, self._pool_v = kv["k"], kv["v"]
+
+        self.stats.update(prompt_tokens=0, prefix_hit_tokens=0,
+                          prefill_tokens=0, prefill_chunks=0, preemptions=0)
+        self._preempt_carry: dict[int, list[int]] = {}
+
+        self._jit_prefill_chunk = jax.jit(self._prefill_chunk_fn, donate_argnums=(1, 2))
+        self._jit_copy_block = jax.jit(self._copy_block_fn, donate_argnums=(0, 1))
+        self._jit_chunk = jax.jit(self._paged_chunk_fn, static_argnames=("steps", "sampler"),
+                                  donate_argnums=(1, 2))
+
+    def _new_slot(self):
+        return _PagedSlot()
+
+    def _validate_request(self, prompt, max_new: int) -> None:
+        super()._validate_request(prompt, max_new)
+        worst = min(len(prompt) + max_new, self.max_seq)
+        need = -(-worst // self.block_size)
+        if need > self.pool.num_blocks - 1:
+            raise ValueError(
+                f"request needs up to {need} blocks of {self.block_size} but the pool "
+                f"has {self.pool.num_blocks - 1} usable blocks"
+            )
+
+    # ------------------------------------------------------------ jitted fns
+
+    def _prefill_chunk_fn(self, params, pk, pv, tokens, table, start, chunk_len, blk_t, off_t):
+        logits, pool = self.model.prefill_paged_chunk(
+            params, tokens, {"k": pk, "v": pv}, table, start, chunk_len, blk_t, off_t, self.qstate
+        )
+        return logits, pool["k"], pool["v"]
+
+    def _copy_block_fn(self, pk, pv, src, dst):
+        """Copy-on-write device half: duplicate block ``src`` into ``dst``
+        across all layers (the pool already moved the refcounts)."""
+        return (pk.at[:, dst].set(pk[:, src]), pv.at[:, dst].set(pv[:, src]))
+
+    def _paged_chunk_fn(self, params, pk, pv, tables, tokens, lens, active, budget,
+                        temperature, top_k, top_p, key, *, steps, sampler):
+        def step_kv(tokens, pk, pv, lens, active):
+            logits, pool = self.model.decode_step_paged(
+                params, tokens, {"k": pk, "v": pv}, tables, lens, active, self.qstate
+            )
+            return logits, pool["k"], pool["v"]
+
+        return self._decode_scan(step_kv, pk, pv, tokens, lens, active, budget,
+                                 temperature, top_k, top_p, key, steps=steps, sampler=sampler)
+
+    # -------------------------------------------------------------- block ops
+
+    def _make_writable(self, slot: int, bi: int) -> None:
+        """CoW: before appending into table entry ``bi``, fork a shared block
+        (refcount > 1) and copy its payload; exclusive blocks append in place
+        (appends land beyond the hashed token count — DESIGN.md §3)."""
+        s = self._slots[slot]
+        blk = s.table[bi]
+        if self.pool.writable(blk):
+            return
+        new = self.pool.fork(blk)
+        self._pool_k, self._pool_v = self._jit_copy_block(
+            self._pool_k, self._pool_v, jnp.asarray(blk, jnp.int32), jnp.asarray(new, jnp.int32)
+        )
+        s.table[bi] = new
+        self._tables[slot, bi] = new
+
+    def _ensure_decode_blocks(self, slot: int, steps: int) -> None:
+        """Pre-chunk allocation: positions [lens, lens+writes) must have
+        writable blocks before the jitted chunk launches (tables are fixed
+        for the whole chunk). ``writes`` is bounded by the slot's own budget
+        so a nearly-finished slot never allocates blocks it cannot write;
+        blocks over-allocated for an EOS mid-chunk are reclaimed at finish."""
+        s = self._slots[slot]
+        lens = int(self.kv_lens[slot])
+        writes = min(steps, int(self._budget[slot]) + 1)  # +1: the finishing write
+        last_pos = min(lens + writes, self.max_seq) - 1
+        bi0 = lens // self.block_size
+        if bi0 < len(s.table):
+            self._make_writable(slot, bi0)
+        need = last_pos // self.block_size + 1
+        while len(s.table) < need:
+            blk = self.pool.alloc()
+            self._tables[slot, len(s.table)] = blk
+            s.table.append(blk)
+
+    def _preempt(self, slot: int) -> None:
+        """Release a live slot's blocks under pool pressure and requeue the
+        request for recompute: the continuation prompt is the original prompt
+        plus everything generated so far, so prefilling it reproduces the
+        decode state exactly (greedy continuation is bit-identical — chunked
+        prefill is exact, DESIGN.md §3), and its prompt blocks usually hit
+        the prefix cache the preempted slot just parked."""
+        s = self._slots[slot]
+        req = s.req
+        done = list(s.generated)
+        remaining = int(self._budget[slot])
+        self._preempt_carry[req.uid] = self._preempt_carry.pop(req.uid, []) + done
+        cont = Request(req.uid, req.prompt + tuple(done), remaining, req.sampling)
+        for blk in s.table:
+            self.pool.release(blk)
+        self._tables[slot, :] = NULL_BLOCK
+        self._slots[slot] = self._new_slot()
+        self._active[slot] = False
+        self.stats["preemptions"] += 1
+        self._queue.appendleft(cont)  # continuation bypasses _validate_request:
+        # its prompt may legitimately reach max_seq (finishes right after prefill)
+
+    def _reserve_chunk_blocks(self, steps: int) -> None:
+        """Ensure every active slot can write its share of the coming chunk.
+        Exhaustion preempts the newest active slot (its blocks free up, its
+        request recomputes later) instead of crashing the engine — honest
+        back-pressure on undersized pools."""
+        for i in np.argsort([self._slots[i].uid if self._active[i] else np.iinfo(np.int64).max
+                             for i in range(self.max_slots)]):
+            i = int(i)
+            if not self._active[i]:
+                continue
+            while self._active[i]:
+                try:
+                    self._ensure_decode_blocks(i, steps)
+                    break
+                except PoolExhausted:
+                    victims = [j for j in range(self.max_slots) if self._active[j]]
+                    victim = max(victims, key=lambda j: self._slots[j].uid)
+                    if victim == i and len(victims) == 1:
+                        raise PoolExhausted(
+                            f"cannot grow KV for the only active request (uid "
+                            f"{self._slots[i].uid}): pool of {self.pool.num_blocks - 1} "
+                            f"usable blocks is too small for max_seq {self.max_seq}"
+                        ) from None
+                    self._preempt(victim)
+
+    # ------------------------------------------------------------- scheduling
+
+    def _admit(self) -> int:
+        """Match prefix hashes, retain hits, allocate the rest of the prompt's
+        blocks, and park the slot in chunked-prefill state. Pool exhaustion
+        rolls the request back into the queue (back-pressure)."""
+        admitted = 0
+        free = self._free_slots()
+        while free and self._queue:
+            req = self._queue[0]
+            hashes = chain_hashes(req.prompt, self.block_size)
+            table, cached = [], 0
+            for h, n in hashes:
+                blk = self.pool.lookup(h)
+                if blk is None:
+                    break
+                table.append(blk)
+                cached += n
+            # always re-prefill at least the last prompt token: sampling needs
+            # its logits (a fully-cached prompt has KV but no logits)
+            cached = min(cached, len(req.prompt) - 1)
+            try:
+                while len(table) < len(hashes):
+                    table.append(self.pool.alloc())
+            except PoolExhausted:
+                for b in table:
+                    self.pool.release(b)
+                break
+            self._queue.popleft()
+            slot = free.pop(0)
+            s = self._slots[slot]
+            s.uid, s.req, s.table, s.hashes = req.uid, req, table, hashes
+            s.filled = s.cached = cached
+            s._prefilling = True
+            self._tables[slot, :] = NULL_BLOCK
+            self._tables[slot, : len(table)] = table
+            self.stats["prompt_tokens"] += len(req.prompt)
+            self.stats["prefix_hit_tokens"] += cached
+            admitted += 1
+        return admitted
+
+    def _prefill_step(self, slot: int) -> None:
+        """Advance one ``prefill_chunk``-token chunk for a prefilling slot;
+        on prompt completion, sample the first token and activate."""
+        s = self._slots[slot]
+        req = s.req
+        L = len(req.prompt)
+        bs = self.block_size
+        n = min(self.prefill_chunk, L - s.filled)
+        start = s.filled
+        for bi in range(start // bs, (start + n - 1) // bs + 1):
+            self._make_writable(slot, bi)
+        C = self.prefill_chunk
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = req.prompt[start : start + n]
+        blk_t = np.full((C,), NULL_BLOCK, np.int32)
+        off_t = np.arange(C, dtype=np.int32) % bs  # spread padded-row writes in the null block
+        for i in range(n):
+            pos = start + i
+            blk_t[i] = s.table[pos // bs]
+            off_t[i] = pos % bs
+        logits, self._pool_k, self._pool_v = self._jit_prefill_chunk(
+            self.params, self._pool_k, self._pool_v, jnp.asarray(toks),
+            jnp.asarray(self._tables[slot]), jnp.asarray(start, jnp.int32),
+            jnp.asarray(n, jnp.int32), jnp.asarray(blk_t), jnp.asarray(off_t),
+        )
+        s.filled += n
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_tokens"] += n
+        # publish blocks whose hashed tokens are now fully materialized
+        for bi, (h, ntok) in enumerate(s.hashes):
+            if bi * bs + ntok <= s.filled:
+                self.pool.register(h, s.table[bi])
+        if s.filled == L:
+            s._prefilling = False
+            self.stats["prefills"] += 1
+            self._sample_first(slot, req, logits)
+            # a preempted-at-the-brink continuation can legally have
+            # len(prompt) == max_seq: its first sampled token is also its
+            # last (no cache room to decode further)
+            if self._active[slot] and int(self.kv_lens[slot]) >= self.max_seq:
+                self._finish(slot, "length")
+
+    def _finish(self, slot: int, reason: str):
+        s = self._slots[slot]
+        for blk in s.table:
+            self.pool.release(blk)
+        self._tables[slot, :] = NULL_BLOCK
+        carry = self._preempt_carry.pop(s.uid, None)
+        super()._finish(slot, reason)
+        if carry:  # tokens generated before a preemption lead the final answer
+            g = self._results[s.uid]
+            self._results[s.uid] = Generation(g.uid, carry + g.tokens, g.finish_reason)
+
+    def step_chunk(self, steps: int | None = None) -> int:
+        """Admit; advance one prefill chunk per prefilling slot; run one
+        jitted decode chunk over the active slots. Returns #tokens emitted."""
+        self._admit()
+        for i, s in enumerate(self._slots):
+            if not s.free and s.prefilling:
+                self._prefill_step(i)
+        if self.num_active == 0:
+            return 0
+        steps = self._clamp_steps(steps)
+        self._reserve_chunk_blocks(steps)  # may preempt slots under pool pressure
+        if self.num_active == 0:
+            return 0
+        t0 = time.perf_counter()
+        out = self._jit_chunk(
+            self.params, self._pool_k, self._pool_v, jnp.asarray(self._tables),
+            jnp.asarray(self._tokens), jnp.asarray(self.kv_lens),
+            jnp.asarray(self._active), jnp.asarray(self._budget),
+            jnp.asarray(self._temperature), jnp.asarray(self._top_k),
+            jnp.asarray(self._top_p), self._key, steps=steps, sampler=self._pick_sampler(),
+        )
+        pk, pv, tokens, lens, active, budget, self._key, emitted, masks = out
+        jax.block_until_ready(emitted)
+        self.stats["decode_time"] += time.perf_counter() - t0
+        self._pool_k, self._pool_v = pk, pv
+        was_active = self._active
+        return self._absorb_chunk(tokens, lens, active, budget, emitted, masks, was_active)
+
+    # -------------------------------------------------------------- telemetry
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of submitted prompt tokens served from the prefix cache."""
+        return self.stats["prefix_hit_tokens"] / max(self.stats["prompt_tokens"], 1)
+
+    @property
+    def kv_pool_bytes(self) -> int:
+        return self._pool_k.nbytes + self._pool_v.nbytes
+
+    @property
+    def live_kv_tokens(self) -> int:
+        """Tokens of KV currently materialized for unfinished requests."""
+        total = 0
+        for i, s in enumerate(self._slots):
+            if s.free:
+                continue
+            total += s.filled if s.prefilling else int(self.kv_lens[i])
+        return total

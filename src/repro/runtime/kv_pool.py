@@ -1,0 +1,227 @@
+"""Paged KV-cache block pool: allocator, prefix index, copy-on-write rules.
+
+Host-side bookkeeping for the paged serving engine (DESIGN.md §3). The
+device side is one global pair of K/V arrays shaped
+``(L, num_blocks, KV, block_size, Dh)``; everything here manipulates *block
+ids* — small integers indexing that pool — and never touches device memory.
+
+Three cooperating pieces:
+
+  * ``BlockPool``   — free-list allocator with per-block reference counts and
+                      an LRU of *evictable* blocks (refcount 0 but still
+                      registered in the prefix index). ``alloc`` prefers the
+                      free list and falls back to evicting the
+                      least-recently-used cached block; blocks referenced by
+                      a live request are never evicted (DESIGN.md §3,
+                      block-table invariants I1–I4).
+  * prefix hashing  — ``chain_hashes`` folds a prompt into a rolling hash per
+                      token block: ``h_i = H(h_{i-1}, tokens_i)``. Chaining
+                      makes a block's hash identify the *entire prefix*
+                      through that block, so an index hit guarantees the
+                      cached KV is byte-for-byte what a fresh prefill would
+                      produce (DESIGN.md §3, prefix-hash scheme). The partial
+                      tail block is hashed too (over its actual tokens), so
+                      fully identical prompts share everything.
+  * copy-on-write   — the pool never writes; it adjudicates. Engines call
+                      ``writable(block)`` before appending KV into a block:
+                      a block with ``refcount > 1`` must be copied first
+                      (another request may append to the same offsets), a
+                      block with ``refcount == 1`` may be appended in place
+                      even when it is registered in the prefix index —
+                      appends land at offsets *beyond* the hashed token
+                      count, so the cached prefix stays intact (DESIGN.md §3,
+                      copy-on-write rules).
+"""
+
+from __future__ import annotations
+
+import zlib
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# Block id 0 is reserved as the *null block*: a garbage sink for gated device
+# writes (inactive slots, padded prefill rows) and the padding value of block
+# tables. It is never allocated, never registered, never read unmasked.
+NULL_BLOCK = 0
+
+
+class PoolExhausted(RuntimeError):
+    """No free block and nothing evictable — every block is held by a live
+    request. The engine surfaces this instead of silently corrupting KV."""
+
+
+def hash_block(prev_hash: int, tokens) -> int:
+    """Rolling block hash: fold ``tokens`` (one block's ids) onto the chain.
+
+    crc32 over the little-endian int64 bytes, seeded with the previous link —
+    deterministic across processes (unlike ``hash()``), cheap, and collision
+    risk is acceptable for a cache *index* whose payload is re-derivable.
+    """
+    buf = np.asarray(tokens, np.int64).tobytes()
+    return zlib.crc32(buf, prev_hash & 0xFFFFFFFF)
+
+
+def chain_hashes(prompt, block_size: int) -> list[tuple[int, int]]:
+    """Prompt -> [(chain_hash, tokens_in_block), ...] per block (tail included).
+
+    Full blocks carry ``block_size`` tokens; a trailing partial block carries
+    ``len(prompt) % block_size``. Two prompts produce the same hash at block i
+    iff they agree on every token through block i.
+    """
+    prompt = np.asarray(prompt, np.int64).reshape(-1)
+    out, h = [], 0
+    for start in range(0, len(prompt), block_size):
+        chunk = prompt[start : start + block_size]
+        h = hash_block(h, chunk)
+        out.append((h, len(chunk)))
+    return out
+
+
+@dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    evictions: int = 0
+    cow_copies: int = 0
+    hash_hits: int = 0
+    hash_misses: int = 0
+
+
+class BlockPool:
+    """Reference-counted block allocator with a prefix-cache index.
+
+    Invariants (DESIGN.md §3):
+      I1  every block is in exactly one of: free list, LRU (evictable), or
+          live (refcount >= 1);
+      I2  a block in the prefix index maps hash -> block with the hashed KV
+          materialized at offsets [0, hashed_tokens);
+      I3  eviction only takes refcount-0 blocks, LRU first;
+      I4  block 0 (NULL_BLOCK) is permanently reserved.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (one is the reserved null block), got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.refcount = np.zeros(num_blocks, np.int32)
+        self._free: deque[int] = deque(range(1, num_blocks))
+        # hash -> block id (full and partial prefix blocks)
+        self._index: dict[int, int] = {}
+        # block id -> hash (reverse map, for eviction / invalidation)
+        self._hash_of: dict[int, int] = {}
+        # evictable cached blocks, least-recently-used first
+        self._lru: OrderedDict[int, None] = OrderedDict()
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------ allocation
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_evictable(self) -> int:
+        return len(self._lru)
+
+    @property
+    def num_live(self) -> int:
+        return int((self.refcount > 0).sum())
+
+    def alloc(self) -> int:
+        """One exclusive (refcount-1) block; evicts the LRU cached block when
+        the free list is empty. Raises ``PoolExhausted`` when every block is
+        live — callers must treat that as back-pressure, not corruption."""
+        if self._free:
+            blk = self._free.popleft()
+        elif self._lru:
+            blk, _ = self._lru.popitem(last=False)  # least recently used
+            self._forget(blk)
+            self.stats.evictions += 1
+        else:
+            raise PoolExhausted(
+                f"all {self.num_blocks - 1} usable blocks are referenced by live requests"
+            )
+        assert blk != NULL_BLOCK and self.refcount[blk] == 0
+        self.refcount[blk] = 1
+        self.stats.allocs += 1
+        return blk
+
+    def retain(self, blk: int) -> None:
+        assert blk != NULL_BLOCK
+        assert self.refcount[blk] >= 1, f"retain of dead block {blk}"
+        self.refcount[blk] += 1
+
+    def release(self, blk: int) -> None:
+        """Drop one reference. At refcount 0 a registered block parks on the
+        LRU (still serving prefix hits); an unregistered one frees."""
+        assert blk != NULL_BLOCK
+        assert self.refcount[blk] >= 1, f"release of dead block {blk}"
+        self.refcount[blk] -= 1
+        if self.refcount[blk] == 0:
+            if blk in self._hash_of:
+                self._lru[blk] = None
+                self._lru.move_to_end(blk)
+            else:
+                self._free.append(blk)
+                self.stats.frees += 1
+
+    # ---------------------------------------------------------- prefix index
+
+    def lookup(self, h: int) -> int | None:
+        """Prefix-cache probe: on hit, retains the block (resurrecting it from
+        the LRU if it was parked) and returns its id; None on miss."""
+        blk = self._index.get(h)
+        if blk is None:
+            self.stats.hash_misses += 1
+            return None
+        self.stats.hash_hits += 1
+        if self.refcount[blk] == 0:
+            self._lru.pop(blk, None)
+            self.refcount[blk] = 1
+        else:
+            self.refcount[blk] += 1
+        return blk
+
+    def register(self, h: int, blk: int) -> None:
+        """Publish a (live) block under its chain hash. First writer wins —
+        re-registering an existing hash is a no-op so a published block is
+        never silently swapped out from under earlier sharers."""
+        assert self.refcount[blk] >= 1, "only live blocks can be registered"
+        if h in self._index:
+            return
+        # a block re-used after eviction may carry a stale reverse entry
+        old = self._hash_of.get(blk)
+        if old is not None and self._index.get(old) == blk:
+            del self._index[old]
+        self._index[h] = blk
+        self._hash_of[blk] = h
+
+    def _forget(self, blk: int) -> None:
+        h = self._hash_of.pop(blk, None)
+        if h is not None and self._index.get(h) == blk:
+            del self._index[h]
+
+    # --------------------------------------------------------- copy-on-write
+
+    def writable(self, blk: int) -> bool:
+        """True when the engine may append into ``blk`` in place: exactly one
+        reference. Shared blocks (refcount > 1) must be copied first —
+        ``fork()`` hands out the replacement id; the engine performs the
+        device copy."""
+        assert self.refcount[blk] >= 1
+        return self.refcount[blk] == 1
+
+    def fork(self, blk: int) -> int:
+        """Copy-on-write bookkeeping: allocate a private replacement for the
+        shared block ``blk`` and drop our reference to the original. The
+        caller must copy the device payload old -> new before writing."""
+        assert self.refcount[blk] > 1, f"fork of unshared block {blk}"
+        new = self.alloc()
+        self.release(blk)
+        self.stats.cow_copies += 1
+        return new

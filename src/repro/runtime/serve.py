@@ -73,16 +73,20 @@ def cache_shardings(cfg, mesh, cache_struct):
 
 
 def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
-             sampling=None, eos_id=None, seed: int = 0):
+             sampling=None, eos_id=None, seed: int = 0, paged: bool = False,
+             block_size: int = 16, prefill_chunk: int = 32):
     """Batched generation driver (example/tests scale).
 
     Attention token decoders (dense/moe) route through the continuous-batching
     engine (``runtime.engine``): each prompt row becomes a request, all rows
     decode through one jitted ragged step, and ``sampling`` (a
     ``sampling.SamplingParams`` or a per-row list of them) selects greedy /
-    temperature / top-k / top-p per request. Other families keep the
-    rectangular greedy loop — ssm/hybrid/audio caches have no ragged
-    sequence axis for slots to share, and vlm needs per-request
+    temperature / top-k / top-p per request. ``paged=True`` swaps in the
+    block-paged engine (``runtime.engine.PagedEngine``): shared-prefix rows
+    reuse cached KV blocks and long prompts prefill in ``prefill_chunk``-token
+    chunks (DESIGN.md §3) — greedy outputs are identical to the slot engine.
+    Other families keep the rectangular greedy loop — ssm/hybrid/audio caches
+    have no ragged sequence axis for slots to share, and vlm needs per-request
     vision_embeds plumbing the engine's prefill doesn't have yet.
 
     Returns (B, <= max_new) int32; rows are right-padded with ``eos_id`` (or 0)
@@ -92,7 +96,7 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
     """
     B, S = prompt_tokens.shape
     if cfg.family in ("dense", "moe") and cfg.frontend is None and cache is None:
-        from repro.runtime.engine import Engine
+        from repro.runtime.engine import Engine, PagedEngine
         from repro.runtime.sampling import GREEDY, SamplingParams
 
         if sampling is None:
@@ -102,8 +106,13 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
             raise ValueError(f"sampling list has {len(per_row)} entries for batch of {B}")
         if not all(isinstance(p, SamplingParams) for p in per_row):
             raise ValueError("sampling entries must be SamplingParams")
-        eng = Engine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
-                     eos_id=eos_id, seed=seed)
+        if paged:
+            eng = PagedEngine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
+                              eos_id=eos_id, seed=seed, block_size=block_size,
+                              prefill_chunk=prefill_chunk)
+        else:
+            eng = Engine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
+                         eos_id=eos_id, seed=seed)
         uids = [eng.submit(np.asarray(prompt_tokens[b]), max_new, per_row[b]) for b in range(B)]
         results = eng.run()
         pad = eos_id if eos_id is not None else 0
@@ -113,10 +122,10 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
             out[b, : len(toks)] = toks
         return jnp.asarray(out)
 
-    if sampling is not None or eos_id is not None:
+    if sampling is not None or eos_id is not None or paged:
         raise ValueError(
-            f"sampling/eos_id require the engine path (dense/moe, no explicit cache); "
-            f"the rectangular loop for family={cfg.family!r} is greedy-only"
+            f"sampling/eos_id/paged require the engine path (dense/moe, no explicit cache); "
+            f"the rectangular loop for family={cfg.family!r} is greedy-only and unpaged"
         )
     prefill, decode = make_serve_fns(cfg, qstate)
     if cache is None:

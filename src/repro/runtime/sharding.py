@@ -195,6 +195,24 @@ def slot_cache_spec(cfg, mesh: Mesh) -> P:
     return P(None, dp, None, "model", None)
 
 
+def block_pool_spec(cfg, mesh: Mesh) -> P:
+    """Paged-engine block pool (L, num_blocks, KV, block_size, Dh).
+
+    Unlike the slot cache there is no batch-like axis to hand to DP: blocks
+    are a *global* pool shared by every request (that sharing is the whole
+    point — DESIGN.md §3), so the block axis stays unsharded and each data
+    shard would run its own engine+pool instead. Within the pool the usual TP
+    policy applies to kv-heads when divisible. The in-block sequence axis
+    (block_size tokens) is too small to shard — sequence parallelism at the
+    paged layer happens by *distributing whole blocks*, whose partial EXAQ
+    histograms combine exactly (§2); that layout is future work and needs no
+    new spec here."""
+    tp = model_axis_size(mesh)
+    if cfg.num_kv_heads and _div(cfg.num_kv_heads, tp):
+        return P(None, None, "model", None, None)
+    return P(None, None, None, None, None)
+
+
 def ssm_cache_specs(cfg, mesh: Mesh) -> dict[str, P]:
     dp = data_axes(mesh)
     tp = model_axis_size(mesh)

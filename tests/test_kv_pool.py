@@ -1,0 +1,151 @@
+"""BlockPool unit suite: allocation, refcounts, prefix hashing, CoW, eviction
+(runtime/kv_pool; DESIGN.md §3 invariants I1-I4)."""
+
+import numpy as np
+import pytest
+
+from repro.runtime.kv_pool import (
+    NULL_BLOCK,
+    BlockPool,
+    PoolExhausted,
+    chain_hashes,
+    hash_block,
+)
+
+
+# ------------------------------------------------------------------- hashing
+
+def test_chain_hashes_deterministic_and_block_aligned():
+    prompt = list(range(37))
+    hs = chain_hashes(prompt, 8)
+    assert [n for _, n in hs] == [8, 8, 8, 8, 5]  # 4 full blocks + partial tail
+    assert hs == chain_hashes(prompt, 8)  # process-independent (crc, not hash())
+
+
+def test_chain_hashes_prefix_property():
+    """Equal prefixes hash equal through the last shared block; the first
+    divergent block (and everything after) differs."""
+    a = list(range(32))
+    b = list(range(24)) + [99] * 8
+    ha, hb = chain_hashes(a, 8), chain_hashes(b, 8)
+    assert ha[:3] == hb[:3]
+    assert ha[3] != hb[3]
+    # chaining: same block tokens after divergent history still differ
+    c = [99] * 8 + list(range(8, 32))
+    hc = chain_hashes(c, 8)
+    assert all(x != y for x, y in zip(ha, hc))
+
+
+def test_hash_block_seeds_chain():
+    assert hash_block(0, [1, 2, 3]) != hash_block(1, [1, 2, 3])
+
+
+# --------------------------------------------------------------- allocation
+
+def test_alloc_release_refcount_roundtrip():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    assert pool.num_free == 3  # block 0 reserved
+    a = pool.alloc()
+    assert a != NULL_BLOCK and pool.refcount[a] == 1
+    pool.retain(a)
+    assert pool.refcount[a] == 2
+    pool.release(a)
+    assert pool.num_free == 2  # still live
+    pool.release(a)
+    assert pool.num_free == 3  # unregistered block frees immediately
+
+
+def test_alloc_exhaustion_raises():
+    pool = BlockPool(num_blocks=3, block_size=8)
+    pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+
+
+def test_pool_validates_args():
+    with pytest.raises(ValueError):
+        BlockPool(num_blocks=1, block_size=8)  # no room beyond the null block
+    with pytest.raises(ValueError):
+        BlockPool(num_blocks=4, block_size=0)
+
+
+# ------------------------------------------------------------- prefix index
+
+def test_register_lookup_retains_and_survives_release():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    b = pool.alloc()
+    pool.register(1234, b)
+    pool.release(b)  # registered -> parks on LRU, not the free list
+    assert pool.num_free == 2 and pool.num_evictable == 1
+    got = pool.lookup(1234)
+    assert got == b and pool.refcount[b] == 1  # resurrected + retained
+    assert pool.num_evictable == 0
+    assert pool.lookup(9999) is None
+
+
+def test_register_first_writer_wins():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    b1, b2 = pool.alloc(), pool.alloc()
+    pool.register(7, b1)
+    pool.register(7, b2)  # concurrent identical prompts: no-op, b1 stays published
+    assert pool.lookup(7) == b1
+
+
+def test_lru_eviction_order_and_live_protection():
+    """alloc() under pressure evicts the least-recently-used cached block and
+    never touches blocks still referenced by live requests (invariant I3)."""
+    pool = BlockPool(num_blocks=4, block_size=8)
+    a, b, c = pool.alloc(), pool.alloc(), pool.alloc()
+    pool.register(1, a)
+    pool.register(2, b)
+    pool.release(a)
+    pool.release(b)  # LRU order: a then b; c stays live
+    d = pool.alloc()  # must evict a (oldest), not live c
+    assert d == a
+    assert pool.lookup(1) is None  # a's index entry gone
+    assert pool.lookup(2) == b  # b resurrected
+    pool.release(b)
+    pool.release(c)
+    pool.release(d)
+
+
+def test_eviction_blocked_while_all_shared():
+    pool = BlockPool(num_blocks=3, block_size=8)
+    a = pool.alloc()
+    pool.register(5, a)
+    pool.retain(a)  # shared between two live requests
+    b = pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()  # a is registered but live -> not evictable
+    pool.release(a)
+    with pytest.raises(PoolExhausted):
+        pool.alloc()  # still one live ref
+    pool.release(a)  # now parked on LRU
+    assert pool.alloc() == a  # evictable again
+    pool.release(b)
+
+
+# -------------------------------------------------------------------- CoW
+
+def test_writable_and_fork_semantics():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    a = pool.alloc()
+    assert pool.writable(a)  # exclusive: append in place
+    pool.retain(a)
+    assert not pool.writable(a)  # shared: must fork
+    new = pool.fork(a)
+    assert new != a and pool.refcount[new] == 1
+    assert pool.refcount[a] == 1  # our ref moved to the fork
+    assert pool.stats.cow_copies == 1
+
+
+def test_fork_of_registered_block_keeps_cache_entry():
+    pool = BlockPool(num_blocks=4, block_size=8)
+    a = pool.alloc()
+    pool.register(11, a)
+    pool.retain(a)  # a second request shares the cached tail
+    new = pool.fork(a)
+    assert pool.lookup(11) == a  # original still serves prefix hits
+    pool.release(a)  # lookup's retain
+    pool.release(a)  # original owner
+    pool.release(new)

@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Docs consistency gate (CI `docs` job).
+
+Two checks, both cheap and dependency-free:
+
+  1. Internal markdown links in README.md / DESIGN.md / ROADMAP.md resolve to
+     files that exist in the repo (http(s) links are skipped; #anchors are
+     stripped before the existence check).
+  2. Every `DESIGN.md §X` citation in Python docstrings/comments (src/, tests/,
+     benchmarks/, examples/) and in README.md names a section that actually
+     exists as a `## §X` / `### §X` header in DESIGN.md — and is not reserved.
+     DESIGN.md's preamble promises stable section numbers; this keeps the code
+     honest about it.
+
+Exit status 0 = clean; 1 = problems (each printed on its own line).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+MD_FILES = ["README.md", "DESIGN.md", "ROADMAP.md"]
+CODE_DIRS = ["src", "tests", "benchmarks", "examples", "tools"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADER_RE = re.compile(r"^#{2,3}\s+(§\S+)(.*)$", re.M)
+CITE_RE = re.compile(r"DESIGN\.md(?:\s+)?([^\n]*)")
+SECTION_TOKEN_RE = re.compile(r"§([A-Za-z][\w]*|[\d.]+)")
+
+
+def design_sections(design_text: str) -> tuple[set[str], set[str]]:
+    """-> (citable section names, reserved section names), '§' stripped.
+
+    A header like '## §6–§7 (reserved)' defines 6 and 7, both reserved.
+    Subsections (### §5.4) are citable; so are word sections (§Serving).
+    """
+    citable, reserved = set(), set()
+    for m in HEADER_RE.finditer(design_text):
+        head, rest = m.group(1), m.group(2)
+        names = [t.rstrip(".") for t in SECTION_TOKEN_RE.findall(head + rest.split("\n")[0])]
+        is_reserved = "reserved" in (head + rest).lower()
+        # expand ranges like §6–§7
+        if len(names) == 2 and all(n.isdigit() for n in names) and ("–" in head or "-" in head):
+            names = [str(i) for i in range(int(names[0]), int(names[1]) + 1)]
+        for n in names:
+            (reserved if is_reserved else citable).add(n)
+    return citable, reserved
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in MD_FILES:
+        path = ROOT / md
+        if not path.exists():
+            errors.append(f"{md}: file missing")
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                rel = target.split("#")[0]
+                if not rel:  # pure-anchor link into the same file
+                    continue
+                if not (ROOT / rel).exists():
+                    errors.append(f"{md}:{i}: broken link -> {target}")
+    return errors
+
+
+def check_design_citations() -> list[str]:
+    design = (ROOT / "DESIGN.md").read_text()
+    citable, reserved = design_sections(design)
+    errors = []
+    files = [ROOT / "README.md"]
+    for d in CODE_DIRS:
+        files.extend(sorted((ROOT / d).rglob("*.py")))
+    for path in files:
+        if path == Path(__file__).resolve():
+            continue
+        text = path.read_text()
+        for i, line in enumerate(text.splitlines(), 1):
+            for tail in CITE_RE.findall(line):
+                for name in SECTION_TOKEN_RE.findall(tail):
+                    name = name.rstrip(".")
+                    if name in citable:
+                        continue
+                    rel = path.relative_to(ROOT)
+                    if name in reserved:
+                        errors.append(f"{rel}:{i}: cites reserved DESIGN.md §{name}")
+                    else:
+                        errors.append(f"{rel}:{i}: cites missing DESIGN.md §{name}")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_design_citations()
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"FAIL: {len(errors)} docs problem(s)")
+        return 1
+    print("docs OK: links resolve, every DESIGN.md § citation exists")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
