@@ -16,6 +16,13 @@ softmax is included as directional evidence (CPU backend; documented caveat).
 Figure 1 is reproduced analytically: per-op time shares for LLaMA-2-7B-class
 decode under a v5e bandwidth/compute model, with GEMMs in BF16 — showing
 softmax as a major non-GEMM cost once attention GEMMs are fast.
+
+The paged-decode section extends the same analytic treatment to the serving
+runtime (DESIGN.md §3, fused paged decode): per-step HBM KV bytes for a
+LLaMA-7B-class paged decode batch, gather-then-read vs the fused Pallas
+kernel's direct pool reads, swept over occupancy — the bandwidth the fused
+kernel deletes is the term that dwarfed the softmax win the rest of this
+file measures.
 """
 
 from __future__ import annotations
@@ -93,6 +100,30 @@ def figure1(seq: int = 4096, d_model: int = 4096, n_heads: int = 32, d_ff: int =
     return {k: round(100 * v / tot, 1) for k, v in t.items()}
 
 
+def paged_decode_bytes(slots: int = 32, max_seq: int = 4096, block_size: int = 16,
+                       kv_heads: int = 32, head_dim: int = 128, layers: int = 32,
+                       occupancies=(0.25, 0.5, 1.0)):
+    """Per-decode-step HBM KV bytes for a LLaMA-7B-class paged batch: the
+    gather path's 3 rectangular passes vs the fused kernel's live-block
+    reads, swept over mean occupancy (DESIGN.md §3)."""
+    from repro.kernels.exaq_paged_attention import paged_decode_bytes_model
+
+    mb = max_seq // block_size
+    rows = []
+    for occ in occupancies:
+        lens = np.full((slots,), int(occ * max_seq), np.int64)
+        m = paged_decode_bytes_model(slots=slots, kv_heads=kv_heads, max_blocks=mb,
+                                     block_size=block_size, head_dim=head_dim,
+                                     kv_lens=lens, dtype_bytes=2)
+        rows.append({
+            "occupancy": occ,
+            "gather_gb_per_step": round(layers * m["gather_then_read_bytes"] / 1e9, 2),
+            "fused_gb_per_step": round(layers * m["fused_pool_read_bytes"] / 1e9, 2),
+            "reduction_x": round(m["bytes_reduction_x"], 2),
+        })
+    return rows
+
+
 def main():
     print("Table 3 (cycle model, N=4096):")
     for r in table3():
@@ -100,7 +131,13 @@ def main():
     wc = wallclock()
     print(f"wall-clock (XLA-CPU, informational): exact={wc['exact_us']:.0f}us exaq={wc['exaq_us']:.0f}us")
     print("Figure 1 (analytic decode op shares, %):", figure1())
-    return {"table3": table3(), "wallclock": wc, "figure1": figure1()}
+    pdb_rows = paged_decode_bytes()
+    print("paged decode KV bytes/step (LLaMA-7B-class, 32 slots x 4k seq):")
+    for r in pdb_rows:
+        print(f"  occupancy {int(100*r['occupancy'])}%: gather {r['gather_gb_per_step']} GB "
+              f"-> fused {r['fused_gb_per_step']} GB ({r['reduction_x']}x less)")
+    return {"table3": table3(), "wallclock": wc, "figure1": figure1(),
+            "paged_decode_bytes": pdb_rows}
 
 
 if __name__ == "__main__":

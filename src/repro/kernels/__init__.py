@@ -1,5 +1,19 @@
 """Pallas TPU kernels for EXAQ hot spots + jnp oracles and jit wrappers."""
 
-from repro.kernels.ops import decode_attention, exaq_attention, exaq_softmax
+from repro.kernels.ops import (
+    decode_attention,
+    exaq_attention,
+    exaq_softmax,
+    gather_block_kv,
+    paged_decode_attention,
+    repeat_kv,
+)
 
-__all__ = ["decode_attention", "exaq_attention", "exaq_softmax"]
+__all__ = [
+    "decode_attention",
+    "exaq_attention",
+    "exaq_softmax",
+    "gather_block_kv",
+    "paged_decode_attention",
+    "repeat_kv",
+]

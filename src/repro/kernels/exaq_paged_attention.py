@@ -1,0 +1,262 @@
+"""Pallas TPU kernel: fused paged-decode attention with EXAQ softmax.
+
+The serving hot path this kernel deletes (DESIGN.md §3, fused paged decode):
+``gather_block_kv`` materializes a dense ``(slots, KV, max_blocks*bs, Dh)``
+copy of every slot's KV window in HBM each decode step — the pool is read
+once to build the copy, the copy is written, then read again by attention.
+Three rectangular passes of bandwidth to feed a softmax whose whole point
+(paper §4, Table 3) is to be cheaper than a memcpy.
+
+Here the block table drives the DMA directly: the grid is
+``(slot, kv_head, chunk)`` and the K/V BlockSpec index maps read the
+*scalar-prefetched* block table, so each grid step pulls one pool block
+``tables[slot, chunk]`` from HBM into VMEM at its natural layout — no
+intermediate copy exists. Dead-tail chunks (``chunk * bs >= kv_lens[slot]``)
+are remapped to the null block (id 0); consecutive identical indices collapse
+to a single DMA, so bytes moved track *live* tokens, not table width.
+
+Chunk-combine semantics are the global grid of ``exaq_softmax_chunked``
+(exact Algo. 2, DESIGN.md §2): the chunk axis runs two passes over the
+table — pass 1 reduces the global row max across live chunks, pass 2
+re-reads K, quantizes every chunk's scores on the grid anchored at that max,
+and accumulates the PV numerator plus the 2^M-bin histogram denominator.
+Counts on a shared grid add exactly across chunks, so block boundaries are
+invisible to the softmax and the kernel is bit-comparable to the
+gather-then-dispatch reference (``kernels.ops.paged_decode_attention`` with
+``use_kernel=False``) instead of only statistically close like the online
+running-max kernels. V is fetched in pass 2 only (its pass-1 index map pins
+the null block), so the fused path moves ~2x K + 1x V of *live* window bytes
+versus the gather path's live pool read plus two rectangular passes over the
+dense copy (see ``paged_decode_bytes_model``).
+
+GQA is native: q is laid out ``(slots, KV, group, Dh)`` so one kv head's
+query group forms the q-block rows — K/V are never repeated ``group`` times
+in memory (the repeat the unfused path pays via ``repeat_kv``).
+
+Layouts: q ``(S, H, 1, Dh)``; pool_k/pool_v ``(N, KV, bs, Dh)``;
+block_tables ``(S, MB)`` int32; kv_lens ``(S,)`` int32. Compiled-mode tiling
+wants ``bs`` a multiple of 8 and ``Dh`` lane-padded (both hold for production
+shapes; tests run interpret mode where any shape goes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_BIG = -1e30
+_LANES = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _paged_decode_kernel(
+    tables_ref,
+    lens_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    bs: int,
+    mb: int,
+    block_q: int,
+    levels: int,
+    clip: float,
+    lut: tuple[float, ...],
+    scale: float,
+):
+    """Grid (S, KV, 2*MB): chunks 0..MB-1 are the max pass, MB..2*MB-1 the
+    quantize+accumulate pass. Scratch (m, l, acc) carries across the chunk
+    axis; the BlockSpec index maps (not this body) steer the pool DMA."""
+    slot = pl.program_id(0)
+    j = pl.program_id(2)
+    t = j % mb  # table entry this step touches (same in both passes)
+    kv_len = lens_ref[slot]
+    live = t * bs < kv_len
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    col = t * bs + jax.lax.broadcasted_iota(jnp.int32, (block_q, bs), 1)
+    valid = col < kv_len
+
+    def _scores():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        return jnp.where(valid, s, _NEG_BIG)
+
+    @pl.when((j < mb) & live)
+    def _max_pass():
+        s = _scores()
+        m_ref[...] = jnp.maximum(m_ref[...], jnp.max(s, axis=-1, keepdims=True))
+
+    @pl.when((j >= mb) & live)
+    def _acc_pass():
+        s = _scores()
+        m = m_ref[:, :1]  # global row max from pass 1 — shared quantization grid
+        inv_delta = levels / (-clip)
+        codes = jnp.clip(jnp.floor((s - m - clip) * inv_delta), 0, levels - 1).astype(jnp.int32)
+        # LUT as a select chain (VPU-friendly; gathers would leave the vector unit)
+        e = jnp.full(s.shape, lut[0], jnp.float32)
+        for kk in range(1, levels):
+            e = jnp.where(codes == kk, lut[kk], e)
+        e = jnp.where(valid, e, 0.0)
+        # chunk-partial histogram denominator: integer counts on the shared
+        # grid add exactly across chunks (DESIGN.md §2) — no rescale needed
+        dden = jnp.zeros((block_q, 1), jnp.float32)
+        for kk in range(levels):
+            cnt = jnp.sum(jnp.where(valid & (codes == kk), 1, 0).astype(jnp.int32),
+                          axis=-1, keepdims=True)
+            dden = dden + cnt.astype(jnp.float32) * lut[kk]
+        l_ref[...] = l_ref[...] + dden
+        acc_ref[...] += jax.lax.dot_general(
+            e, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == 2 * mb - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30))[None, None].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "scale", "interpret"),
+)
+def exaq_paged_decode_attention(
+    q: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    kv_lens: jnp.ndarray,
+    params,
+    scale: float,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused paged-decode EXAQ attention over a block pool.
+
+    q: (S, H, 1, D); pool_k/pool_v: (N, KV, bs, D); block_tables: (S, MB)
+    int32 block ids (null-block padded); kv_lens: (S,) live tokens per slot.
+    Returns (S, H, 1, D) fp32. Global-grid (exact Algo. 2) semantics.
+    """
+    S, H, one, D = q.shape
+    assert one == 1
+    N, KV, bs, _ = pool_k.shape
+    MB = block_tables.shape[1]
+    group = H // KV
+    q = q.reshape(S, KV, group, D)
+    block_q = _round_up(max(group, 8), 8)
+    if block_q != group:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, block_q - group), (0, 0)))
+    d_pad = _round_up(max(D, _LANES), _LANES)
+    if d_pad != D:
+        # production head dims are lane-aligned; the pad only fires on the
+        # small shapes tests use (interpret mode), never on the serving path
+        pad = ((0, 0), (0, 0), (0, 0), (0, d_pad - D))
+        q = jnp.pad(q, pad)
+        pool_k = jnp.pad(pool_k, pad)
+        pool_v = jnp.pad(pool_v, pad)
+
+    tables = block_tables.astype(jnp.int32)
+    lens = kv_lens.astype(jnp.int32)
+    lut = tuple(float(x) for x in params.lut_np())
+
+    def _k_index(s, h, j, tbl, lns):
+        # dead tail -> null block; consecutive identical indices are a
+        # single DMA, so dead chunks cost ~nothing
+        t = j % MB
+        return (jnp.where(t * bs < lns[s], tbl[s, t], 0), h, 0, 0)
+
+    def _v_index(s, h, j, tbl, lns):
+        # V is only consumed by the accumulate pass; pin the max pass (and
+        # dead chunks) to the null block so V moves over HBM exactly once
+        t = j % MB
+        return (jnp.where((j >= MB) & (t * bs < lns[s]), tbl[s, t], 0), h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(S, KV, 2 * MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d_pad), lambda s, h, j, tbl, lns: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d_pad), _k_index),
+            pl.BlockSpec((1, 1, bs, d_pad), _v_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d_pad), lambda s, h, j, tbl, lns: (s, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, d_pad), jnp.float32),
+        ],
+    )
+    kern = functools.partial(
+        _paged_decode_kernel,
+        bs=bs, mb=MB, block_q=block_q,
+        levels=params.levels, clip=float(params.clip), lut=lut, scale=float(scale),
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((S, KV, block_q, d_pad), jnp.float32),
+        # only the chunk axis carries scratch state; (slot, kv_head) programs
+        # are independent and may partition across cores
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(tables, lens, q, pool_k, pool_v)
+    return out[:, :, :group, :D].reshape(S, H, 1, D)
+
+
+def paged_decode_bytes_model(
+    *,
+    slots: int,
+    kv_heads: int,
+    max_blocks: int,
+    block_size: int,
+    head_dim: int,
+    kv_lens,
+    dtype_bytes: int = 2,
+) -> dict:
+    """Modeled HBM KV bytes per decode step per layer: gather vs fused.
+
+    gather_then_read: ``gather_block_kv`` reads each slot's *live* blocks
+    from the pool (dead tails clamp to the null block), writes the dense
+    rectangular per-slot copy, and attention reads the copy back — so
+    (live + 2 x rect) passes over each of K and V. fused_pool_read: the
+    kernel touches only live blocks — K twice (max pass + accumulate
+    pass), V once. Pure arithmetic so benchmarks and tests can assert the
+    >= 2x bandwidth win without hardware counters.
+    """
+    import numpy as np
+
+    kv_lens = np.asarray(kv_lens)
+    block_bytes = kv_heads * block_size * head_dim * dtype_bytes
+    rect_blocks = slots * max_blocks
+    live_blocks = int(np.sum(-(-kv_lens // block_size)))
+    gather = (live_blocks + 2 * rect_blocks) * 2 * block_bytes  # (read live + write/read rect) x (K+V)
+    fused = live_blocks * (2 + 1) * block_bytes                 # 2x K + 1x V, live only
+    return {
+        "gather_then_read_bytes": int(gather),
+        "fused_pool_read_bytes": int(fused),
+        "bytes_reduction_x": gather / max(fused, 1),
+        "live_blocks": live_blocks,
+        "rect_blocks": int(rect_blocks),
+        "block_bytes": int(block_bytes),
+    }

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core.quantizer import QuantParams
 from repro.kernels import ref
 from repro.kernels.exaq_attention import exaq_decode_attention, flash_exaq_attention
+from repro.kernels.exaq_paged_attention import exaq_paged_decode_attention
 from repro.kernels.exaq_softmax import exaq_softmax_pallas
 
 # Rows longer than this take the chunked path (fp32 row bytes vs ~16 MiB VMEM).
@@ -174,14 +175,24 @@ def decode_attention(
     return exaq_decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, interpret=on_cpu())
 
 
+def repeat_kv(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """Broadcast kv heads to the query-head count for GQA: (…, KV, S, Dh) ->
+    (…, KV*group, S, Dh). The ONE shared implementation — model paths and
+    kernel references both route here; fused kernels avoid the repeat
+    entirely via kv-index maps / grouped-q layouts, so any call to this is
+    a materialized group-factor copy worth engineering away."""
+    if group == 1:
+        return x
+    return jnp.repeat(x, group, axis=1)
+
+
 def _repeat_kv(q, k, v):
     group = q.shape[1] // k.shape[1]
-    if group == 1:
-        return k, v
-    return jnp.repeat(k, group, axis=1), jnp.repeat(v, group, axis=1)
+    return repeat_kv(k, group), repeat_kv(v, group)
 
 
-def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.ndarray):
+def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.ndarray,
+                    kv_lens: jnp.ndarray | None = None):
     """Assemble per-slot contiguous KV from a paged block pool (DESIGN.md §3).
 
     pool_{k,v}: (N, KV, bs, Dh) global block pool; block_tables: (S, MB) int32
@@ -191,10 +202,24 @@ def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.
     ``kv_lens``. Table padding (the null block, id 0) gathers garbage that the
     length mask excludes.
 
-    The gather materializes each slot's window once per layer — the same
-    transient the slot engine's per-slot cache view costs; a future Pallas
-    paged-decode kernel would stream blocks through VMEM instead.
+    ``kv_lens`` (S,) live tokens per slot, when given, clamps each slot's
+    table to its live block count (ceil(len/bs)): dead-tail entries are
+    redirected to the null block before the gather, so the reference path
+    reads each slot's live blocks plus one shared null block instead of the
+    full rectangular table (shapes stay static — the clamp is a ``where``,
+    not a slice, so it works under jit with traced lengths). Results are
+    unchanged: dead-tail lanes were always masked out by the caller.
+
+    The gather still materializes each slot's window once per layer; the
+    fused kernel (``kernels/exaq_paged_attention.py``) streams blocks
+    through VMEM instead and is the serving hot path. This stays as the
+    interpret-mode / oracle reference.
     """
+    if kv_lens is not None:
+        MB = block_tables.shape[1]
+        bs = pool_k.shape[2]
+        live = jnp.arange(MB, dtype=jnp.int32)[None, :] * bs < kv_lens.astype(jnp.int32)[:, None]
+        block_tables = jnp.where(live, block_tables, 0)  # 0 == kv_pool.NULL_BLOCK
 
     def g(pool):
         b = pool[block_tables]  # (S, MB, KV, bs, Dh)
@@ -219,13 +244,25 @@ def paged_decode_attention(
 ) -> jnp.ndarray:
     """Decode attention over a block-paged KV cache with EXAQ softmax.
 
-    Gather via the block table, then the existing EXAQ histogram dispatch:
-    the quantization grid is anchored at the global row max, so per-block
-    partial counts add exactly and paging composes with the DESIGN.md §2
-    combine — block boundaries are invisible to the softmax.
+    ``use_kernel=True`` (the serving hot path) dispatches the fused Pallas
+    kernel (``kernels/exaq_paged_attention.py``): block-table-indexed K/V
+    DMA straight from the pool, EXAQ quantize + LUT accumulation in VMEM,
+    and the two-pass global-grid chunk combine — no dense KV copy ever
+    exists in HBM. On CPU the same kernel runs in interpret mode.
+
+    ``use_kernel=False`` keeps the gather-then-dispatch reference: assemble
+    each slot's window (live blocks only — dead tails clamp to the null
+    block) and run the global-grid jnp path. Both anchor the quantization
+    grid at the global row max, so per-block partial counts add exactly and
+    paging composes with the DESIGN.md §2 combine — block boundaries are
+    invisible to the softmax, and the two paths agree to fp32 roundoff.
 
     q: (S, H, 1, Dh); pool_{k,v}: (N, KV, bs, Dh); block_tables: (S, MB);
     kv_lens: (S,) live positions per slot -> (S, H, 1, Dh).
     """
-    k, v = gather_block_kv(pool_k, pool_v, block_tables)
-    return decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, use_kernel=use_kernel)
+    if use_kernel:
+        return exaq_paged_decode_attention(
+            q, pool_k, pool_v, block_tables, kv_lens, params, scale, interpret=on_cpu()
+        )
+    k, v = gather_block_kv(pool_k, pool_v, block_tables, kv_lens)
+    return decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, use_kernel=False)

@@ -8,7 +8,9 @@ Attention token decoders (dense/moe) run through ``runtime.engine`` — ragged
 prompt lengths, slot refill, per-request sampling, one jitted decode step for
 all active slots. ``--paged`` swaps in the block-paged engine (DESIGN.md §3):
 a global KV block pool with shared-prefix reuse and chunked prefill
-(``--block-size`` / ``--prefill-chunk`` / ``--num-blocks`` tune it); with
+(``--block-size`` / ``--prefill-chunk`` / ``--num-blocks`` tune it;
+``--fused`` / ``--no-fused`` pick the fused Pallas paged-decode kernel vs
+the gather-then-dispatch reference for decode attention); with
 ``--shared-prefix N`` every request opens with the same N-token system
 prompt, so the printed prefix-cache hit rate shows the reuse win. Other
 families fall back to the rectangular greedy loop in
@@ -53,9 +55,16 @@ def main():
                     help="prompt tokens prefilled per interleaved chunk (paged)")
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="pool size in blocks; 0 = full provisioning (paged)")
+    ap.add_argument("--fused", dest="fused", action="store_true", default=None,
+                    help="paged decode: fused Pallas paged-decode kernel (no HBM KV "
+                         "gather; needs --impl exaq)")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    help="paged decode: force the gather-then-dispatch reference")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend the same N-token system prompt to every request")
     args = ap.parse_args()
+    if args.fused is not None and not args.paged:
+        raise SystemExit("--fused/--no-fused select the paged decode path; add --paged")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -83,7 +92,7 @@ def main():
             eng = PagedEngine(cfg, params, max_slots=args.slots, max_seq=max_seq,
                               eos_id=eos, seed=args.seed, block_size=args.block_size,
                               prefill_chunk=args.prefill_chunk,
-                              num_blocks=args.num_blocks or None)
+                              num_blocks=args.num_blocks or None, fused=args.fused)
         else:
             eng = Engine(cfg, params, max_slots=args.slots, max_seq=max_seq,
                          eos_id=eos, seed=args.seed)

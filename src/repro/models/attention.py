@@ -24,6 +24,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.ops import repeat_kv as _repeat_kv
 from repro.models.layers import apply_rope, rmsnorm, truncated_normal_init
 from repro.runtime.sharding import shard_activation
 
@@ -127,12 +128,6 @@ def _project_qkv(params, x, cfg, positions, rope: bool):
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     return q, k, v
-
-
-def _repeat_kv(k, group):
-    if group == 1:
-        return k
-    return jnp.repeat(k, group, axis=1)
 
 
 def blocked_attention(
@@ -395,11 +390,20 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
     RoPE-rotated at ``lens[b]`` and scattered into block
     ``block_tables[b, lens[b] // bs]`` at offset ``lens[b] % bs``; inactive
     slots scatter to the reserved null block (id 0) so a freed slot can never
-    corrupt blocks that were recycled to another request. Attention gathers
-    each slot's blocks back into table order (``kernels.ops.gather_block_kv``)
-    and then runs the exact same EXAQ histogram dispatch as the ragged path —
-    the grid is anchored at the global row max, so per-block partial counts
-    add exactly (§2 combine; block boundaries are invisible to the softmax).
+    corrupt blocks that were recycled to another request.
+
+    Attention dispatch (DESIGN.md §3, fused paged decode): with
+    ``use_fused_kernel`` + exaq the fused Pallas kernel reads K/V blocks
+    straight from the pool via the scalar-prefetched block table — the dense
+    per-slot KV copy the gather materializes never exists. Otherwise the
+    gather-then-dispatch reference runs: assemble each slot's live blocks
+    (``kernels.ops.gather_block_kv`` with ``kv_lens`` clamping dead tails to
+    the null block) and apply the EXAQ histogram softmax. Both anchor the
+    quantization grid at the global row max, so per-block partial counts add
+    exactly (§2 combine; block boundaries are invisible to the softmax) and
+    the two paths agree to fp32 roundoff — under the same clip: the fused
+    kernel folds the default-sigma clip as a compile-time constant, so a
+    *calibrated* per-layer qstate is honored by the gather path only.
 
     x: (S, 1, D); pool_{k,v}: (N, KV, bs, Dh); block_tables: (S, MB) int32;
     lens: (S,) int32; active: (S,) bool.
@@ -419,6 +423,10 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
     kv_lens = lens.astype(jnp.int32) + 1
     dh = cfg.resolved_head_dim
     if statics.use_fused_kernel and statics.impl == "exaq":
+        # static clip from the default sigma, like the fused ragged/prefill
+        # paths: the kernel's clip/LUT are compile-time immediates, so
+        # calibrated per-layer *traced* clips stay on the gather/jnp path —
+        # fused-vs-gather parity holds for the default qstate only
         from repro.core.quantizer import exaq_params
         from repro.kernels import ops
 
@@ -427,7 +435,7 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
     else:
         from repro.kernels.ops import gather_block_kv
 
-        kg, vg = gather_block_kv(new_pool_k, new_pool_v, block_tables)  # (S, KV, W, Dh)
+        kg, vg = gather_block_kv(new_pool_k, new_pool_v, block_tables, kv_lens)  # (S, KV, W, Dh)
         group = cfg.num_heads // cfg.num_kv_heads
         kk = _repeat_kv(kg, group)
         vv = _repeat_kv(vg, group)
@@ -466,7 +474,10 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
     new_pool_v = pool_v.at[blk_t, :, off_t].set(v[0].astype(pool_v.dtype))
     from repro.kernels.ops import gather_block_kv
 
-    kg, vg = gather_block_kv(new_pool_k, new_pool_v, block_table[None])  # (1, KV, W, Dh)
+    # window live length: everything cached before this chunk plus the chunk
+    # itself — table entries past ceil((start+C)/bs) clamp to the null block
+    kg, vg = gather_block_kv(new_pool_k, new_pool_v, block_table[None],
+                             jnp.reshape(start + C, (1,)))  # (1, KV, W, Dh)
     qh = jnp.swapaxes(q, 1, 2)  # (1, H, C, Dh)
     group = cfg.num_heads // cfg.num_kv_heads
     kk = _repeat_kv(kg, group)

@@ -570,8 +570,11 @@ class Model:
         The paged sibling of ``decode_step_ragged``: tokens (S, 1); pool k/v
         (L, N, KV, bs, Dh); block_tables (S, MB); lens (S,) live length per
         slot; active (S,) bool — inactive slots' KV writes are gated to the
-        null block so recycled blocks can't be corrupted mid-chunk. Returns
-        (logits (S, V), new_pool).
+        null block so recycled blocks can't be corrupted mid-chunk. With
+        ``cfg.quant.use_fused_kernel`` + exaq, every layer's attention runs
+        the fused Pallas paged-decode kernel (block-table-indexed pool loads,
+        no HBM gather — DESIGN.md §3); otherwise the gather-then-dispatch
+        reference. Returns (logits (S, V), new_pool).
         """
         cfg = self.cfg
         assert cfg.family in ("dense", "vlm", "moe"), (

@@ -487,6 +487,18 @@ class PagedEngine(Engine):
     up (prompt blocks stay parked in the prefix cache) and it is requeued
     for recompute with prompt+generated-so-far, which reproduces greedy
     output bit-exactly (chunked prefill is exact, DESIGN.md §3).
+
+    ``fused`` selects the decode attention path (DESIGN.md §3, fused paged
+    decode): ``True`` dispatches the fused Pallas paged-decode kernel —
+    block-table-indexed K/V loads straight from the pool, no HBM gather —
+    requires ``softmax_impl="exaq"``; ``False`` forces the gather-then-
+    dispatch reference; ``None`` (default) keeps whatever
+    ``cfg.quant.use_fused_kernel`` says. Both paths share the global-grid
+    EXAQ combine, so greedy outputs agree under the default qstate
+    (asserted by the tier-1 suite). Caveat: the fused kernel folds the
+    default-sigma clip as a compile-time constant — a *calibrated*
+    per-layer ``qstate`` only takes effect on the gather path, so keep
+    ``fused=False`` when serving calibrated clips.
     """
 
     def __init__(
@@ -505,7 +517,15 @@ class PagedEngine(Engine):
         cache_dtype=jnp.bfloat16,
         seed: int = 0,
         mesh=None,
+        fused: bool | None = None,
     ):
+        if fused is not None:
+            if fused and cfg.quant.softmax_impl != "exaq":
+                raise ValueError(
+                    f"fused=True needs softmax_impl='exaq' (static clip/LUT folded into the "
+                    f"kernel), got {cfg.quant.softmax_impl!r}"
+                )
+            cfg = cfg.with_quant(use_fused_kernel=fused)
         self._init_common(cfg, params, max_slots=max_slots, max_seq=max_seq, qstate=qstate,
                           eos_id=eos_id, steps_per_sync=steps_per_sync,
                           cache_dtype=cache_dtype, seed=seed)

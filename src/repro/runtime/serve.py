@@ -74,7 +74,8 @@ def cache_shardings(cfg, mesh, cache_struct):
 
 def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
              sampling=None, eos_id=None, seed: int = 0, paged: bool = False,
-             block_size: int = 16, prefill_chunk: int = 32):
+             block_size: int = 16, prefill_chunk: int = 32,
+             fused: bool | None = None):
     """Batched generation driver (example/tests scale).
 
     Attention token decoders (dense/moe) route through the continuous-batching
@@ -84,7 +85,9 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
     temperature / top-k / top-p per request. ``paged=True`` swaps in the
     block-paged engine (``runtime.engine.PagedEngine``): shared-prefix rows
     reuse cached KV blocks and long prompts prefill in ``prefill_chunk``-token
-    chunks (DESIGN.md §3) — greedy outputs are identical to the slot engine.
+    chunks (DESIGN.md §3) — greedy outputs are identical to the slot engine;
+    ``fused`` picks the paged decode-attention path (True = fused Pallas
+    paged-decode kernel, False = gather reference, None = per cfg).
     Other families keep the rectangular greedy loop — ssm/hybrid/audio caches
     have no ragged sequence axis for slots to share, and vlm needs per-request
     vision_embeds plumbing the engine's prefill doesn't have yet.
@@ -99,6 +102,11 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
         from repro.runtime.engine import Engine, PagedEngine
         from repro.runtime.sampling import GREEDY, SamplingParams
 
+        if fused is not None and not paged:
+            raise ValueError(
+                "fused= selects the paged decode-attention path; pass paged=True "
+                "(the slot engine would silently ignore it)"
+            )
         if sampling is None:
             sampling = GREEDY
         per_row = list(sampling) if isinstance(sampling, (list, tuple)) else [sampling] * B
@@ -109,7 +117,7 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
         if paged:
             eng = PagedEngine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
                               eos_id=eos_id, seed=seed, block_size=block_size,
-                              prefill_chunk=prefill_chunk)
+                              prefill_chunk=prefill_chunk, fused=fused)
         else:
             eng = Engine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
                          eos_id=eos_id, seed=seed)
@@ -122,10 +130,10 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
             out[b, : len(toks)] = toks
         return jnp.asarray(out)
 
-    if sampling is not None or eos_id is not None or paged:
+    if sampling is not None or eos_id is not None or paged or fused is not None:
         raise ValueError(
-            f"sampling/eos_id/paged require the engine path (dense/moe, no explicit cache); "
-            f"the rectangular loop for family={cfg.family!r} is greedy-only and unpaged"
+            f"sampling/eos_id/paged/fused require the engine path (dense/moe, no explicit "
+            f"cache); the rectangular loop for family={cfg.family!r} is greedy-only and unpaged"
         )
     prefill, decode = make_serve_fns(cfg, qstate)
     if cache is None:

@@ -1,0 +1,187 @@
+"""Fused Pallas paged-decode EXAQ attention vs the gather reference
+(DESIGN.md §3, fused paged decode): ragged/GQA parity matrix, dead-tail
+clamping in ``gather_block_kv``, the bytes-moved model, and bit-exact greedy
+parity through ``PagedEngine``. All kernels run in interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exaq_params
+from repro.kernels import ops
+from repro.kernels.exaq_paged_attention import paged_decode_bytes_model
+
+RNG = np.random.default_rng(42)
+
+
+def _pool_setup(S, KV, bs, MB, D, *, dtype=jnp.float32, seed=0):
+    """Random pool + disjoint per-slot tables (ids permuted so table order
+    differs from pool order — a bug that ignores the table shows up)."""
+    rng = np.random.default_rng(seed)
+    N = 1 + S * MB
+    pk = jnp.asarray(rng.normal(0, 1, (N, KV, bs, D)), dtype)
+    pv = jnp.asarray(rng.normal(0, 1, (N, KV, bs, D)), dtype)
+    ids = rng.permutation(np.arange(1, N))[: S * MB].reshape(S, MB)
+    return pk, pv, jnp.asarray(ids, jnp.int32)
+
+
+@pytest.mark.parametrize("group", [1, 4, 8])
+@pytest.mark.parametrize("bits", [2, 3])
+def test_fused_matches_gather_reference_gqa(group, bits):
+    """GQA group sizes 1/4/8: fused kernel == global-grid gather reference."""
+    KV, bs, MB, D = 2, 8, 4, 64
+    H, S = KV * group, 3
+    p = exaq_params(1.5, bits)
+    q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
+    pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=group)
+    lens = jnp.asarray([5, 17, MB * bs], jnp.int32)
+    got = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=True)
+    want = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=False)
+    assert got.shape == (S, H, 1, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fused_ragged_lens_edges():
+    """Ragged kv_lens: empty slot (len 0), exactly one block, exactly on a
+    block boundary, one past a boundary, full table."""
+    S, H, KV, bs, MB, D = 5, 4, 2, 8, 3, 32
+    p = exaq_params(1.0, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
+    pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=1)
+    lens = jnp.asarray([0, bs, 2 * bs, 2 * bs + 1, MB * bs], jnp.int32)
+    got = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=True)
+    want = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # a slot with no live KV attends to nothing and outputs exactly zero
+    assert float(jnp.abs(got[0]).max()) == 0.0
+
+
+def test_fused_single_block_sequences():
+    """MB == 1: the whole cache is one block per slot (init decode state)."""
+    S, H, KV, bs, D = 2, 8, 8, 16, 128
+    p = exaq_params(2.0, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
+    pk, pv, tbl = _pool_setup(S, KV, bs, 1, D, seed=2)
+    lens = jnp.asarray([1, bs], jnp.int32)
+    got = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=True)
+    want = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fused_shared_prefix_blocks():
+    """Two slots whose tables name the SAME prefix blocks (the prefix-cache
+    layout): per-slot results match gathering each window independently."""
+    S, H, KV, bs, MB, D = 2, 4, 2, 8, 4, 64
+    p = exaq_params(1.0, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
+    pk, pv, _ = _pool_setup(S, KV, bs, MB, D, seed=3)
+    tbl = jnp.asarray([[1, 2, 3, 4], [1, 2, 5, 6]], jnp.int32)  # shared 2-block prefix
+    lens = jnp.asarray([3 * bs + 2, 4 * bs], jnp.int32)
+    got = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=True)
+    want = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fused_bf16_pool():
+    """Serving dtype: bf16 pool, fp32 q — fused and reference agree (both
+    promote K/V to fp32 before the dots)."""
+    S, H, KV, bs, MB, D = 3, 4, 4, 8, 3, 64
+    p = exaq_params(1.5, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
+    pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, dtype=jnp.bfloat16, seed=4)
+    lens = jnp.asarray([7, 20, 24], jnp.int32)
+    got = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=True)
+    want = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# --------------------------------------------------------- gather dead tails
+
+def test_gather_block_kv_clamps_dead_tail_to_null_block():
+    """With kv_lens, table entries past ceil(len/bs) gather the null block
+    instead of whatever stale block ids pad the table — and the live prefix
+    is untouched."""
+    S, KV, bs, MB, D = 2, 2, 8, 4, 16
+    pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=5)
+    lens = jnp.asarray([bs + 3, 0], jnp.int32)  # slot0: 2 live blocks; slot1: none
+    kg, vg = ops.gather_block_kv(pk, pv, tbl, lens)
+    kg_all, _ = ops.gather_block_kv(pk, pv, tbl)
+    # live blocks identical to the unclamped gather
+    np.testing.assert_array_equal(np.asarray(kg[0, :, : 2 * bs]), np.asarray(kg_all[0, :, : 2 * bs]))
+    # dead tail reads block 0 (the null block), not the table's padding ids
+    tail = np.asarray(kg[0, :, 2 * bs :]).reshape(KV, MB - 2, bs, D)
+    for b in range(MB - 2):
+        np.testing.assert_array_equal(tail[:, b], np.asarray(pk[0]))
+    tail1 = np.asarray(vg[1]).reshape(KV, MB, bs, D)
+    for b in range(MB):
+        np.testing.assert_array_equal(tail1[:, b], np.asarray(pv[0]))
+
+
+def test_repeat_kv_shared_implementation():
+    """The single shared GQA repeat: identity at group 1, interleaved copy
+    otherwise, and both historical call signatures route through it."""
+    from repro.models.attention import _repeat_kv as model_repeat
+
+    x = jnp.asarray(RNG.normal(0, 1, (2, 3, 5, 4)), jnp.float32)
+    assert ops.repeat_kv(x, 1) is x
+    r = ops.repeat_kv(x, 2)
+    assert r.shape == (2, 6, 5, 4)
+    np.testing.assert_array_equal(np.asarray(r[:, 0]), np.asarray(r[:, 1]))
+    np.testing.assert_array_equal(np.asarray(r[:, 2]), np.asarray(x[:, 1]))
+    assert model_repeat is ops.repeat_kv  # one implementation, two call sites
+    q = jnp.zeros((2, 6, 5, 4))
+    kr, vr = ops._repeat_kv(q, x, x)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(r))
+    np.testing.assert_array_equal(np.asarray(vr), np.asarray(r))
+
+
+# ------------------------------------------------------------- bytes model
+
+def test_bytes_model_2x_at_half_occupancy():
+    """Acceptance: modeled decode-step KV bytes-read drop >= 2x vs the
+    gather path at 50% average occupancy."""
+    S, MB, bs = 8, 32, 16
+    lens = np.full((S,), MB * bs // 2, np.int64)  # 50% occupancy
+    m = paged_decode_bytes_model(slots=S, kv_heads=8, max_blocks=MB, block_size=bs,
+                                 head_dim=128, kv_lens=lens)
+    assert m["bytes_reduction_x"] >= 2.0
+    # sanity: gather reads live blocks + writes/reads the dense rectangle
+    # (x K+V), fused is (2K + 1V) over live blocks only
+    assert m["gather_then_read_bytes"] == (m["live_blocks"] + 2 * S * MB) * 2 * m["block_bytes"]
+    assert m["fused_pool_read_bytes"] == 3 * m["live_blocks"] * m["block_bytes"]
+
+
+# ------------------------------------------------------- engine greedy parity
+
+def test_paged_engine_fused_matches_gather_greedy():
+    """Bit-exact greedy parity through PagedEngine: the fused kernel and the
+    gather reference decode the same trace to the same tokens (both are
+    global-grid EXAQ; DESIGN.md §3)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.runtime.engine import PagedEngine
+
+    cfg = get_config("yi-6b").reduced(num_layers=2).with_quant(softmax_impl="exaq", bits=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(21)
+    spec = [(7, 6), (19, 4), (5, 8)]
+    prompts = [rng.integers(0, cfg.vocab_size, n) for n, _ in spec]
+
+    outs = {}
+    for fused in (False, True):
+        eng = PagedEngine(cfg, params, max_slots=2, max_seq=48, steps_per_sync=4,
+                          block_size=8, prefill_chunk=8, seed=0, fused=fused)
+        uids = [eng.submit(p, g) for p, (_, g) in zip(prompts, spec)]
+        res = eng.run()
+        outs[fused] = [res[u].tokens for u in uids]
+    assert outs[True] == outs[False]
+
+
+def test_paged_engine_fused_requires_exaq():
+    from repro.configs import get_config
+    from repro.runtime.engine import PagedEngine
+
+    cfg = get_config("yi-6b").reduced(num_layers=2).with_quant(softmax_impl="exact")
+    with pytest.raises(ValueError):
+        PagedEngine(cfg, params=None, max_slots=1, max_seq=16, fused=True)
