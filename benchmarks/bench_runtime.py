@@ -102,25 +102,30 @@ def figure1(seq: int = 4096, d_model: int = 4096, n_heads: int = 32, d_ff: int =
 
 def paged_decode_bytes(slots: int = 32, max_seq: int = 4096, block_size: int = 16,
                        kv_heads: int = 32, head_dim: int = 128, layers: int = 32,
-                       occupancies=(0.25, 0.5, 1.0)):
+                       occupancies=(0.25, 0.5, 1.0),
+                       kv_dtypes=("fp32", "bf16", "int8")):
     """Per-decode-step HBM KV bytes for a LLaMA-7B-class paged batch: the
     gather path's 3 rectangular passes vs the fused kernel's live-block
-    reads, swept over mean occupancy (DESIGN.md §3)."""
+    reads, swept over mean occupancy AND pool storage dtype (DESIGN.md
+    §3/§6) — the element size is taken from ``kv_dtype`` (int8 includes the
+    per-block scale reads), not hardcoded."""
     from repro.kernels.exaq_paged_attention import paged_decode_bytes_model
 
     mb = max_seq // block_size
     rows = []
-    for occ in occupancies:
-        lens = np.full((slots,), int(occ * max_seq), np.int64)
-        m = paged_decode_bytes_model(slots=slots, kv_heads=kv_heads, max_blocks=mb,
-                                     block_size=block_size, head_dim=head_dim,
-                                     kv_lens=lens, dtype_bytes=2)
-        rows.append({
-            "occupancy": occ,
-            "gather_gb_per_step": round(layers * m["gather_then_read_bytes"] / 1e9, 2),
-            "fused_gb_per_step": round(layers * m["fused_pool_read_bytes"] / 1e9, 2),
-            "reduction_x": round(m["bytes_reduction_x"], 2),
-        })
+    for dt in kv_dtypes:
+        for occ in occupancies:
+            lens = np.full((slots,), int(occ * max_seq), np.int64)
+            m = paged_decode_bytes_model(slots=slots, kv_heads=kv_heads, max_blocks=mb,
+                                         block_size=block_size, head_dim=head_dim,
+                                         kv_lens=lens, kv_dtype=dt)
+            rows.append({
+                "kv_dtype": dt,
+                "occupancy": occ,
+                "gather_gb_per_step": round(layers * m["gather_then_read_bytes"] / 1e9, 2),
+                "fused_gb_per_step": round(layers * m["fused_pool_read_bytes"] / 1e9, 2),
+                "reduction_x": round(m["bytes_reduction_x"], 2),
+            })
     return rows
 
 
@@ -134,7 +139,8 @@ def main():
     pdb_rows = paged_decode_bytes()
     print("paged decode KV bytes/step (LLaMA-7B-class, 32 slots x 4k seq):")
     for r in pdb_rows:
-        print(f"  occupancy {int(100*r['occupancy'])}%: gather {r['gather_gb_per_step']} GB "
+        print(f"  {r['kv_dtype']:5s} occupancy {int(100*r['occupancy'])}%: "
+              f"gather {r['gather_gb_per_step']} GB "
               f"-> fused {r['fused_gb_per_step']} GB ({r['reduction_x']}x less)")
     return {"table3": table3(), "wallclock": wc, "figure1": figure1(),
             "paged_decode_bytes": pdb_rows}

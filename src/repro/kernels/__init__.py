@@ -5,6 +5,8 @@ from repro.kernels.ops import (
     exaq_attention,
     exaq_softmax,
     gather_block_kv,
+    kv_quantize,
+    kv_write_scales,
     paged_decode_attention,
     repeat_kv,
 )
@@ -14,6 +16,8 @@ __all__ = [
     "exaq_attention",
     "exaq_softmax",
     "gather_block_kv",
+    "kv_quantize",
+    "kv_write_scales",
     "paged_decode_attention",
     "repeat_kv",
 ]

@@ -33,10 +33,20 @@ GQA is native: q is laid out ``(slots, KV, group, Dh)`` so one kv head's
 query group forms the q-block rows — K/V are never repeated ``group`` times
 in memory (the repeat the unfused path pays via ``repeat_kv``).
 
+Int8 pools (DESIGN.md §6): when the pool stores int8 codes with
+per-(block, kv-head) scales, the scales ride the *scalar-prefetch* channel
+next to the block tables, and each K/V block is dequantized in VMEM right
+after its 8-bit DMA lands — ``codes.astype(f32) * scale[blk, kv_head]`` —
+before the EXAQ clip/LUT stages. HBM only ever moves the 1-byte payload,
+so the modeled bytes/step drop ~2x vs bf16 (~4x vs fp32); the EXAQ
+histogram math downstream is unchanged, and the kernel stays bit-comparable
+to the *dequantizing* gather oracle (``gather_block_kv`` with scales).
+
 Layouts: q ``(S, H, 1, Dh)``; pool_k/pool_v ``(N, KV, bs, Dh)``;
-block_tables ``(S, MB)`` int32; kv_lens ``(S,)`` int32. Compiled-mode tiling
-wants ``bs`` a multiple of 8 and ``Dh`` lane-padded (both hold for production
-shapes; tests run interpret mode where any shape goes).
+block_tables ``(S, MB)`` int32; kv_lens ``(S,)`` int32; optional
+k_scale/v_scale ``(N, KV)`` fp32. Compiled-mode tiling wants ``bs`` a
+multiple of 8 and ``Dh`` lane-padded (both hold for production shapes;
+tests run interpret mode where any shape goes).
 """
 
 from __future__ import annotations
@@ -59,14 +69,7 @@ def _round_up(x: int, m: int) -> int:
 def _paged_decode_kernel(
     tables_ref,
     lens_ref,
-    q_ref,
-    k_ref,
-    v_ref,
-    o_ref,
-    m_ref,
-    l_ref,
-    acc_ref,
-    *,
+    *refs,
     bs: int,
     mb: int,
     block_q: int,
@@ -74,15 +77,27 @@ def _paged_decode_kernel(
     clip: float,
     lut: tuple[float, ...],
     scale: float,
+    kv_quant: bool,
 ):
     """Grid (S, KV, 2*MB): chunks 0..MB-1 are the max pass, MB..2*MB-1 the
     quantize+accumulate pass. Scratch (m, l, acc) carries across the chunk
-    axis; the BlockSpec index maps (not this body) steer the pool DMA."""
+    axis; the BlockSpec index maps (not this body) steer the pool DMA.
+    ``kv_quant`` pools carry two extra scalar-prefetch refs — the
+    per-(block, kv-head) dequant scales (DESIGN.md §6)."""
+    if kv_quant:
+        ksc_ref, vsc_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ksc_ref = vsc_ref = None
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
     slot = pl.program_id(0)
+    head = pl.program_id(1)
     j = pl.program_id(2)
     t = j % mb  # table entry this step touches (same in both passes)
     kv_len = lens_ref[slot]
     live = t * bs < kv_len
+    # the block whose payload sits in k_ref/v_ref this step (dead tails are
+    # pinned to the null block, whose scale is 0 — masked lanes anyway)
+    blk = jnp.where(live, tables_ref[slot, t], 0)
 
     @pl.when(j == 0)
     def _init():
@@ -96,6 +111,8 @@ def _paged_decode_kernel(
     def _scores():
         q = q_ref[0, 0].astype(jnp.float32)
         k = k_ref[0, 0].astype(jnp.float32)
+        if kv_quant:
+            k = k * ksc_ref[blk, head]  # dequant in VMEM: HBM moved 1 byte/elt
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
@@ -125,8 +142,11 @@ def _paged_decode_kernel(
                           axis=-1, keepdims=True)
             dden = dden + cnt.astype(jnp.float32) * lut[kk]
         l_ref[...] = l_ref[...] + dden
+        v = v_ref[0, 0].astype(jnp.float32)
+        if kv_quant:
+            v = v * vsc_ref[blk, head]
         acc_ref[...] += jax.lax.dot_general(
-            e, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            e, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
 
@@ -148,12 +168,16 @@ def exaq_paged_decode_attention(
     params,
     scale: float,
     *,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Fused paged-decode EXAQ attention over a block pool.
 
     q: (S, H, 1, D); pool_k/pool_v: (N, KV, bs, D); block_tables: (S, MB)
     int32 block ids (null-block padded); kv_lens: (S,) live tokens per slot.
+    An int8 pool additionally takes k_scale/v_scale (N, KV) fp32 dequant
+    scales (DESIGN.md §6), scalar-prefetched beside the block tables.
     Returns (S, H, 1, D) fp32. Global-grid (exact Algo. 2) semantics.
     """
     S, H, one, D = q.shape
@@ -161,6 +185,9 @@ def exaq_paged_decode_attention(
     N, KV, bs, _ = pool_k.shape
     MB = block_tables.shape[1]
     group = H // KV
+    kv_quant = pool_k.dtype == jnp.int8
+    if (k_scale is not None) != kv_quant or (v_scale is not None) != kv_quant:
+        raise ValueError("int8 pools require both k_scale and v_scale; fp pools forbid them")
     q = q.reshape(S, KV, group, D)
     block_q = _round_up(max(group, 8), 8)
     if block_q != group:
@@ -178,27 +205,35 @@ def exaq_paged_decode_attention(
     lens = kv_lens.astype(jnp.int32)
     lut = tuple(float(x) for x in params.lut_np())
 
-    def _k_index(s, h, j, tbl, lns):
+    def _k_index(s, h, j, tbl, lns, *sc):
         # dead tail -> null block; consecutive identical indices are a
         # single DMA, so dead chunks cost ~nothing
         t = j % MB
         return (jnp.where(t * bs < lns[s], tbl[s, t], 0), h, 0, 0)
 
-    def _v_index(s, h, j, tbl, lns):
+    def _v_index(s, h, j, tbl, lns, *sc):
         # V is only consumed by the accumulate pass; pin the max pass (and
         # dead chunks) to the null block so V moves over HBM exactly once
         t = j % MB
         return (jnp.where((j >= MB) & (t * bs < lns[s]), tbl[s, t], 0), h, 0, 0)
 
+    def _q_index(s, h, j, tbl, lns, *sc):
+        return (s, h, 0, 0)
+
+    # the dequant scales ride the scalar-prefetch channel: (N, KV) fp32 is
+    # SMEM-sized (a few hundred KiB at 7B serving shapes) and the kernel
+    # indexes it by the same prefetched table entry that steered the DMA
+    prefetch = (tables, lens) + ((k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+                                 if kv_quant else ())
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=len(prefetch),
         grid=(S, KV, 2 * MB),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, d_pad), lambda s, h, j, tbl, lns: (s, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_q, d_pad), _q_index),
             pl.BlockSpec((1, 1, bs, d_pad), _k_index),
             pl.BlockSpec((1, 1, bs, d_pad), _v_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, d_pad), lambda s, h, j, tbl, lns: (s, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, block_q, d_pad), _q_index),
         scratch_shapes=[
             pltpu.VMEM((block_q, _LANES), jnp.float32),
             pltpu.VMEM((block_q, _LANES), jnp.float32),
@@ -209,6 +244,7 @@ def exaq_paged_decode_attention(
         _paged_decode_kernel,
         bs=bs, mb=MB, block_q=block_q,
         levels=params.levels, clip=float(params.clip), lut=lut, scale=float(scale),
+        kv_quant=kv_quant,
     )
     out = pl.pallas_call(
         kern,
@@ -220,8 +256,11 @@ def exaq_paged_decode_attention(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(tables, lens, q, pool_k, pool_v)
+    )(*prefetch, q, pool_k, pool_v)
     return out[:, :, :group, :D].reshape(S, H, 1, D)
+
+
+KV_DTYPE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
 
 
 def paged_decode_bytes_model(
@@ -233,6 +272,7 @@ def paged_decode_bytes_model(
     head_dim: int,
     kv_lens,
     dtype_bytes: int = 2,
+    kv_dtype: str | None = None,
 ) -> dict:
     """Modeled HBM KV bytes per decode step per layer: gather vs fused.
 
@@ -243,16 +283,31 @@ def paged_decode_bytes_model(
     kernel touches only live blocks — K twice (max pass + accumulate
     pass), V once. Pure arithmetic so benchmarks and tests can assert the
     >= 2x bandwidth win without hardware counters.
+
+    ``kv_dtype`` ("fp32" | "bf16" | "int8") sizes the pool element instead
+    of the raw ``dtype_bytes`` knob. int8 (DESIGN.md §6) adds the 4-byte
+    per-(block, kv-head) scale to every pool-block read, and — because the
+    gather oracle dequantizes during assembly — prices the gather path's
+    dense intermediate copy at fp32 width, which is what actually crosses
+    HBM there.
     """
     import numpy as np
 
+    if kv_dtype is not None:
+        dtype_bytes = KV_DTYPE_BYTES[kv_dtype]
+    scale_bytes = kv_heads * 4 if kv_dtype == "int8" else 0
+    dense_bytes_elt = 4 if kv_dtype == "int8" else dtype_bytes
+
     kv_lens = np.asarray(kv_lens)
-    block_bytes = kv_heads * block_size * head_dim * dtype_bytes
+    block_bytes = kv_heads * block_size * head_dim * dtype_bytes + scale_bytes
+    dense_block_bytes = kv_heads * block_size * head_dim * dense_bytes_elt
     rect_blocks = slots * max_blocks
     live_blocks = int(np.sum(-(-kv_lens // block_size)))
-    gather = (live_blocks + 2 * rect_blocks) * 2 * block_bytes  # (read live + write/read rect) x (K+V)
+    # (read live pool blocks + write/read the dense rectangular copy) x (K+V)
+    gather = (live_blocks * block_bytes + 2 * rect_blocks * dense_block_bytes) * 2
     fused = live_blocks * (2 + 1) * block_bytes                 # 2x K + 1x V, live only
     return {
+        "kv_dtype": kv_dtype,
         "gather_then_read_bytes": int(gather),
         "fused_pool_read_bytes": int(fused),
         "bytes_reduction_x": gather / max(fused, 1),

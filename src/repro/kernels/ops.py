@@ -191,8 +191,44 @@ def _repeat_kv(q, k, v):
     return repeat_kv(k, group), repeat_kv(v, group)
 
 
+# --------------------------------------------------------- int8 KV blocks
+
+# Symmetric int8 with per-(block, kv-head) scales: dequant is codes * scale
+# (DESIGN.md §6). A block's scale is fixed by its FIRST write — the margin
+# leaves headroom so later appends into the same block saturate rarely
+# instead of ever requantizing published rows (which would break the
+# prefix-hash byte-stability invariant, I2).
+KV_QMAX = 127.0
+KV_SCALE_MARGIN = 1.5
+
+
+def kv_write_scales(amax, old_scale):
+    """Scale update for an int8 KV scatter (DESIGN.md §6).
+
+    amax: per-(target-block, kv-head) max |value| of the rows being written;
+    old_scale: the blocks' current scales, 0.0 meaning "never written" (fresh
+    pool / host-reset on alloc). A set scale is immutable — appends quantize
+    against it (saturating); an unset one is seeded with
+    ``KV_SCALE_MARGIN * amax / KV_QMAX`` so the first write lands well inside
+    the int8 range and near-stationary later rows still fit.
+    """
+    return jnp.where(old_scale > 0.0, old_scale, KV_SCALE_MARGIN * amax / KV_QMAX)
+
+
+def kv_quantize(x, scale):
+    """fp values -> int8 codes at ``scale`` (dequant = codes * scale).
+
+    scale broadcasts against x; zero scale (only possible when x is all-zero,
+    since scales seed from amax) maps to code 0 rather than dividing by zero.
+    """
+    s = jnp.where(scale > 0.0, scale, 1.0)
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -KV_QMAX, KV_QMAX).astype(jnp.int8)
+
+
 def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.ndarray,
-                    kv_lens: jnp.ndarray | None = None):
+                    kv_lens: jnp.ndarray | None = None,
+                    k_scale: jnp.ndarray | None = None,
+                    v_scale: jnp.ndarray | None = None):
     """Assemble per-slot contiguous KV from a paged block pool (DESIGN.md §3).
 
     pool_{k,v}: (N, KV, bs, Dh) global block pool; block_tables: (S, MB) int32
@@ -210,24 +246,34 @@ def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.
     not a slice, so it works under jit with traced lengths). Results are
     unchanged: dead-tail lanes were always masked out by the caller.
 
+    ``k_scale``/``v_scale`` (N, KV) fp32, required for an int8 pool
+    (DESIGN.md §6): each gathered block is dequantized ``codes * scale``
+    before assembly, so callers always see fp values — this is the
+    *dequantizing oracle* the fused int8 kernel is tested against.
+
     The gather still materializes each slot's window once per layer; the
     fused kernel (``kernels/exaq_paged_attention.py``) streams blocks
     through VMEM instead and is the serving hot path. This stays as the
     interpret-mode / oracle reference.
     """
+    want = pool_k.dtype == jnp.int8
+    if (k_scale is not None) != want or (v_scale is not None) != want:
+        raise ValueError("int8 pools require both k_scale and v_scale; fp pools forbid them")
     if kv_lens is not None:
         MB = block_tables.shape[1]
         bs = pool_k.shape[2]
         live = jnp.arange(MB, dtype=jnp.int32)[None, :] * bs < kv_lens.astype(jnp.int32)[:, None]
         block_tables = jnp.where(live, block_tables, 0)  # 0 == kv_pool.NULL_BLOCK
 
-    def g(pool):
+    def g(pool, scale):
         b = pool[block_tables]  # (S, MB, KV, bs, Dh)
+        if scale is not None:
+            b = b.astype(jnp.float32) * scale[block_tables][..., None, None]
         b = jnp.swapaxes(b, 1, 2)  # (S, KV, MB, bs, Dh)
         S, KV, MB, bs, Dh = b.shape
         return b.reshape(S, KV, MB * bs, Dh)
 
-    return g(pool_k), g(pool_v)
+    return g(pool_k, k_scale), g(pool_v, v_scale)
 
 
 def paged_decode_attention(
@@ -239,6 +285,8 @@ def paged_decode_attention(
     params: QuantParams,
     scale: float,
     *,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
     block_kv: int = 512,
     use_kernel: bool = True,
 ) -> jnp.ndarray:
@@ -257,12 +305,18 @@ def paged_decode_attention(
     paging composes with the DESIGN.md §2 combine — block boundaries are
     invisible to the softmax, and the two paths agree to fp32 roundoff.
 
+    For an int8 pool (DESIGN.md §6) pass ``k_scale``/``v_scale`` (N, KV):
+    the fused kernel scalar-prefetches them and dequantizes blocks in VMEM;
+    the gather path dequantizes during assembly — either way dequant never
+    round-trips through HBM at fp width.
+
     q: (S, H, 1, Dh); pool_{k,v}: (N, KV, bs, Dh); block_tables: (S, MB);
     kv_lens: (S,) live positions per slot -> (S, H, 1, Dh).
     """
     if use_kernel:
         return exaq_paged_decode_attention(
-            q, pool_k, pool_v, block_tables, kv_lens, params, scale, interpret=on_cpu()
+            q, pool_k, pool_v, block_tables, kv_lens, params, scale,
+            k_scale=k_scale, v_scale=v_scale, interpret=on_cpu()
         )
-    k, v = gather_block_kv(pool_k, pool_v, block_tables, kv_lens)
+    k, v = gather_block_kv(pool_k, pool_v, block_tables, kv_lens, k_scale, v_scale)
     return decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, use_kernel=False)

@@ -10,11 +10,12 @@ all active slots. ``--paged`` swaps in the block-paged engine (DESIGN.md §3):
 a global KV block pool with shared-prefix reuse and chunked prefill
 (``--block-size`` / ``--prefill-chunk`` / ``--num-blocks`` tune it;
 ``--fused`` / ``--no-fused`` pick the fused Pallas paged-decode kernel vs
-the gather-then-dispatch reference for decode attention); with
-``--shared-prefix N`` every request opens with the same N-token system
-prompt, so the printed prefix-cache hit rate shows the reuse win. Other
-families fall back to the rectangular greedy loop in
-``runtime.serve.generate``.
+the gather-then-dispatch reference for decode attention; ``--kv-dtype
+int8`` stores the pool as int8 codes with per-block scales, dequantized
+inside the decode kernel — DESIGN.md §6); with ``--shared-prefix N``
+every request opens with the same N-token system prompt, so the printed
+prefix-cache hit rate shows the reuse win. Other families fall back to
+the rectangular greedy loop in ``runtime.serve.generate``.
 """
 
 from __future__ import annotations
@@ -60,11 +61,16 @@ def main():
                          "gather; needs --impl exaq)")
     ap.add_argument("--no-fused", dest="fused", action="store_false",
                     help="paged decode: force the gather-then-dispatch reference")
+    ap.add_argument("--kv-dtype", default="bf16", choices=["fp32", "bf16", "int8"],
+                    help="KV cache storage dtype; int8 (paged only) stores the pool "
+                         "quantized with per-block scales (DESIGN.md §6)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend the same N-token system prompt to every request")
     args = ap.parse_args()
     if args.fused is not None and not args.paged:
         raise SystemExit("--fused/--no-fused select the paged decode path; add --paged")
+    if args.kv_dtype == "int8" and not args.paged:
+        raise SystemExit("--kv-dtype int8 needs the block pool's per-block scales; add --paged")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -76,7 +82,7 @@ def main():
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k, top_p=args.top_p)
     eos = None if args.eos_id < 0 else args.eos_id
 
-    print(f"arch={cfg.name} impl={args.impl} int{args.bits} "
+    print(f"arch={cfg.name} impl={args.impl} int{args.bits} kv={args.kv_dtype} "
           f"sampling=(T={sp.temperature}, k={sp.top_k}, p={sp.top_p})")
 
     if cfg.family in ("dense", "moe"):
@@ -88,14 +94,17 @@ def main():
         prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, int(n))])
                    for n in lens]
         max_seq = args.prompt_len + args.shared_prefix + args.gen
+        from repro.runtime.serve import KV_DTYPES
+
         if args.paged:
             eng = PagedEngine(cfg, params, max_slots=args.slots, max_seq=max_seq,
                               eos_id=eos, seed=args.seed, block_size=args.block_size,
                               prefill_chunk=args.prefill_chunk,
-                              num_blocks=args.num_blocks or None, fused=args.fused)
+                              num_blocks=args.num_blocks or None, fused=args.fused,
+                              cache_dtype=KV_DTYPES[args.kv_dtype])
         else:
             eng = Engine(cfg, params, max_slots=args.slots, max_seq=max_seq,
-                         eos_id=eos, seed=args.seed)
+                         eos_id=eos, seed=args.seed, cache_dtype=KV_DTYPES[args.kv_dtype])
         t0 = time.time()
         uids = [eng.submit(p, args.gen, sp) for p in prompts]
         results = eng.run()

@@ -24,6 +24,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.kernels.ops import repeat_kv as _repeat_kv
 from repro.models.layers import apply_rope, rmsnorm, truncated_normal_init
 from repro.runtime.sharding import shard_activation
@@ -381,7 +382,7 @@ def attention_decode_ragged(params, x, cfg, statics: AttnStatics, clip, cache_k,
 
 
 def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, pool_v,
-                           block_tables, lens, active):
+                           block_tables, lens, active, k_scale=None, v_scale=None):
     """Slot-batched one-token decode over a *block-paged* KV cache (DESIGN.md §3).
 
     The paged sibling of ``attention_decode_ragged``: per-slot raggedness still
@@ -392,33 +393,54 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
     slots scatter to the reserved null block (id 0) so a freed slot can never
     corrupt blocks that were recycled to another request.
 
+    For an int8 pool (DESIGN.md §6) the scatter *quantizes*: the new token's
+    per-kv-head codes land at the block's scale — seeding it
+    (``ops.kv_write_scales``) when this is the block's first write — and the
+    read paths dequantize, so fp values never reach HBM. ``k_scale``/
+    ``v_scale`` are the per-layer (N, KV) scale planes; None means an fp pool.
+
     Attention dispatch (DESIGN.md §3, fused paged decode): with
     ``use_fused_kernel`` + exaq the fused Pallas kernel reads K/V blocks
     straight from the pool via the scalar-prefetched block table — the dense
     per-slot KV copy the gather materializes never exists. Otherwise the
     gather-then-dispatch reference runs: assemble each slot's live blocks
     (``kernels.ops.gather_block_kv`` with ``kv_lens`` clamping dead tails to
-    the null block) and apply the EXAQ histogram softmax. Both anchor the
-    quantization grid at the global row max, so per-block partial counts add
-    exactly (§2 combine; block boundaries are invisible to the softmax) and
-    the two paths agree to fp32 roundoff — under the same clip: the fused
-    kernel folds the default-sigma clip as a compile-time constant, so a
-    *calibrated* per-layer qstate is honored by the gather path only.
+    the null block, dequantizing when scales are given) and apply the EXAQ
+    histogram softmax. Both anchor the quantization grid at the global row
+    max, so per-block partial counts add exactly (§2 combine; block
+    boundaries are invisible to the softmax) and the two paths agree to fp32
+    roundoff — under the same clip: the fused kernel folds the default-sigma
+    clip as a compile-time constant, so a *calibrated* per-layer qstate is
+    honored by the gather path only.
 
     x: (S, 1, D); pool_{k,v}: (N, KV, bs, Dh); block_tables: (S, MB) int32;
-    lens: (S,) int32; active: (S,) bool.
-    Returns (out (S, 1, D), new_pool_k, new_pool_v).
+    lens: (S,) int32; active: (S,) bool; k_scale/v_scale: (N, KV) fp32 or None.
+    Returns (out (S, 1, D), new_kv) where new_kv is (pool_k, pool_v) for fp
+    pools and (pool_k, pool_v, k_scale, v_scale) for int8 pools.
     """
     B = x.shape[0]
     bs = pool_k.shape[2]
+    quantized = k_scale is not None
     positions = lens.astype(jnp.int32)[:, None]  # (S, 1) per-slot rope position
     q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
     kn, vn = k[:, 0], v[:, 0]  # (S, KV, Dh)
     blk = jnp.take_along_axis(block_tables, (lens // bs)[:, None], axis=1)[:, 0]
     blk = jnp.where(active, blk, 0)  # gate writes of inactive slots to the null block
     off = lens % bs
-    new_pool_k = pool_k.at[blk, :, off].set(kn.astype(pool_k.dtype))
-    new_pool_v = pool_v.at[blk, :, off].set(vn.astype(pool_v.dtype))
+    if quantized:
+        # per-slot per-kv-head amax seeds the target block's scale iff unset;
+        # a set scale is immutable (saturating append) so published prefix
+        # bytes never change (DESIGN.md §6). Inactive slots land on the null
+        # block, whose scale/payload are garbage sinks, never read unmasked.
+        ks_new = ops.kv_write_scales(jnp.max(jnp.abs(kn), axis=-1), k_scale[blk])  # (S, KV)
+        vs_new = ops.kv_write_scales(jnp.max(jnp.abs(vn), axis=-1), v_scale[blk])
+        new_pool_k = pool_k.at[blk, :, off].set(ops.kv_quantize(kn, ks_new[..., None]))
+        new_pool_v = pool_v.at[blk, :, off].set(ops.kv_quantize(vn, vs_new[..., None]))
+        k_scale = k_scale.at[blk].set(ks_new)
+        v_scale = v_scale.at[blk].set(vs_new)
+    else:
+        new_pool_k = pool_k.at[blk, :, off].set(kn.astype(pool_k.dtype))
+        new_pool_v = pool_v.at[blk, :, off].set(vn.astype(pool_v.dtype))
     qh = jnp.swapaxes(q, 1, 2)  # (S, H, 1, Dh)
     kv_lens = lens.astype(jnp.int32) + 1
     dh = cfg.resolved_head_dim
@@ -428,14 +450,13 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
         # calibrated per-layer *traced* clips stay on the gather/jnp path —
         # fused-vs-gather parity holds for the default qstate only
         from repro.core.quantizer import exaq_params
-        from repro.kernels import ops
 
         p = exaq_params(cfg.quant.sigma_default, statics.bits, rule=cfg.quant.clip_rule)
-        o = ops.paged_decode_attention(qh, new_pool_k, new_pool_v, block_tables, kv_lens, p, dh**-0.5)
+        o = ops.paged_decode_attention(qh, new_pool_k, new_pool_v, block_tables, kv_lens,
+                                       p, dh**-0.5, k_scale=k_scale, v_scale=v_scale)
     else:
-        from repro.kernels.ops import gather_block_kv
-
-        kg, vg = gather_block_kv(new_pool_k, new_pool_v, block_tables, kv_lens)  # (S, KV, W, Dh)
+        kg, vg = ops.gather_block_kv(new_pool_k, new_pool_v, block_tables, kv_lens,
+                                     k_scale, v_scale)  # (S, KV, W, Dh)
         group = cfg.num_heads // cfg.num_kv_heads
         kk = _repeat_kv(kg, group)
         vv = _repeat_kv(vg, group)
@@ -446,11 +467,12 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
         o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
     o = jnp.swapaxes(o, 1, 2).reshape(B, 1, -1).astype(x.dtype)
     out = jnp.einsum("bse,ed->bsd", o, params["wo"].astype(x.dtype))
-    return out, new_pool_k, new_pool_v
+    new_kv = (new_pool_k, new_pool_v) + ((k_scale, v_scale) if quantized else ())
+    return out, new_kv
 
 
 def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, pool_v,
-                            block_table, start, blk_t, off_t):
+                            block_table, start, blk_t, off_t, k_scale=None, v_scale=None):
     """One chunk of chunked prefill against a paged cache (DESIGN.md §3).
 
     Processes ``C`` prompt tokens at global positions ``start + i`` for one
@@ -462,22 +484,42 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
     global max, chunking the prefill leaves the softmax bit-identical to a
     one-shot prefill of the same prompt (§2: partial histograms add exactly).
 
+    For an int8 pool (DESIGN.md §6) the scatter quantizes: a scatter-max
+    collects each *target block's* per-kv-head amax over the rows this chunk
+    writes into it, seeds still-unset block scales from that, and the rows
+    quantize at their block's (now fixed) scale. The window gather
+    dequantizes, so chunked-prefill attention still runs in fp.
+
     x: (1, C, D) chunk embeddings (right-padded); block_table: (MB,) int32;
-    start: scalar int32 (tokens already cached); blk_t/off_t: (C,) int32.
-    Returns (out (1, C, D), new_pool_k, new_pool_v).
+    start: scalar int32 (tokens already cached); blk_t/off_t: (C,) int32;
+    k_scale/v_scale: (N, KV) fp32 or None.
+    Returns (out (1, C, D), new_kv) where new_kv is (pool_k, pool_v) for fp
+    pools and (pool_k, pool_v, k_scale, v_scale) for int8 pools.
     """
     B, C, _ = x.shape
     bs = pool_k.shape[2]
+    quantized = k_scale is not None
     positions = (start + jnp.arange(C, dtype=jnp.int32))[None, :]  # (1, C)
     q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
-    new_pool_k = pool_k.at[blk_t, :, off_t].set(k[0].astype(pool_k.dtype))  # (C, KV, Dh) targets
-    new_pool_v = pool_v.at[blk_t, :, off_t].set(v[0].astype(pool_v.dtype))
-    from repro.kernels.ops import gather_block_kv
+    if quantized:
+        # group the chunk's rows by target block: scatter-max their per-head
+        # amax onto the (N, KV) scale plane, seed unset scales, then quantize
+        # each row at its block's scale. Padded rows target the null block.
+        amax_k = jnp.zeros_like(k_scale).at[blk_t].max(jnp.max(jnp.abs(k[0]), axis=-1))
+        amax_v = jnp.zeros_like(v_scale).at[blk_t].max(jnp.max(jnp.abs(v[0]), axis=-1))
+        k_scale = ops.kv_write_scales(amax_k, k_scale)
+        v_scale = ops.kv_write_scales(amax_v, v_scale)
+        new_pool_k = pool_k.at[blk_t, :, off_t].set(ops.kv_quantize(k[0], k_scale[blk_t][..., None]))
+        new_pool_v = pool_v.at[blk_t, :, off_t].set(ops.kv_quantize(v[0], v_scale[blk_t][..., None]))
+    else:
+        new_pool_k = pool_k.at[blk_t, :, off_t].set(k[0].astype(pool_k.dtype))  # (C, KV, Dh) targets
+        new_pool_v = pool_v.at[blk_t, :, off_t].set(v[0].astype(pool_v.dtype))
 
     # window live length: everything cached before this chunk plus the chunk
     # itself — table entries past ceil((start+C)/bs) clamp to the null block
-    kg, vg = gather_block_kv(new_pool_k, new_pool_v, block_table[None],
-                             jnp.reshape(start + C, (1,)))  # (1, KV, W, Dh)
+    kg, vg = ops.gather_block_kv(new_pool_k, new_pool_v, block_table[None],
+                                 jnp.reshape(start + C, (1,)),
+                                 k_scale, v_scale)  # (1, KV, W, Dh)
     qh = jnp.swapaxes(q, 1, 2)  # (1, H, C, Dh)
     group = cfg.num_heads // cfg.num_kv_heads
     kk = _repeat_kv(kg, group)
@@ -491,7 +533,8 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
     o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
     o = jnp.swapaxes(o, 1, 2).reshape(B, C, -1).astype(x.dtype)
     out = jnp.einsum("bse,ed->bsd", o, params["wo"].astype(x.dtype))
-    return out, new_pool_k, new_pool_v
+    new_kv = (new_pool_k, new_pool_v) + ((k_scale, v_scale) if quantized else ())
+    return out, new_kv
 
 
 def sp_decode_attention(qh, k_new, v_new, cache_k, cache_v, pos, cfg, statics: AttnStatics, clip):

@@ -400,6 +400,11 @@ class Model:
         of allocation/sharing; ``runtime.kv_pool.BlockPool`` owns the ids and
         block 0 is the reserved null sink for gated writes. Attention token
         decoders only — paging needs a ragged KV sequence axis to page.
+
+        ``dtype=jnp.int8`` builds the quantized pool (DESIGN.md §6): int8
+        payloads plus "k_scale"/"v_scale" planes of (L, num_blocks, KV) fp32
+        per-block per-kv-head dequant scales, zero-initialized (0 = "scale
+        not yet seeded by a first write").
         """
         cfg = self.cfg
         assert cfg.family in ("dense", "vlm", "moe"), (
@@ -407,7 +412,14 @@ class Model:
         )
         dh = cfg.resolved_head_dim
         k = jnp.zeros((cfg.num_layers, num_blocks, cfg.num_kv_heads, block_size, dh), dtype)
-        return {"k": k, "v": jnp.zeros_like(k)}
+        pool = {"k": k, "v": jnp.zeros_like(k)}
+        if jnp.dtype(dtype) == jnp.int8:
+            # two distinct buffers: the engine donates the pool pytree into
+            # its jitted steps, and aliased leaves can't be donated twice
+            shape = (cfg.num_layers, num_blocks, cfg.num_kv_heads)
+            pool["k_scale"] = jnp.zeros(shape, jnp.float32)
+            pool["v_scale"] = jnp.zeros(shape, jnp.float32)
+        return pool
 
     def _ssm_cache(self, n_layers, batch, dtype):
         cfg = self.cfg
@@ -568,7 +580,8 @@ class Model:
         """Slot-batched decode over a block-paged KV pool (DESIGN.md §3).
 
         The paged sibling of ``decode_step_ragged``: tokens (S, 1); pool k/v
-        (L, N, KV, bs, Dh); block_tables (S, MB); lens (S,) live length per
+        (L, N, KV, bs, Dh) (+ "k_scale"/"v_scale" planes when the pool is
+        int8 — DESIGN.md §6); block_tables (S, MB); lens (S,) live length per
         slot; active (S,) bool — inactive slots' KV writes are gated to the
         null block so recycled blocks can't be corrupted mid-chunk. With
         ``cfg.quant.use_fused_kernel`` + exaq, every layer's attention runs
@@ -582,26 +595,29 @@ class Model:
         )
         qstate = qstate or default_qstate(cfg)
         statics = _statics(cfg)
+        quantized = pool["k"].dtype == jnp.int8
         h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
 
         def body(h, xs):
-            lp, clip, pk, pv = xs
-            a, nk, nv = attn.attention_decode_paged(
+            lp, clip, pk, pv, *sc = xs
+            a, nkv = attn.attention_decode_paged(
                 lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip,
-                pk, pv, block_tables, lens, active,
+                pk, pv, block_tables, lens, active, *sc,
             )
             h = h + a
             if cfg.moe is not None:
                 f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
             else:
                 f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
-            return h + f, (nk, nv)
+            return h + f, nkv
 
-        h, (nk, nv) = jax.lax.scan(body, h, (params["layers"], qstate["attn_clip"], pool["k"], pool["v"]))
+        keys = ("k", "v") + (("k_scale", "v_scale") if quantized else ())
+        xs = (params["layers"], qstate["attn_clip"]) + tuple(pool[k] for k in keys)
+        h, nkv = jax.lax.scan(body, h, xs)
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
         logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"].astype(h.dtype))
         logits = self._mask_padded_vocab(logits)
-        return logits, {"k": nk, "v": nv}
+        return logits, dict(zip(keys, nkv))
 
     def prefill_paged_chunk(self, params, tokens, pool, block_table, start, chunk_len,
                             blk_t, off_t, qstate=None):
@@ -613,8 +629,10 @@ class Model:
         (C,) host-computed scatter targets (padded rows -> null block).
         Attends causally by global position against the gathered window, so
         a prompt prefilled in chunks matches a one-shot prefill bit-for-bit
-        (DESIGN.md §3). Returns (logits (1, V) at the chunk's last live row,
-        new_pool) — only the final chunk's logits seed sampling.
+        (DESIGN.md §3). int8 pools carry "k_scale"/"v_scale" planes that the
+        scatter seeds and the gather dequantizes against (DESIGN.md §6).
+        Returns (logits (1, V) at the chunk's last live row, new_pool) —
+        only the final chunk's logits seed sampling.
         """
         cfg = self.cfg
         assert cfg.family in ("dense", "vlm", "moe"), (
@@ -622,28 +640,31 @@ class Model:
         )
         qstate = qstate or default_qstate(cfg)
         statics = _statics(cfg)
+        quantized = pool["k"].dtype == jnp.int8
         h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
 
         def body(h, xs):
-            lp, clip, pk, pv = xs
-            a, nk, nv = attn.attention_prefill_chunk(
+            lp, clip, pk, pv, *sc = xs
+            a, nkv = attn.attention_prefill_chunk(
                 lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip,
-                pk, pv, block_table, start, blk_t, off_t,
+                pk, pv, block_table, start, blk_t, off_t, *sc,
             )
             h = h + a
             if cfg.moe is not None:
                 f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
             else:
                 f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
-            return h + f, (nk, nv)
+            return h + f, nkv
 
-        h, (nk, nv) = jax.lax.scan(body, h, (params["layers"], qstate["attn_clip"], pool["k"], pool["v"]))
+        keys = ("k", "v") + (("k_scale", "v_scale") if quantized else ())
+        xs = (params["layers"], qstate["attn_clip"]) + tuple(pool[k] for k in keys)
+        h, nkv = jax.lax.scan(body, h, xs)
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
         idx = jnp.clip(chunk_len - 1, 0, tokens.shape[1] - 1)
         h_last = jax.lax.dynamic_index_in_dim(h[0], idx, axis=0, keepdims=False)
         logits = jnp.einsum("d,dv->v", h_last, params["head"].astype(h.dtype))[None]
         logits = self._mask_padded_vocab(logits)
-        return logits, {"k": nk, "v": nv}
+        return logits, dict(zip(keys, nkv))
 
     def decode_step(self, params, tokens, cache, qstate=None):
         """tokens: (B, 1) -> (logits (B, V), new cache)."""

@@ -153,7 +153,7 @@ class Engine:
         self._jit_prefill = jax.jit(self._prefill_fn)
         self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0, 1))
         self._jit_chunk = jax.jit(self._chunk_fn, static_argnames=("steps", "sampler"),
-                                  donate_argnums=(1, 2))
+                                  donate_argnums=(1,))
 
     # --------------------------------------------------- shared host scaffold
 
@@ -164,6 +164,11 @@ class Engine:
                 f"Engine supports token-only attention decoders (dense/moe), got "
                 f"family={cfg.family!r} frontend={cfg.frontend!r} (frontend models need "
                 "per-request embeds at prefill; ssm/hybrid/audio caches aren't slot-ragged)"
+            )
+        if jnp.dtype(cache_dtype) == jnp.int8 and not isinstance(self, PagedEngine):
+            raise ValueError(
+                "int8 KV is a paged-pool storage format (per-block scales — DESIGN.md §6); "
+                "the slot engine's rectangular cache supports fp dtypes only"
             )
         self.cfg = cfg
         self.params = params
@@ -307,7 +312,7 @@ class Engine:
                 self._finish(slot, "eos" if hit_eos else "length")
         return n_out
 
-    def _decode_scan(self, step_kv, k, v, tokens, lens, active, budget, temperature,
+    def _decode_scan(self, step_kv, kv, tokens, lens, active, budget, temperature,
                      top_k, top_p, key, *, steps, sampler):
         """``steps`` decode iterations under one jit: per step, one attention
         dispatch over all slots + one batched sampling dispatch. EOS/budget/
@@ -316,13 +321,15 @@ class Engine:
         emissions are masked. ``sampler`` (static, known host-side from the
         active slots' params) picks the cheapest variant: "greedy" is pure
         argmax, "temperature" is sort-free Gumbel-max, "full" is the general
-        top-k/top-p sampler. ``step_kv(tokens, k, v, lens, active)`` is the
-        engine-specific model call (slot-ragged or paged)."""
+        top-k/top-p sampler. ``step_kv(tokens, kv, lens, active)`` is the
+        engine-specific model call (slot-ragged or paged); ``kv`` is the
+        engine's cache pytree — {"k","v"} for the slot cache, plus
+        "k_scale"/"v_scale" planes for an int8 paged pool."""
         eos = -1 if self.eos_id is None else self.eos_id
 
         def step(carry, _):
-            k, v, tokens, lens, active, budget, key = carry
-            logits, k, v = step_kv(tokens, k, v, lens, active)
+            kv, tokens, lens, active, budget, key = carry
+            logits, kv = step_kv(tokens, kv, lens, active)
             key, sub = jax.random.split(key)
             if sampler == "greedy":
                 nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -337,16 +344,16 @@ class Engine:
             new_active = active & ~finished
             new_tokens = jnp.where(active, nxt, tokens[:, 0])[:, None]
             emitted = jnp.where(emit_mask, nxt, -1)
-            return (k, v, new_tokens, new_lens, new_active, new_budget, key), (
+            return (kv, new_tokens, new_lens, new_active, new_budget, key), (
                 emitted,
                 emit_mask,
             )
 
-        init = (k, v, tokens, lens, active, budget, key)
-        (k, v, tokens, lens, active, budget, key), (emitted, masks) = jax.lax.scan(
+        init = (kv, tokens, lens, active, budget, key)
+        (kv, tokens, lens, active, budget, key), (emitted, masks) = jax.lax.scan(
             step, init, None, length=steps
         )
-        return k, v, tokens, lens, active, budget, key, emitted, masks
+        return kv, tokens, lens, active, budget, key, emitted, masks
 
     # ------------------------------------------------------------ jitted fns
 
@@ -366,15 +373,15 @@ class Engine:
             jax.lax.dynamic_update_slice(big_v, vs.astype(big_v.dtype), start),
         )
 
-    def _chunk_fn(self, params, k, v, tokens, lens, active, budget, temperature,
+    def _chunk_fn(self, params, kv, tokens, lens, active, budget, temperature,
                   top_k, top_p, key, *, steps, sampler):
-        def step_kv(tokens, k, v, lens, active):
+        def step_kv(tokens, kv, lens, active):
             logits, cache = self.model.decode_step_ragged(
-                params, tokens, {"k": k, "v": v}, lens, self.qstate
+                params, tokens, kv, lens, self.qstate
             )
-            return logits, cache["k"], cache["v"]
+            return logits, {"k": cache["k"], "v": cache["v"]}
 
-        return self._decode_scan(step_kv, k, v, tokens, lens, active, budget,
+        return self._decode_scan(step_kv, kv, tokens, lens, active, budget,
                                  temperature, top_k, top_p, key, steps=steps, sampler=sampler)
 
     # ------------------------------------------------------------- scheduling
@@ -408,16 +415,16 @@ class Engine:
         steps = self._clamp_steps(steps)
         t0 = time.perf_counter()
         out = self._jit_chunk(
-            self.params, self._cache_k, self._cache_v,
+            self.params, {"k": self._cache_k, "v": self._cache_v},
             jnp.asarray(self._tokens), jnp.asarray(self.kv_lens),
             jnp.asarray(self._active), jnp.asarray(self._budget),
             jnp.asarray(self._temperature), jnp.asarray(self._top_k),
             jnp.asarray(self._top_p), self._key, steps=steps, sampler=self._pick_sampler(),
         )
-        k, v, tokens, lens, active, budget, self._key, emitted, masks = out
+        kv, tokens, lens, active, budget, self._key, emitted, masks = out
         jax.block_until_ready(emitted)
         self.stats["decode_time"] += time.perf_counter() - t0
-        self._cache_k, self._cache_v = k, v
+        self._cache_k, self._cache_v = kv["k"], kv["v"]
         was_active = self._active
         return self._absorb_chunk(tokens, lens, active, budget, emitted, masks, was_active)
 
@@ -488,6 +495,14 @@ class PagedEngine(Engine):
     for recompute with prompt+generated-so-far, which reproduces greedy
     output bit-exactly (chunked prefill is exact, DESIGN.md §3).
 
+    ``cache_dtype=jnp.int8`` stores the pool quantized (DESIGN.md §6):
+    int8 payloads plus per-(layer, block, kv-head) fp32 scale planes.
+    Scatters quantize, reads dequantize (the fused kernel in VMEM, the
+    gather during assembly), CoW copies carry the scales with the payload,
+    and blocks freshly allocated off the free list / evicted have their
+    scales host-reset to the "unset" sentinel before the next device write
+    so recycled blocks can't inherit a stale quantization grid.
+
     ``fused`` selects the decode attention path (DESIGN.md §3, fused paged
     decode): ``True`` dispatches the fused Pallas paged-decode kernel —
     block-table-indexed K/V loads straight from the pool, no HBM gather —
@@ -537,23 +552,36 @@ class PagedEngine(Engine):
         self.pool = BlockPool(num_blocks, block_size)
         self._tables = np.full((max_slots, self.blocks_per_table), NULL_BLOCK, np.int32)
 
-        kv = self.model.init_block_pool(num_blocks, block_size, cache_dtype)
+        self._quantized = jnp.dtype(cache_dtype) == jnp.int8
+        pool = self.model.init_block_pool(num_blocks, block_size, cache_dtype)
         if mesh is not None:
             from jax.sharding import NamedSharding
 
             spec = shd.block_pool_spec(cfg, mesh)
-            kv["k"] = jax.device_put(kv["k"], NamedSharding(mesh, spec))
-            kv["v"] = jax.device_put(kv["v"], NamedSharding(mesh, spec))
-        self._pool_k, self._pool_v = kv["k"], kv["v"]
+            pool["k"] = jax.device_put(pool["k"], NamedSharding(mesh, spec))
+            pool["v"] = jax.device_put(pool["v"], NamedSharding(mesh, spec))
+            if self._quantized:
+                sspec = shd.block_scale_spec(cfg, mesh)
+                pool["k_scale"] = jax.device_put(pool["k_scale"], NamedSharding(mesh, sspec))
+                pool["v_scale"] = jax.device_put(pool["v_scale"], NamedSharding(mesh, sspec))
+        self._pool = pool
 
         self.stats.update(prompt_tokens=0, prefix_hit_tokens=0,
                           prefill_tokens=0, prefill_chunks=0, preemptions=0)
         self._preempt_carry: dict[int, list[int]] = {}
+        # blocks handed out by the pool since the last device launch whose
+        # scale planes must be reset to "unset" before anything writes them
+        # (recycled/evicted blocks carry a stale grid otherwise) — int8 only.
+        # A set: an id can be released (admission rollback, preemption) and
+        # re-allocated before the flush, and a CoW fork destination must be
+        # *removed* (its valid scales arrive with the copied payload)
+        self._fresh_blocks: set[int] = set()
 
-        self._jit_prefill_chunk = jax.jit(self._prefill_chunk_fn, donate_argnums=(1, 2))
-        self._jit_copy_block = jax.jit(self._copy_block_fn, donate_argnums=(0, 1))
+        self._jit_prefill_chunk = jax.jit(self._prefill_chunk_fn, donate_argnums=(1,))
+        self._jit_copy_block = jax.jit(self._copy_block_fn, donate_argnums=(0,))
+        self._jit_reset_scales = jax.jit(self._reset_scales_fn, donate_argnums=(0,))
         self._jit_chunk = jax.jit(self._paged_chunk_fn, static_argnames=("steps", "sampler"),
-                                  donate_argnums=(1, 2))
+                                  donate_argnums=(1,))
 
     def _new_slot(self):
         return _PagedSlot()
@@ -570,26 +598,34 @@ class PagedEngine(Engine):
 
     # ------------------------------------------------------------ jitted fns
 
-    def _prefill_chunk_fn(self, params, pk, pv, tokens, table, start, chunk_len, blk_t, off_t):
-        logits, pool = self.model.prefill_paged_chunk(
-            params, tokens, {"k": pk, "v": pv}, table, start, chunk_len, blk_t, off_t, self.qstate
+    def _prefill_chunk_fn(self, params, pool, tokens, table, start, chunk_len, blk_t, off_t):
+        return self.model.prefill_paged_chunk(
+            params, tokens, pool, table, start, chunk_len, blk_t, off_t, self.qstate
         )
-        return logits, pool["k"], pool["v"]
 
-    def _copy_block_fn(self, pk, pv, src, dst):
+    def _copy_block_fn(self, pool, src, dst):
         """Copy-on-write device half: duplicate block ``src`` into ``dst``
-        across all layers (the pool already moved the refcounts)."""
-        return (pk.at[:, dst].set(pk[:, src]), pv.at[:, dst].set(pv[:, src]))
+        across all layers (the pool already moved the refcounts). For an int8
+        pool the per-block scale planes travel with the payload — the fork
+        must dequantize identically to the shared original (DESIGN.md §6)."""
+        return {k: a.at[:, dst].set(a[:, src]) for k, a in pool.items()}
 
-    def _paged_chunk_fn(self, params, pk, pv, tables, tokens, lens, active, budget,
+    def _reset_scales_fn(self, pool, ids):
+        """Zero the scale planes of freshly allocated blocks: 0 is the
+        "unset" sentinel the next scatter seeds from (DESIGN.md §6)."""
+        pool = dict(pool)
+        pool["k_scale"] = pool["k_scale"].at[:, ids].set(0.0)
+        pool["v_scale"] = pool["v_scale"].at[:, ids].set(0.0)
+        return pool
+
+    def _paged_chunk_fn(self, params, pool, tables, tokens, lens, active, budget,
                         temperature, top_k, top_p, key, *, steps, sampler):
-        def step_kv(tokens, pk, pv, lens, active):
-            logits, pool = self.model.decode_step_paged(
-                params, tokens, {"k": pk, "v": pv}, tables, lens, active, self.qstate
+        def step_kv(tokens, pool, lens, active):
+            return self.model.decode_step_paged(
+                params, tokens, pool, tables, lens, active, self.qstate
             )
-            return logits, pool["k"], pool["v"]
 
-        return self._decode_scan(step_kv, pk, pv, tokens, lens, active, budget,
+        return self._decode_scan(step_kv, pool, tokens, lens, active, budget,
                                  temperature, top_k, top_p, key, steps=steps, sampler=sampler)
 
     # -------------------------------------------------------------- block ops
@@ -603,8 +639,14 @@ class PagedEngine(Engine):
         if self.pool.writable(blk):
             return
         new = self.pool.fork(blk)
-        self._pool_k, self._pool_v = self._jit_copy_block(
-            self._pool_k, self._pool_v, jnp.asarray(blk, jnp.int32), jnp.asarray(new, jnp.int32)
+        # the fork gets payload AND scales copied, so it must NOT be pending
+        # a scale reset: fork() allocates internally and can hand back an id
+        # that was _alloc_fresh'd and then released (rollback/preemption)
+        # while still queued — flushing that id after this copy would zero
+        # the fork's grid and corrupt its dequant
+        self._fresh_blocks.discard(new)
+        self._pool = self._jit_copy_block(
+            self._pool, jnp.asarray(blk, jnp.int32), jnp.asarray(new, jnp.int32)
         )
         s.table[bi] = new
         self._tables[slot, bi] = new
@@ -624,9 +666,34 @@ class PagedEngine(Engine):
             self._make_writable(slot, bi0)
         need = last_pos // self.block_size + 1
         while len(s.table) < need:
-            blk = self.pool.alloc()
+            blk = self._alloc_fresh()
             self._tables[slot, len(s.table)] = blk
             s.table.append(blk)
+
+    def _alloc_fresh(self) -> int:
+        """Pool alloc that queues the block for a scale reset (int8 pools):
+        a block off the free list or evicted from the LRU carries a stale
+        quantization grid that must not seed the next write."""
+        blk = self.pool.alloc()
+        if self._quantized:
+            self._fresh_blocks.add(blk)
+        return blk
+
+    def _flush_fresh_scales(self) -> None:
+        """Reset the scale planes of blocks allocated since the last launch.
+        Runs (bucketed, null-block padded — idempotent) before any jitted
+        write so the first scatter into a recycled block seeds a fresh scale.
+        Released-but-still-queued ids are harmless: a free block's scales
+        may be zeroed; only fork destinations must escape (see
+        ``_make_writable``)."""
+        if not self._fresh_blocks:
+            return
+        fresh = sorted(self._fresh_blocks)
+        self._fresh_blocks = set()
+        n = _bucket(len(fresh), 8)
+        ids = np.full((n,), NULL_BLOCK, np.int32)
+        ids[: len(fresh)] = fresh
+        self._pool = self._jit_reset_scales(self._pool, jnp.asarray(ids))
 
     def _preempt(self, slot: int) -> None:
         """Release a live slot's blocks under pool pressure and requeue the
@@ -698,7 +765,7 @@ class PagedEngine(Engine):
             cached = min(cached, len(req.prompt) - 1)
             try:
                 while len(table) < len(hashes):
-                    table.append(self.pool.alloc())
+                    table.append(self._alloc_fresh())
             except PoolExhausted:
                 for b in table:
                     self.pool.release(b)
@@ -736,8 +803,9 @@ class PagedEngine(Engine):
             pos = start + i
             blk_t[i] = s.table[pos // bs]
             off_t[i] = pos % bs
-        logits, self._pool_k, self._pool_v = self._jit_prefill_chunk(
-            self.params, self._pool_k, self._pool_v, jnp.asarray(toks),
+        self._flush_fresh_scales()
+        logits, self._pool = self._jit_prefill_chunk(
+            self.params, self._pool, jnp.asarray(toks),
             jnp.asarray(self._tables[slot]), jnp.asarray(start, jnp.int32),
             jnp.asarray(n, jnp.int32), jnp.asarray(blk_t), jnp.asarray(off_t),
         )
@@ -782,18 +850,19 @@ class PagedEngine(Engine):
         self._reserve_chunk_blocks(steps)  # may preempt slots under pool pressure
         if self.num_active == 0:
             return 0
+        self._flush_fresh_scales()
         t0 = time.perf_counter()
         out = self._jit_chunk(
-            self.params, self._pool_k, self._pool_v, jnp.asarray(self._tables),
+            self.params, self._pool, jnp.asarray(self._tables),
             jnp.asarray(self._tokens), jnp.asarray(self.kv_lens),
             jnp.asarray(self._active), jnp.asarray(self._budget),
             jnp.asarray(self._temperature), jnp.asarray(self._top_k),
             jnp.asarray(self._top_p), self._key, steps=steps, sampler=self._pick_sampler(),
         )
-        pk, pv, tokens, lens, active, budget, self._key, emitted, masks = out
+        pool, tokens, lens, active, budget, self._key, emitted, masks = out
         jax.block_until_ready(emitted)
         self.stats["decode_time"] += time.perf_counter() - t0
-        self._pool_k, self._pool_v = pk, pv
+        self._pool = pool
         was_active = self._active
         return self._absorb_chunk(tokens, lens, active, budget, emitted, masks, was_active)
 
@@ -806,7 +875,8 @@ class PagedEngine(Engine):
 
     @property
     def kv_pool_bytes(self) -> int:
-        return self._pool_k.nbytes + self._pool_v.nbytes
+        """Device bytes of the whole pool (int8: payloads + scale planes)."""
+        return sum(a.nbytes for a in self._pool.values())
 
     @property
     def live_kv_tokens(self) -> int:

@@ -72,10 +72,13 @@ def cache_shardings(cfg, mesh, cache_struct):
     return jax.tree_util.tree_map_with_path(to_sh, cache_struct)
 
 
+KV_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
 def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
              sampling=None, eos_id=None, seed: int = 0, paged: bool = False,
              block_size: int = 16, prefill_chunk: int = 32,
-             fused: bool | None = None):
+             fused: bool | None = None, kv_dtype: str = "bf16"):
     """Batched generation driver (example/tests scale).
 
     Attention token decoders (dense/moe) route through the continuous-batching
@@ -87,7 +90,10 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
     reuse cached KV blocks and long prompts prefill in ``prefill_chunk``-token
     chunks (DESIGN.md §3) — greedy outputs are identical to the slot engine;
     ``fused`` picks the paged decode-attention path (True = fused Pallas
-    paged-decode kernel, False = gather reference, None = per cfg).
+    paged-decode kernel, False = gather reference, None = per cfg);
+    ``kv_dtype`` ("fp32" | "bf16" | "int8") picks the KV storage format —
+    "int8" (paged only) stores the pool as int8 codes with per-block
+    per-kv-head scales, dequantized inside the read paths (DESIGN.md §6).
     Other families keep the rectangular greedy loop — ssm/hybrid/audio caches
     have no ragged sequence axis for slots to share, and vlm needs per-request
     vision_embeds plumbing the engine's prefill doesn't have yet.
@@ -107,6 +113,13 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
                 "fused= selects the paged decode-attention path; pass paged=True "
                 "(the slot engine would silently ignore it)"
             )
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(f"kv_dtype must be one of {sorted(KV_DTYPES)}, got {kv_dtype!r}")
+        if kv_dtype == "int8" and not paged:
+            raise ValueError(
+                "kv_dtype='int8' is a paged-pool storage format (per-block scales — "
+                "DESIGN.md §6); pass paged=True"
+            )
         if sampling is None:
             sampling = GREEDY
         per_row = list(sampling) if isinstance(sampling, (list, tuple)) else [sampling] * B
@@ -117,10 +130,11 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
         if paged:
             eng = PagedEngine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
                               eos_id=eos_id, seed=seed, block_size=block_size,
-                              prefill_chunk=prefill_chunk, fused=fused)
+                              prefill_chunk=prefill_chunk, fused=fused,
+                              cache_dtype=KV_DTYPES[kv_dtype])
         else:
             eng = Engine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
-                         eos_id=eos_id, seed=seed)
+                         eos_id=eos_id, seed=seed, cache_dtype=KV_DTYPES[kv_dtype])
         uids = [eng.submit(np.asarray(prompt_tokens[b]), max_new, per_row[b]) for b in range(B)]
         results = eng.run()
         pad = eos_id if eos_id is not None else 0
@@ -130,10 +144,12 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
             out[b, : len(toks)] = toks
         return jnp.asarray(out)
 
-    if sampling is not None or eos_id is not None or paged or fused is not None:
+    if (sampling is not None or eos_id is not None or paged or fused is not None
+            or kv_dtype != "bf16"):
         raise ValueError(
-            f"sampling/eos_id/paged/fused require the engine path (dense/moe, no explicit "
-            f"cache); the rectangular loop for family={cfg.family!r} is greedy-only and unpaged"
+            f"sampling/eos_id/paged/fused/kv_dtype require the engine path (dense/moe, no "
+            f"explicit cache); the rectangular loop for family={cfg.family!r} is greedy-only "
+            f"and unpaged"
         )
     prefill, decode = make_serve_fns(cfg, qstate)
     if cache is None:

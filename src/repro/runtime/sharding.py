@@ -213,6 +213,18 @@ def block_pool_spec(cfg, mesh: Mesh) -> P:
     return P(None, None, None, None, None)
 
 
+def block_scale_spec(cfg, mesh: Mesh) -> P:
+    """Dequant scale planes of an int8 block pool, (L, num_blocks, KV)
+    (DESIGN.md §6): same policy as ``block_pool_spec`` — the block axis is a
+    global shared pool (unsharded); the kv-head axis follows the payload's
+    'model' sharding when divisible so each TP shard holds exactly the
+    scales of the heads it owns."""
+    tp = model_axis_size(mesh)
+    if cfg.num_kv_heads and _div(cfg.num_kv_heads, tp):
+        return P(None, None, "model")
+    return P(None, None, None)
+
+
 def ssm_cache_specs(cfg, mesh: Mesh) -> dict[str, P]:
     dp = data_axes(mesh)
     tp = model_axis_size(mesh)

@@ -1,5 +1,8 @@
 """BlockPool unit suite: allocation, refcounts, prefix hashing, CoW, eviction
-(runtime/kv_pool; DESIGN.md §3 invariants I1-I4)."""
+(runtime/kv_pool; DESIGN.md §3 invariants I1-I4), plus the int8 pool's scale
+bookkeeping through ``PagedEngine`` — CoW forks copy scale planes with the
+payload, freshly (re)allocated blocks get their scales reset, and cached
+quantized prefixes replay exactly (DESIGN.md §6)."""
 
 import numpy as np
 import pytest
@@ -149,3 +152,111 @@ def test_fork_of_registered_block_keeps_cache_entry():
     pool.release(a)  # lookup's retain
     pool.release(a)  # original owner
     pool.release(new)
+
+
+# ------------------------------------------------- int8 pool scale invariants
+
+def _int8_engine(**kw):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.runtime.engine import PagedEngine
+
+    cfg = get_config("yi-6b").reduced(num_layers=2).with_quant(softmax_impl="exaq", bits=2)
+    params = build_model(cfg).init(jax.random.PRNGKey(0), jnp.float32)
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 48)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("steps_per_sync", 4)
+    return cfg, params, PagedEngine(cfg, params, seed=0, cache_dtype=jnp.int8, **kw)
+
+
+def test_int8_cow_fork_copies_scales():
+    """The CoW device copy duplicates *all* pool planes — an int8 fork that
+    dropped the scales would dequantize the copied codes on the wrong grid."""
+    import jax.numpy as jnp
+
+    _, _, eng = _int8_engine()
+    pool = dict(eng._pool)
+    pool["k"] = pool["k"].at[:, 2].set(7)
+    pool["k_scale"] = pool["k_scale"].at[:, 2].set(0.25)
+    pool["v_scale"] = pool["v_scale"].at[:, 2].set(0.5)
+    out = eng._jit_copy_block(pool, jnp.asarray(2, jnp.int32), jnp.asarray(3, jnp.int32))
+    assert (np.asarray(out["k"][:, 3]) == 7).all()
+    assert (np.asarray(out["k_scale"][:, 3]) == 0.25).all()
+    assert (np.asarray(out["v_scale"][:, 3]) == 0.5).all()
+
+
+def test_int8_fresh_alloc_resets_scales():
+    """Blocks handed out by alloc (free list or eviction) must shed their
+    stale quantization grid before the next write; blocks obtained via CoW
+    fork are NOT reset (their scale arrives with the copied payload)."""
+    _, _, eng = _int8_engine()
+    pool = dict(eng._pool)
+    pool["k_scale"] = pool["k_scale"].at[:, 1:].set(9.0)
+    pool["v_scale"] = pool["v_scale"].at[:, 1:].set(9.0)
+    eng._pool = pool
+    eng._fresh_blocks = {1, 2}
+    eng._flush_fresh_scales()
+    assert eng._fresh_blocks == set()
+    ks = np.asarray(eng._pool["k_scale"])
+    assert (ks[:, [1, 2]] == 0.0).all()  # reset to the "unset" sentinel
+    assert (ks[:, 3:] == 9.0).all()  # untouched blocks keep their grid
+    assert (np.asarray(eng._pool["v_scale"])[:, [1, 2]] == 0.0).all()
+    eng._flush_fresh_scales()  # empty set: no-op, no recompile churn
+
+
+def test_int8_fork_destination_escapes_scale_reset():
+    """Regression: ``fork()`` allocates internally and can return an id that
+    was ``_alloc_fresh``'d and then released (admission rollback, preemption)
+    while still queued for a scale reset. The fork's scales arrive with the
+    copied payload, so the pending reset must NOT zero them — a zeroed grid
+    dequantizes the fork's codes to all-zero K/V."""
+    _, _, eng = _int8_engine()
+    # shared block a (refcount 2), named by slot 0's table
+    a = eng.pool.alloc()
+    eng.pool.retain(a)
+    s = eng._slots[0]
+    s.uid, s.table = 0, [a]
+    eng._tables[0, 0] = a
+    eng._pool = {k: (v.at[:, a].set(0.125) if k.endswith("scale") else v)
+                 for k, v in eng._pool.items()}
+    # poison: every other block is queued for reset, as after a rollback
+    eng._fresh_blocks = set(range(1, eng.pool.num_blocks)) - {a}
+    eng._make_writable(0, 0)
+    new = s.table[0]
+    assert new != a and new not in eng._fresh_blocks
+    eng._flush_fresh_scales()
+    ks = np.asarray(eng._pool["k_scale"])
+    assert (ks[:, new] == 0.125).all()  # fork kept the copied grid
+    assert (ks[:, a] == 0.125).all()
+
+
+def test_int8_prefix_reuse_replays_fresh_prefill():
+    """A prompt served from *cached quantized blocks* (plus a CoW fork for
+    the appended tail) decodes the same greedy tokens as the same prompt
+    prefilled from scratch on a fresh int8 engine: published codes/scales
+    are immutable, so reuse is indistinguishable from recompute."""
+    rng = np.random.default_rng(5)
+    system = rng.integers(0, 500, 16)  # two full 8-token blocks
+    tail_a = rng.integers(0, 500, 3)
+    tail_b = rng.integers(0, 500, 5)
+
+    cfg, params, shared = _int8_engine(max_slots=2)
+    ua = shared.submit(np.concatenate([system, tail_a]), 6)
+    shared.step_chunk()  # prefill chunk 1: publishes the first system block
+    shared.step_chunk()  # prefill chunk 2: publishes the second
+    ub = shared.submit(np.concatenate([system, tail_b]), 6)
+    res = shared.run()
+    assert shared.stats["prefix_hit_tokens"] >= len(system)
+
+    import jax.numpy as jnp
+    from repro.runtime.engine import PagedEngine
+
+    fresh = PagedEngine(cfg, params, max_slots=1, max_seq=48, block_size=8,
+                        prefill_chunk=8, steps_per_sync=4, seed=0, cache_dtype=jnp.int8)
+    uf = fresh.submit(np.concatenate([system, tail_b]), 6)
+    fres = fresh.run()
+    assert res[ub].tokens == fres[uf].tokens

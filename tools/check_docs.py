@@ -1,7 +1,7 @@
 #!/usr/bin/env python
 """Docs consistency gate (CI `docs` job).
 
-Two checks, both cheap and dependency-free:
+Three checks, all cheap and dependency-free:
 
   1. Internal markdown links in README.md / DESIGN.md / ROADMAP.md resolve to
      files that exist in the repo (http(s) links are skipped; #anchors are
@@ -11,6 +11,11 @@ Two checks, both cheap and dependency-free:
      exists as a `## §X` / `### §X` header in DESIGN.md — and is not reserved.
      DESIGN.md's preamble promises stable section numbers; this keeps the code
      honest about it.
+  3. CLI flag drift: every argparse flag of `src/repro/launch/serve.py` must
+     be mentioned in README.md, and every `--flag` token README mentions must
+     exist in some argparse definition under src/repro/launch/, benchmarks/,
+     or experiments/ — so the serving docs can't silently fall behind the
+     code (or vice versa).
 
 Exit status 0 = clean; 1 = problems (each printed on its own line).
 """
@@ -94,14 +99,47 @@ def check_design_citations() -> list[str]:
     return errors
 
 
+ARGPARSE_FLAG_RE = re.compile(r"""add_argument\(\s*["'](--[A-Za-z][\w-]*)["']""")
+# a flag token in prose/code blocks: "--" + letter start, not the "---" rule
+README_FLAG_RE = re.compile(r"(?<![\w-])--[A-Za-z][\w-]*")
+# CLI-bearing sources whose flags README may legitimately mention
+FLAG_SOURCE_GLOBS = ["src/repro/launch/*.py", "benchmarks/*.py", "experiments/*.py"]
+ALWAYS_KNOWN_FLAGS = {"--help"}  # argparse built-in
+
+
+def argparse_flags(path: Path) -> set[str]:
+    return set(ARGPARSE_FLAG_RE.findall(path.read_text()))
+
+
+def check_cli_flags() -> list[str]:
+    """launch/serve.py flags <-> README, both directions (docs-drift gate)."""
+    readme = (ROOT / "README.md").read_text()
+    readme_flags = set(README_FLAG_RE.findall(readme))
+    serve = ROOT / "src" / "repro" / "launch" / "serve.py"
+    errors = []
+    for flag in sorted(argparse_flags(serve)):
+        if flag not in readme_flags:
+            errors.append(f"README.md: serving flag {flag} ({serve.relative_to(ROOT)}) "
+                          "is undocumented")
+    known = set(ALWAYS_KNOWN_FLAGS)
+    for pattern in FLAG_SOURCE_GLOBS:
+        for path in ROOT.glob(pattern):
+            known |= argparse_flags(path)
+    for flag in sorted(readme_flags - known):
+        errors.append(f"README.md: mentions flag {flag}, which no CLI under "
+                      f"{', '.join(FLAG_SOURCE_GLOBS)} defines")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_design_citations()
+    errors = check_links() + check_design_citations() + check_cli_flags()
     for e in errors:
         print(e)
     if errors:
         print(f"FAIL: {len(errors)} docs problem(s)")
         return 1
-    print("docs OK: links resolve, every DESIGN.md § citation exists")
+    print("docs OK: links resolve, every DESIGN.md § citation exists, "
+          "README and launch/serve.py flags agree")
     return 0
 
 
