@@ -28,7 +28,7 @@ from repro.configs import get_config, list_configs
 from repro.data.pipeline import SyntheticLMData
 from repro.models import build_model
 from repro.optim.adamw import AdamW
-from repro.runtime.train import cross_entropy, init_train_state, make_loss_fn, make_train_step
+from repro.runtime.train import init_train_state, make_loss_fn, make_train_step
 
 
 def _eval_ppl(cfg, params, batches, qstate=None):

@@ -34,6 +34,15 @@ step latency (directional on CPU, where the fused kernel runs in Pallas
 interpret mode while the gather lowers to native XLA). ``--micro-json``
 dumps this part alone for CI artifact upload.
 
+Part 3b is the paged-*prefill* microbenchmark (DESIGN.md §7): one jitted
+``prefill_paged_chunk`` whose window fills 50% of the padded table, fused
+Pallas paged-prefill kernel vs gather-then-attend, at bf16 and int8. It
+reports the modeled per-layer HBM KV bytes to prefill the whole prompt
+(asserted >= 2x in the fused kernel's favor — the gather re-copies the
+dense window every chunk, O(prompt^2) bytes) and the measured chunk
+latency (directional on CPU). The metrics ride in the ``--micro-json``
+object under ``"prefill"``.
+
 Part 4 replays the shared-prefix trace through the paged engine with an
 fp32 pool and an int8 pool (same calibrated EXAQ-INT2 softmax) and asserts
 greedy decode agrees on >= 99% of tokens while the pool shrinks ~4x
@@ -347,6 +356,84 @@ def bench_paged_decode_micro(base, params, args, report):
     return micro
 
 
+def bench_paged_prefill_micro(base, params, args, micro):
+    """Part 3b: fused paged-prefill kernel vs window gather, one jitted chunk.
+
+    Parity is covered by the tier-1 suite (tests/test_paged_prefill.py);
+    here the claims are bandwidth and latency (DESIGN.md §7). The bytes
+    model sums, over all chunks of one prompt, the HBM traffic of the
+    per-layer window read: the gather path reads the window's live blocks,
+    writes the dense rectangular copy, and attention reads it back — every
+    chunk, so copy bytes grow with the square of the prompt — while the
+    fused kernel touches live blocks only (K twice, V once). Asserted
+    >= 2x with the prompt filling 50% of the padded window."""
+    import time
+
+    from repro.kernels.exaq_paged_prefill import paged_prefill_bytes_model
+    from repro.models import build_model
+
+    bs, MB = args.block_size, 8
+    P = MB * bs // 2  # prompt fills 50% of the window, prefilled in >1 chunk
+    C = min(args.prefill_chunk, P)  # clamp so the timed chunk stays inside the
+    start = P - C                   # modeled prompt (last = widest-window chunk)
+    rng = np.random.default_rng(args.seed)
+    tokens = rng.integers(0, base.vocab_size, (1, C)).astype(np.int32)
+    table = np.arange(1, MB + 1, dtype=np.int32)
+    pos = start + np.arange(C)
+    blk_t = table[np.minimum(pos // bs, MB - 1)].astype(np.int32)
+    off_t = (pos % bs).astype(np.int32)
+
+    pre = {"block_size": bs, "max_blocks": MB, "prefill_chunk": C, "prompt_len": P,
+           "occupancy": P / (MB * bs)}
+    for label, fused, dt in (("fused", True, jnp.bfloat16),
+                             ("gather", False, jnp.bfloat16),
+                             ("fused_int8", True, jnp.int8)):
+        cfg = base.with_quant(softmax_impl="exaq", bits=2, use_fused_kernel=fused)
+        model = build_model(cfg)
+        pool = model.init_block_pool(1 + MB, bs, dt)
+        step = jax.jit(lambda pr, tk, pl_, tb, st, cl, bt, ot, m=model:
+                       m.prefill_paged_chunk(pr, tk, pl_, tb, st, cl, bt, ot))
+        a = (params, jnp.asarray(tokens), pool, jnp.asarray(table),
+             jnp.asarray(start, jnp.int32), jnp.asarray(C, jnp.int32),
+             jnp.asarray(blk_t), jnp.asarray(off_t))
+        jax.block_until_ready(step(*a)[0])  # compile
+        iters = 5
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(step(*a)[0])
+        pre[f"{label}_chunk_ms"] = 1e3 * (time.perf_counter() - t0) / iters
+
+    kw = dict(prompt_len=P, chunk=C, kv_heads=base.num_kv_heads, max_blocks=MB,
+              block_size=bs, head_dim=base.resolved_head_dim)
+    m = paged_prefill_bytes_model(kv_dtype="bf16", **kw)
+    m_int8 = paged_prefill_bytes_model(kv_dtype="int8", **kw)
+    pre["modeled_per_layer"] = m
+    pre["modeled_per_layer_int8"] = m_int8
+    pre["modeled_prefill_gather_bytes"] = m["gather_then_attend_bytes"] * base.num_layers
+    pre["modeled_prefill_fused_bytes"] = m["fused_pool_read_bytes"] * base.num_layers
+    pre["bytes_reduction_x"] = m["bytes_reduction_x"]
+    pre["int8_vs_bf16_bytes_reduction_x"] = (
+        m["fused_pool_read_bytes"] / m_int8["fused_pool_read_bytes"]
+    )
+    print(f"paged-prefill micro ({P}-token prompt in {m['chunks']} chunks of {C}, "
+          f"{MB}x{bs}-token window, {100*pre['occupancy']:.0f}% occupancy): "
+          f"modeled KV bytes/prefill {pre['modeled_prefill_gather_bytes']} gather -> "
+          f"{pre['modeled_prefill_fused_bytes']} fused ({m['bytes_reduction_x']:.1f}x less); "
+          f"measured chunk {pre['gather_chunk_ms']:.1f} ms gather vs "
+          f"{pre['fused_chunk_ms']:.1f} ms fused / {pre['fused_int8_chunk_ms']:.1f} ms "
+          f"fused-int8 (CPU: fused runs interpret-mode Pallas — latency is directional)")
+    assert m["bytes_reduction_x"] >= 2.0, (
+        f"fused paged prefill must cut modeled KV bytes >= 2x at 50% occupancy, "
+        f"got {m['bytes_reduction_x']:.2f}x"
+    )
+    assert pre["int8_vs_bf16_bytes_reduction_x"] >= 1.8, (
+        f"int8 pool must cut modeled fused prefill KV bytes >= 1.8x vs bf16, "
+        f"got {pre['int8_vs_bf16_bytes_reduction_x']:.2f}x"
+    )
+    micro["prefill"] = pre
+    return pre
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
@@ -385,6 +472,9 @@ def main():
     print("--- paged-decode microbenchmark: fused kernel vs HBM gather ---")
     micro = bench_paged_decode_micro(base, params, args, report)
 
+    print("--- paged-prefill microbenchmark: fused kernel vs window gather ---")
+    bench_paged_prefill_micro(base, params, args, micro)
+
     print("--- int8 KV pool: greedy parity + memory vs fp32 (DESIGN.md §6) ---")
     bench_kv_dtype(base, params, calib_stats, args, rng, report)
 
@@ -398,7 +488,7 @@ def main():
         print(f"wrote paged-decode micro metrics to {args.micro_json}")
     print("OK: >=2 concurrent ragged requests per jitted step; EXAQ-2bit greedy == exact; "
           ">=50% prefix-cache hits with slot-engine parity on the paged engine; "
-          ">=2x modeled KV bytes cut by the fused paged-decode kernel; "
+          ">=2x modeled KV bytes cut by the fused paged-decode AND paged-prefill kernels; "
           ">=1.8x further cut and >=99% greedy agreement on the int8 pool")
 
 

@@ -10,13 +10,15 @@ for jf in sorted(glob.glob("/root/repo/experiments/dryrun/*.json")):
     tag = os.path.basename(jf).replace(".json", "")
     hf = f"/root/repo/experiments/hlo/{tag}.hlo.gz"
     if not os.path.exists(hf):
-        print("missing hlo:", tag); continue
+        print("missing hlo:", tag)
+        continue
     with gzip.open(hf, "rt") as f:
         hlo = f.read()
     tc = hlo_cost.analyze(hlo, rec["devices"])
     rec["tc_flops"] = tc.flops
     rec["tc_bytes"] = tc.bytes
-    rec["tc_collectives"] = dict(tc.collectives); rec["tc_collectives"]["total"] = tc.collective_total
+    rec["tc_collectives"] = dict(tc.collectives)
+    rec["tc_collectives"]["total"] = tc.collective_total
     rec["tc_collective_counts"] = {k: float(v) for k, v in tc.collective_counts.items()}
     rec["top_collective_sites"] = [
         {"site": k, "bytes": b, "execs": e} for k, b, e in hlo_cost.per_collective_sites(hlo, rec["devices"], top=8)

@@ -8,7 +8,9 @@ from repro.kernels.ops import (
     kv_quantize,
     kv_write_scales,
     paged_decode_attention,
+    paged_prefill_attention,
     repeat_kv,
+    window_valid_mask,
 )
 
 __all__ = [
@@ -19,5 +21,7 @@ __all__ = [
     "kv_quantize",
     "kv_write_scales",
     "paged_decode_attention",
+    "paged_prefill_attention",
     "repeat_kv",
+    "window_valid_mask",
 ]

@@ -153,7 +153,6 @@ def _decode_kernel(
     kv_len = lens_ref[0, 0]
     col_ids = ikv * block_kv + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
     valid = (col_ids < kv_len) & (col_ids < skv)
-    row_ids = jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
 
     @pl.when(ikv == 0)
     def _init():

@@ -66,6 +66,33 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def exaq_accumulate_stage(s, m, valid, *, levels: int, clip: float, lut: tuple[float, ...]):
+    """The EXAQ quantize + LUT + histogram stage shared by BOTH paged
+    kernels' accumulate passes (decode and prefill — they must stay
+    bit-identical for the decode-vs-prefill parity contract to hold).
+
+    s: (rows, bs) raw scores (masked lanes already at -inf); m: (rows, 1)
+    the global row max from pass 1 — the shared quantization anchor; valid:
+    (rows, bs) live-lane mask. Returns (e, dden): the LUT-reconstructed
+    unnormalized weights (masked lanes zeroed) and this chunk's partial
+    histogram denominator — integer counts on the shared grid add exactly
+    across chunks (DESIGN.md §2), so no rescale term exists.
+    """
+    inv_delta = levels / (-clip)
+    codes = jnp.clip(jnp.floor((s - m - clip) * inv_delta), 0, levels - 1).astype(jnp.int32)
+    # LUT as a select chain (VPU-friendly; gathers would leave the vector unit)
+    e = jnp.full(s.shape, lut[0], jnp.float32)
+    for kk in range(1, levels):
+        e = jnp.where(codes == kk, lut[kk], e)
+    e = jnp.where(valid, e, 0.0)
+    dden = jnp.zeros((s.shape[0], 1), jnp.float32)
+    for kk in range(levels):
+        cnt = jnp.sum(jnp.where(valid & (codes == kk), 1, 0).astype(jnp.int32),
+                      axis=-1, keepdims=True)
+        dden = dden + cnt.astype(jnp.float32) * lut[kk]
+    return e, dden
+
+
 def _paged_decode_kernel(
     tables_ref,
     lens_ref,
@@ -127,20 +154,7 @@ def _paged_decode_kernel(
     def _acc_pass():
         s = _scores()
         m = m_ref[:, :1]  # global row max from pass 1 — shared quantization grid
-        inv_delta = levels / (-clip)
-        codes = jnp.clip(jnp.floor((s - m - clip) * inv_delta), 0, levels - 1).astype(jnp.int32)
-        # LUT as a select chain (VPU-friendly; gathers would leave the vector unit)
-        e = jnp.full(s.shape, lut[0], jnp.float32)
-        for kk in range(1, levels):
-            e = jnp.where(codes == kk, lut[kk], e)
-        e = jnp.where(valid, e, 0.0)
-        # chunk-partial histogram denominator: integer counts on the shared
-        # grid add exactly across chunks (DESIGN.md §2) — no rescale needed
-        dden = jnp.zeros((block_q, 1), jnp.float32)
-        for kk in range(levels):
-            cnt = jnp.sum(jnp.where(valid & (codes == kk), 1, 0).astype(jnp.int32),
-                          axis=-1, keepdims=True)
-            dden = dden + cnt.astype(jnp.float32) * lut[kk]
+        e, dden = exaq_accumulate_stage(s, m, valid, levels=levels, clip=clip, lut=lut)
         l_ref[...] = l_ref[...] + dden
         v = v_ref[0, 0].astype(jnp.float32)
         if kv_quant:

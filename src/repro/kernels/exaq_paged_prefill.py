@@ -1,0 +1,317 @@
+"""Pallas TPU kernel: fused chunked-prefill attention over a paged KV pool.
+
+The prefill hot path this kernel deletes (DESIGN.md §7): chunked prefill
+(`attention_prefill_chunk`) scatters a chunk's C projected K/V rows into the
+pool — O(C·Dh) bytes, cheap — and then `gather_block_kv` assembles the
+request's *entire* window `(1, KV, MB·bs, Dh)` as a dense HBM copy so
+attention can read it back. Per chunk that is ~3 rectangular passes over a
+window that grows with every chunk, so prefilling a P-token prompt moves
+O(P²) bytes in copies alone: exactly the term that dominates time-to-first-
+token for the long-prompt / shared-prefix traffic the paged engine targets.
+
+Here the block table drives the DMA directly, mirroring the decode kernel
+(`exaq_paged_attention`): the grid is ``(kv_head, chunk)`` over one request's
+table, the table and the chunk's window length ride the *scalar-prefetch*
+channel, and the K/V BlockSpec index maps pull one pool block per grid step
+straight into VMEM. The dense window copy never exists; the scatter that
+precedes the attend (quantize-on-scatter with §6 scale seeding for int8
+pools) is unchanged and shared with the gather path.
+
+Chunk-combine semantics are the two-pass global grid of
+``exaq_softmax_chunked`` (exact Algo. 2, DESIGN.md §2): pass 1 reduces each
+query row's max over every block it may attend to, pass 2 re-reads K,
+quantizes all scores on the grid anchored at that max, and accumulates the
+PV numerator plus the 2^M-bin histogram denominator. Counts on a shared grid
+add exactly across blocks AND across prefill chunks (each chunk anchors at
+its own rows' true global maxes), so a prompt prefilled in chunks through
+this kernel is bit-identical to a one-shot prefill and matches the gather
+oracle (``kernels.ops.paged_prefill_attention`` with ``use_kernel=False``)
+to fp32 roundoff.
+
+Causality is by *global position*: chunk row ``i`` sits at position
+``start + i`` and attends to window columns ``<= start + i``. Table entries
+at or past ``ceil((start + C) / bs)`` can never be attended (the newest row
+caps the window), so their index maps pin to the null block — consecutive
+identical indices collapse to one DMA and bytes moved track ``start + C``,
+not the padded table width. V's pass-1 index map is pinned the same way, so
+V crosses HBM once: ~2×K + 1×V of live-window bytes per chunk, vs the
+gather's live pool read plus two rectangular passes over the dense copy
+(see ``paged_prefill_bytes_model``).
+
+GQA is native: q is laid out ``(KV, group·C, Dh)`` so one kv head's query
+group forms the q-block rows — K/V are never repeated ``group`` times.
+
+Int8 pools (DESIGN.md §6): the per-(block, kv-head) dequant scales ride the
+scalar-prefetch channel beside the table and each K/V block is dequantized
+in VMEM right after its 8-bit DMA lands, before the EXAQ clip/LUT stages —
+identical to the dequantizing gather oracle, so parity holds at int8 too.
+
+Layouts: q ``(1, H, C, Dh)``; pool_k/pool_v ``(N, KV, bs, Dh)``;
+block_table ``(MB,)`` int32; start scalar int32 (tokens already cached);
+optional k_scale/v_scale ``(N, KV)`` fp32. Compiled-mode tiling wants ``bs``
+a multiple of 8 and ``Dh`` lane-padded (production shapes satisfy both;
+tests run interpret mode where any shape goes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# constants and the accumulate stage are shared with the decode kernel: the
+# two paged kernels must mask, pad, and quantize identically for the
+# decode-vs-prefill parity contract to hold
+from repro.kernels.exaq_paged_attention import _LANES, _NEG_BIG, _round_up, exaq_accumulate_stage
+
+
+def _paged_prefill_kernel(
+    table_ref,
+    info_ref,
+    *refs,
+    bs: int,
+    mb: int,
+    block_q: int,
+    chunk: int,
+    group: int,
+    levels: int,
+    clip: float,
+    lut: tuple[float, ...],
+    scale: float,
+    kv_quant: bool,
+):
+    """Grid (KV, 2*MB): table entries 0..MB-1 are the max pass, MB..2*MB-1
+    the quantize+accumulate pass. Scratch (m, l, acc) carries across the
+    chunk axis; the BlockSpec index maps (not this body) steer the pool DMA.
+    ``info_ref`` is (2,): [start, start + C] — row positions and the live
+    window length. ``kv_quant`` pools carry two extra scalar-prefetch refs,
+    the per-(block, kv-head) dequant scales (DESIGN.md §6)."""
+    if kv_quant:
+        ksc_ref, vsc_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ksc_ref = vsc_ref = None
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    head = pl.program_id(0)
+    j = pl.program_id(1)
+    t = j % mb  # table entry this step touches (same in both passes)
+    start = info_ref[0]
+    win = info_ref[1]  # start + C: the newest row caps the window
+    live = t * bs < win
+    blk = jnp.where(live, table_ref[t], 0)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_BIG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # q rows are (group, C) flattened as r = g*C + i: row r's global query
+    # position is start + (r % C); rows past group*C are lane padding
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_q, bs), 0)
+    col = t * bs + jax.lax.broadcasted_iota(jnp.int32, (block_q, bs), 1)
+    valid = (rows < group * chunk) & (col <= start + rows % chunk)
+
+    def _scores():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        if kv_quant:
+            k = k * ksc_ref[blk, head]  # dequant in VMEM: HBM moved 1 byte/elt
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        return jnp.where(valid, s, _NEG_BIG)
+
+    @pl.when((j < mb) & live)
+    def _max_pass():
+        s = _scores()
+        m_ref[...] = jnp.maximum(m_ref[...], jnp.max(s, axis=-1, keepdims=True))
+
+    @pl.when((j >= mb) & live)
+    def _acc_pass():
+        s = _scores()
+        m = m_ref[:, :1]  # global row max from pass 1 — shared quantization grid
+        e, dden = exaq_accumulate_stage(s, m, valid, levels=levels, clip=clip, lut=lut)
+        l_ref[...] = l_ref[...] + dden
+        v = v_ref[0, 0].astype(jnp.float32)
+        if kv_quant:
+            v = v * vsc_ref[blk, head]
+        acc_ref[...] += jax.lax.dot_general(
+            e, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(j == 2 * mb - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30))[None].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "scale", "interpret"),
+)
+def exaq_paged_prefill_attention(
+    q: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    block_table: jnp.ndarray,
+    start,
+    params,
+    scale: float,
+    *,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused chunked-prefill EXAQ attention for one request over a block pool.
+
+    q: (1, H, C, D) the chunk's projected queries (rows at global positions
+    ``start + i``); pool_k/pool_v: (N, KV, bs, D) with this chunk's K/V
+    already scattered in; block_table: (MB,) int32 block ids (null-block
+    padded); start: scalar int32 tokens cached before this chunk. An int8
+    pool additionally takes k_scale/v_scale (N, KV) fp32 dequant scales
+    (DESIGN.md §6), scalar-prefetched beside the table. Returns
+    (1, H, C, D) fp32. Global-grid (exact Algo. 2) semantics — bit-identical
+    to a one-shot prefill of the same window.
+    """
+    _, H, C, D = q.shape
+    N, KV, bs, _ = pool_k.shape
+    MB = block_table.shape[0]
+    group = H // KV
+    kv_quant = pool_k.dtype == jnp.int8
+    if (k_scale is not None) != kv_quant or (v_scale is not None) != kv_quant:
+        raise ValueError("int8 pools require both k_scale and v_scale; fp pools forbid them")
+    q = q[0].reshape(KV, group, C, D).reshape(KV, group * C, D)
+    block_q = _round_up(max(group * C, 8), 8)
+    if block_q != group * C:
+        q = jnp.pad(q, ((0, 0), (0, block_q - group * C), (0, 0)))
+    d_pad = _round_up(max(D, _LANES), _LANES)
+    if d_pad != D:
+        # production head dims are lane-aligned; the pad only fires on the
+        # small shapes tests use (interpret mode), never on the serving path
+        pad = ((0, 0), (0, 0), (0, d_pad - D))
+        q = jnp.pad(q, pad)
+        pad4 = ((0, 0), (0, 0), (0, 0), (0, d_pad - D))
+        pool_k = jnp.pad(pool_k, pad4)
+        pool_v = jnp.pad(pool_v, pad4)
+
+    table = block_table.astype(jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    info = jnp.stack([start, start + C])
+    lut = tuple(float(x) for x in params.lut_np())
+
+    def _k_index(h, j, tbl, inf, *sc):
+        # future/dead-tail entries -> null block; consecutive identical
+        # indices are a single DMA, so bytes track start + C, not MB*bs
+        t = j % MB
+        return (jnp.where(t * bs < inf[1], tbl[t], 0), h, 0, 0)
+
+    def _v_index(h, j, tbl, inf, *sc):
+        # V is only consumed by the accumulate pass; pin the max pass (and
+        # future blocks) to the null block so V moves over HBM exactly once
+        t = j % MB
+        return (jnp.where((j >= MB) & (t * bs < inf[1]), tbl[t], 0), h, 0, 0)
+
+    def _q_index(h, j, tbl, inf, *sc):
+        return (h, 0, 0)
+
+    prefetch = (table, info) + ((k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+                                if kv_quant else ())
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=(KV, 2 * MB),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d_pad), _q_index),
+            pl.BlockSpec((1, 1, bs, d_pad), _k_index),
+            pl.BlockSpec((1, 1, bs, d_pad), _v_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d_pad), _q_index),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, d_pad), jnp.float32),
+        ],
+    )
+    kern = functools.partial(
+        _paged_prefill_kernel,
+        bs=bs, mb=MB, block_q=block_q, chunk=C, group=group,
+        levels=params.levels, clip=float(params.clip), lut=lut, scale=float(scale),
+        kv_quant=kv_quant,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((KV, block_q, d_pad), jnp.float32),
+        # only the chunk axis carries scratch state; kv-head programs are
+        # independent and may partition across cores
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*prefetch, q, pool_k, pool_v)
+    return out[:, : group * C, :D].reshape(KV * group, C, D)[None]
+
+
+def paged_prefill_bytes_model(
+    *,
+    prompt_len: int,
+    chunk: int,
+    kv_heads: int,
+    max_blocks: int,
+    block_size: int,
+    head_dim: int,
+    start_cached: int = 0,
+    dtype_bytes: int = 2,
+    kv_dtype: str | None = None,
+) -> dict:
+    """Modeled HBM KV bytes per layer to prefill one prompt, gather vs fused.
+
+    Chunked prefill runs ``ceil((prompt_len - start_cached) / chunk)`` chunks;
+    at each, the window is ``start + C`` tokens. gather_then_attend:
+    ``gather_block_kv`` reads the window's *live* blocks from the pool,
+    writes the dense rectangular ``max_blocks``-wide copy, and attention
+    reads the copy back — (live + 2 × rect) passes over each of K and V,
+    every chunk, so copy bytes grow O(prompt²). fused_pool_read: the kernel
+    touches live blocks only — K twice (max + accumulate pass), V once. The
+    O(C·Dh) scatter is identical on both paths and excluded. Pure arithmetic
+    so benchmarks and tests can assert the ≥2x bandwidth win without
+    hardware counters.
+
+    ``kv_dtype`` ("fp32" | "bf16" | "int8") sizes the pool element instead
+    of the raw ``dtype_bytes`` knob; int8 (DESIGN.md §6) adds the 4-byte
+    per-(block, kv-head) scale to every pool-block read and prices the
+    gather path's dense dequantized copy at fp32 width.
+    """
+    from repro.kernels.exaq_paged_attention import KV_DTYPE_BYTES
+
+    if kv_dtype is not None:
+        dtype_bytes = KV_DTYPE_BYTES[kv_dtype]
+    scale_bytes = kv_heads * 4 if kv_dtype == "int8" else 0
+    dense_bytes_elt = 4 if kv_dtype == "int8" else dtype_bytes
+    block_bytes = kv_heads * block_size * head_dim * dtype_bytes + scale_bytes
+    dense_block_bytes = kv_heads * block_size * head_dim * dense_bytes_elt
+
+    gather = fused = live_sum = chunks = 0
+    start = start_cached
+    while start < prompt_len:
+        c = min(chunk, prompt_len - start)
+        live = -(-(start + c) // block_size)
+        gather += (live * block_bytes + 2 * max_blocks * dense_block_bytes) * 2
+        fused += live * (2 + 1) * block_bytes  # 2x K + 1x V, live blocks only
+        live_sum += live
+        start += c
+        chunks += 1
+    return {
+        "kv_dtype": kv_dtype,
+        "prompt_len": prompt_len,
+        "chunk": chunk,
+        "chunks": chunks,
+        "gather_then_attend_bytes": int(gather),
+        "fused_pool_read_bytes": int(fused),
+        "bytes_reduction_x": gather / max(fused, 1),
+        "live_block_reads": int(live_sum),
+        "rect_blocks_per_chunk": int(max_blocks),
+        "block_bytes": int(block_bytes),
+    }

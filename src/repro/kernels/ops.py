@@ -16,6 +16,7 @@ from repro.core.quantizer import QuantParams
 from repro.kernels import ref
 from repro.kernels.exaq_attention import exaq_decode_attention, flash_exaq_attention
 from repro.kernels.exaq_paged_attention import exaq_paged_decode_attention
+from repro.kernels.exaq_paged_prefill import exaq_paged_prefill_attention
 from repro.kernels.exaq_softmax import exaq_softmax_pallas
 
 # Rows longer than this take the chunked path (fp32 row bytes vs ~16 MiB VMEM).
@@ -147,6 +148,33 @@ def exaq_attention(
     )
 
 
+def window_valid_mask(width: int, upto: jnp.ndarray) -> jnp.ndarray:
+    """Per-row live-window mask for paged attention windows.
+
+    ``upto``: (S, Q) int32 *exclusive* upper bounds — decode passes
+    ``kv_lens[:, None]`` (each slot's single query row sees [0, len)),
+    chunked prefill passes ``start + row + 1`` per chunk row (causal by
+    global position). Returns (S, 1, Q, width) bool, broadcast over heads —
+    the ONE construction of the window-validity mask, shared by
+    ``attention_decode_paged``, ``attention_prefill_chunk``, and the fused
+    kernels' gather oracles (they must mask identically for parity to hold).
+    """
+    cols = jnp.arange(width, dtype=jnp.int32)
+    return cols[None, None, None, :] < upto[:, None, :, None]
+
+
+def exaq_weights_ref(s: jnp.ndarray, valid: jnp.ndarray, params: QuantParams) -> jnp.ndarray:
+    """Global-grid Algo. 2 weights from raw scores (..., Q, W): anchor at the
+    masked row max, quantize, LUT, zero masked lanes, normalize (guarded).
+    The jnp oracle both paged kernels are tested against."""
+    m = jnp.max(jnp.where(valid, s, -1e30), axis=-1, keepdims=True)
+    inv_delta = params.levels / (-params.clip)
+    codes = jnp.clip(jnp.floor((s - m - params.clip) * inv_delta), 0, params.levels - 1)
+    lutv = tuple(float(v) for v in params.lut_np())
+    e = jnp.where(valid, ref._lut_select(codes, lutv), 0.0)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
 def decode_attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -161,16 +189,9 @@ def decode_attention(
     """Single-step decode attention over a KV cache with EXAQ softmax."""
     if not use_kernel:
         kr, vr = _repeat_kv(q, k, v)
-        n = kr.shape[2]
         s = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) * scale
-        valid = jnp.arange(n)[None, None, None, :] < kv_lens[:, None, None, None]
-        s = jnp.where(valid, s, -1e30)
-        m = jnp.max(s, axis=-1, keepdims=True)
-        inv_delta = params.levels / (-params.clip)
-        codes = jnp.clip(jnp.floor((s - m - params.clip) * inv_delta), 0, params.levels - 1)
-        lutv = tuple(float(v) for v in params.lut_np())
-        e = jnp.where(valid, ref._lut_select(codes, lutv), 0.0)
-        p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+        valid = window_valid_mask(kr.shape[2], kv_lens.astype(jnp.int32)[:, None])
+        p = exaq_weights_ref(s, valid, params)
         return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
     return exaq_decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, interpret=on_cpu())
 
@@ -238,13 +259,15 @@ def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.
     ``kv_lens``. Table padding (the null block, id 0) gathers garbage that the
     length mask excludes.
 
-    ``kv_lens`` (S,) live tokens per slot, when given, clamps each slot's
-    table to its live block count (ceil(len/bs)): dead-tail entries are
-    redirected to the null block before the gather, so the reference path
-    reads each slot's live blocks plus one shared null block instead of the
-    full rectangular table (shapes stay static — the clamp is a ``where``,
-    not a slice, so it works under jit with traced lengths). Results are
-    unchanged: dead-tail lanes were always masked out by the caller.
+    ``kv_lens`` — (S,) live tokens per slot, or a scalar broadcast to every
+    slot (the chunked-prefill call site passes its scalar window length
+    ``start + C`` directly) — when given, clamps each slot's table to its
+    live block count (ceil(len/bs)): dead-tail entries are redirected to the
+    null block before the gather, so the reference path reads each slot's
+    live blocks plus one shared null block instead of the full rectangular
+    table (shapes stay static — the clamp is a ``where``, not a slice, so it
+    works under jit with traced lengths). Results are unchanged: dead-tail
+    lanes were always masked out by the caller.
 
     ``k_scale``/``v_scale`` (N, KV) fp32, required for an int8 pool
     (DESIGN.md §6): each gathered block is dequantized ``codes * scale``
@@ -262,7 +285,9 @@ def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.
     if kv_lens is not None:
         MB = block_tables.shape[1]
         bs = pool_k.shape[2]
-        live = jnp.arange(MB, dtype=jnp.int32)[None, :] * bs < kv_lens.astype(jnp.int32)[:, None]
+        kv_lens = jnp.broadcast_to(jnp.asarray(kv_lens, jnp.int32).reshape(-1),
+                                   (block_tables.shape[0],))
+        live = jnp.arange(MB, dtype=jnp.int32)[None, :] * bs < kv_lens[:, None]
         block_tables = jnp.where(live, block_tables, 0)  # 0 == kv_pool.NULL_BLOCK
 
     def g(pool, scale):
@@ -320,3 +345,59 @@ def paged_decode_attention(
         )
     k, v = gather_block_kv(pool_k, pool_v, block_tables, kv_lens, k_scale, v_scale)
     return decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, use_kernel=False)
+
+
+def paged_prefill_attention(
+    q: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    block_table: jnp.ndarray,
+    start,
+    params: QuantParams,
+    scale: float,
+    *,
+    k_scale: jnp.ndarray | None = None,
+    v_scale: jnp.ndarray | None = None,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """One chunk of chunked-prefill attention over a block-paged KV cache.
+
+    The prefill-side mirror of ``paged_decode_attention`` (DESIGN.md §7):
+    the chunk's K/V are already scattered into the pool; this attends the
+    chunk's C query rows (global positions ``start + i``) causally against
+    the request's whole window, reading K/V from the pool.
+
+    ``use_kernel=True`` (the serving hot path) dispatches the fused Pallas
+    kernel (``kernels/exaq_paged_prefill.py``): block-table-indexed K/V DMA
+    straight from the pool, EXAQ quantize + LUT accumulation in VMEM, and
+    the two-pass global-grid combine — the dense per-chunk window copy the
+    gather materializes never exists, so prefill bytes stop growing
+    O(prompt²) in copies. On CPU the same kernel runs in interpret mode.
+
+    ``use_kernel=False`` keeps the gather-then-attend reference: assemble
+    the window (live blocks only — entries at/past ``ceil((start+C)/bs)``
+    clamp to the null block) and run the global-grid jnp path. Both anchor
+    each row's quantization grid at its true global max, so chunking is
+    invisible to the softmax (§2) and the two paths agree to fp32 roundoff.
+
+    For an int8 pool (DESIGN.md §6) pass ``k_scale``/``v_scale`` (N, KV):
+    the fused kernel scalar-prefetches them and dequantizes blocks in VMEM;
+    the gather path dequantizes during assembly.
+
+    q: (1, H, C, Dh); pool_{k,v}: (N, KV, bs, Dh); block_table: (MB,);
+    start: scalar int32 tokens already cached -> (1, H, C, Dh) fp32.
+    """
+    if use_kernel:
+        return exaq_paged_prefill_attention(
+            q, pool_k, pool_v, block_table, start, params, scale,
+            k_scale=k_scale, v_scale=v_scale, interpret=on_cpu()
+        )
+    C = q.shape[2]
+    kg, vg = gather_block_kv(pool_k, pool_v, block_table[None], start + C,
+                             k_scale, v_scale)  # (1, KV, W, Dh)
+    kk, vv = _repeat_kv(q, kg, vg)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
+    rows = start + jnp.arange(C, dtype=jnp.int32)
+    valid = window_valid_mask(kk.shape[2], (rows + 1)[None, :])
+    p = exaq_weights_ref(s, valid, params)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))

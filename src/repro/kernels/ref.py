@@ -105,7 +105,7 @@ def flash_exaq_attention_ref(
     acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
 
     def body(carry, j):
-        m, l, acc = carry
+        m, den, acc = carry
         start = j * block_kv
         kj = jax.lax.dynamic_slice_in_dim(k, start, block_kv, axis=2)
         vj = jax.lax.dynamic_slice_in_dim(v, start, block_kv, axis=2)
@@ -121,21 +121,21 @@ def flash_exaq_attention_ref(
         e = jnp.where(valid, e, 0.0)
         alpha = jnp.exp(m - m_new)
         # histogram accumulation of the block denominator
-        dden = jnp.zeros_like(l)
+        dden = jnp.zeros_like(den)
         for kk in range(levels):
             cnt = jnp.sum((codes == kk) & valid, axis=-1, keepdims=True)
             dden = dden + cnt.astype(jnp.float32) * lut[kk]
-        l_new = alpha * l + dden
+        den_new = alpha * den + dden
         acc_new = alpha * acc + jnp.einsum("bhqk,bhkd->bhqd", e, vj.astype(jnp.float32))
-        return (m_new, l_new, acc_new), None
+        return (m_new, den_new, acc_new), None
 
     # pad kv to block multiple so dynamic_slice stays in range
     pad = nkv * block_kv - Skv
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nkv))
-    return acc / jnp.maximum(l, 1e-30)
+    (m, den, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(nkv))
+    return acc / jnp.maximum(den, 1e-30)
 
 
 def exaq_attention_global_ref(

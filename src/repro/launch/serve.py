@@ -9,10 +9,11 @@ prompt lengths, slot refill, per-request sampling, one jitted decode step for
 all active slots. ``--paged`` swaps in the block-paged engine (DESIGN.md §3):
 a global KV block pool with shared-prefix reuse and chunked prefill
 (``--block-size`` / ``--prefill-chunk`` / ``--num-blocks`` tune it;
-``--fused`` / ``--no-fused`` pick the fused Pallas paged-decode kernel vs
-the gather-then-dispatch reference for decode attention; ``--kv-dtype
-int8`` stores the pool as int8 codes with per-block scales, dequantized
-inside the decode kernel — DESIGN.md §6); with ``--shared-prefix N``
+``--fused`` / ``--no-fused`` pick the fused Pallas paged-decode +
+paged-prefill kernels vs the gather-then-dispatch references for paged
+attention — DESIGN.md §3/§7; ``--kv-dtype int8`` stores the pool as int8
+codes with per-block scales, dequantized inside the fused kernels —
+DESIGN.md §6); with ``--shared-prefix N``
 every request opens with the same N-token system prompt, so the printed
 prefix-cache hit rate shows the reuse win. Other families fall back to
 the rectangular greedy loop in ``runtime.serve.generate``.
@@ -57,10 +58,11 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="pool size in blocks; 0 = full provisioning (paged)")
     ap.add_argument("--fused", dest="fused", action="store_true", default=None,
-                    help="paged decode: fused Pallas paged-decode kernel (no HBM KV "
-                         "gather; needs --impl exaq)")
+                    help="paged serving: fused Pallas paged-decode AND paged-prefill "
+                         "kernels (no HBM KV gather on decode, no dense window copy "
+                         "per prefill chunk; needs --impl exaq)")
     ap.add_argument("--no-fused", dest="fused", action="store_false",
-                    help="paged decode: force the gather-then-dispatch reference")
+                    help="paged serving: force the gather-then-dispatch references")
     ap.add_argument("--kv-dtype", default="bf16", choices=["fp32", "bf16", "int8"],
                     help="KV cache storage dtype; int8 (paged only) stores the pool "
                          "quantized with per-block scales (DESIGN.md §6)")

@@ -76,7 +76,6 @@ def main():
         start = int(meta["step"])
         print(f"resumed from step {start}")
 
-    ctx = (mesh, shd.activation_rules(mesh, shd.make_activation_rules(cfg, mesh))) if mesh else None
     if mesh:
         st_sh = train_rt.state_shardings(cfg, mesh, jax.eval_shape(lambda: state))
         with mesh:

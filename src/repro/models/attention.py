@@ -18,7 +18,6 @@ behaviour, differentiable and remat-friendly.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
@@ -235,7 +234,6 @@ def _fused_prefill_attention(qh, kh, vh, cfg, statics: AttnStatics):
     from jax.sharding import PartitionSpec as P
 
     from repro.core.quantizer import exaq_params
-    from repro.kernels import ops
     from repro.runtime import sharding as shd
 
     p = exaq_params(cfg.quant.sigma_default, statics.bits, rule=cfg.quant.clip_rule)
@@ -328,7 +326,7 @@ def attention_decode(params, x, cfg, statics: AttnStatics, clip, cache_k, cache_
     dh = cfg.resolved_head_dim
     s = jnp.einsum("bhqd,bhkd->bhqk", qh, kk).astype(jnp.float32) * dh**-0.5
     Smax = cache_k.shape[2]
-    valid = (jnp.arange(Smax, dtype=jnp.int32) <= pos)[None, None, None, :]
+    valid = ops.window_valid_mask(Smax, jnp.reshape(pos + 1, (1, 1)))
     w = _weights(s, statics, clip, valid)
     o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
     o = jnp.swapaxes(o, 1, 2).reshape(B, 1, -1).astype(x.dtype)
@@ -364,7 +362,6 @@ def attention_decode_ragged(params, x, cfg, statics: AttnStatics, clip, cache_k,
         # single Pallas dispatch over all slots (static clip from default sigma,
         # like the fused prefill path — traced per-layer clips stay on jnp)
         from repro.core.quantizer import exaq_params
-        from repro.kernels import ops
 
         p = exaq_params(cfg.quant.sigma_default, statics.bits, rule=cfg.quant.clip_rule)
         o = ops.decode_attention(qh, new_k, new_v, kv_lens, p, dh**-0.5)
@@ -373,7 +370,7 @@ def attention_decode_ragged(params, x, cfg, statics: AttnStatics, clip, cache_k,
         kk = _repeat_kv(new_k, group)
         vv = _repeat_kv(new_v, group)
         s = jnp.einsum("bhqd,bhkd->bhqk", qh, kk).astype(jnp.float32) * dh**-0.5
-        valid = jnp.arange(Smax, dtype=jnp.int32)[None, None, None, :] < kv_lens[:, None, None, None]
+        valid = ops.window_valid_mask(Smax, kv_lens[:, None])
         w = _weights(s, statics, clip, valid)
         o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
     o = jnp.swapaxes(o, 1, 2).reshape(B, 1, -1).astype(x.dtype)
@@ -461,8 +458,7 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
         kk = _repeat_kv(kg, group)
         vv = _repeat_kv(vg, group)
         s = jnp.einsum("bhqd,bhkd->bhqk", qh, kk).astype(jnp.float32) * dh**-0.5
-        W = kk.shape[2]
-        valid = jnp.arange(W, dtype=jnp.int32)[None, None, None, :] < kv_lens[:, None, None, None]
+        valid = ops.window_valid_mask(kk.shape[2], kv_lens[:, None])
         w = _weights(s, statics, clip, valid)
         o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
     o = jnp.swapaxes(o, 1, 2).reshape(B, 1, -1).astype(x.dtype)
@@ -478,17 +474,30 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
     Processes ``C`` prompt tokens at global positions ``start + i`` for one
     request: projects chunk K/V, scatters them into the pool at the host-
     computed targets (``blk_t[i]``, ``off_t[i]``; padded rows target the null
-    block), then gathers the request's whole window — which now includes this
-    chunk's keys — and attends causally by *global position*
-    (``key_pos <= start + row``). Because the EXAQ grid anchors at each row's
-    global max, chunking the prefill leaves the softmax bit-identical to a
-    one-shot prefill of the same prompt (§2: partial histograms add exactly).
+    block), then attends causally by *global position*
+    (``key_pos <= start + row``) against the request's whole window — which
+    now includes this chunk's keys. Because the EXAQ grid anchors at each
+    row's global max, chunking the prefill leaves the softmax bit-identical
+    to a one-shot prefill of the same prompt (§2: partial histograms add
+    exactly).
+
+    Attention dispatch (DESIGN.md §7, fused paged prefill): with
+    ``use_fused_kernel`` + exaq the fused Pallas kernel
+    (``kernels/exaq_paged_prefill.py``) reads the window's K/V blocks
+    straight from the pool via the scalar-prefetched block table — the dense
+    per-chunk window copy the gather materializes (the O(prompt²) bytes term
+    of chunked prefill) never exists. Otherwise the gather-then-attend
+    reference runs. Both anchor at the global row max so the paths agree to
+    fp32 roundoff — under the same clip: like the fused decode path, the
+    kernel folds the default-sigma clip as a compile-time constant, so a
+    *calibrated* per-layer qstate is honored by the gather path only.
 
     For an int8 pool (DESIGN.md §6) the scatter quantizes: a scatter-max
     collects each *target block's* per-kv-head amax over the rows this chunk
     writes into it, seeds still-unset block scales from that, and the rows
-    quantize at their block's (now fixed) scale. The window gather
-    dequantizes, so chunked-prefill attention still runs in fp.
+    quantize at their block's (now fixed) scale. The read paths dequantize
+    (the fused kernel in VMEM, the gather during assembly), so
+    chunked-prefill attention still runs in fp.
 
     x: (1, C, D) chunk embeddings (right-padded); block_table: (MB,) int32;
     start: scalar int32 (tokens already cached); blk_t/off_t: (C,) int32;
@@ -497,7 +506,6 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
     pools and (pool_k, pool_v, k_scale, v_scale) for int8 pools.
     """
     B, C, _ = x.shape
-    bs = pool_k.shape[2]
     quantized = k_scale is not None
     positions = (start + jnp.arange(C, dtype=jnp.int32))[None, :]  # (1, C)
     q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
@@ -515,22 +523,30 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
         new_pool_k = pool_k.at[blk_t, :, off_t].set(k[0].astype(pool_k.dtype))  # (C, KV, Dh) targets
         new_pool_v = pool_v.at[blk_t, :, off_t].set(v[0].astype(pool_v.dtype))
 
-    # window live length: everything cached before this chunk plus the chunk
-    # itself — table entries past ceil((start+C)/bs) clamp to the null block
-    kg, vg = ops.gather_block_kv(new_pool_k, new_pool_v, block_table[None],
-                                 jnp.reshape(start + C, (1,)),
-                                 k_scale, v_scale)  # (1, KV, W, Dh)
     qh = jnp.swapaxes(q, 1, 2)  # (1, H, C, Dh)
-    group = cfg.num_heads // cfg.num_kv_heads
-    kk = _repeat_kv(kg, group)
-    vv = _repeat_kv(vg, group)
     dh = cfg.resolved_head_dim
-    s = jnp.einsum("bhqd,bhkd->bhqk", qh, kk).astype(jnp.float32) * dh**-0.5
-    W = kk.shape[2]
-    rows = start + jnp.arange(C, dtype=jnp.int32)
-    valid = jnp.arange(W, dtype=jnp.int32)[None, None, None, :] <= rows[None, None, :, None]
-    w = _weights(s, statics, clip, valid)
-    o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
+    if statics.use_fused_kernel and statics.impl == "exaq":
+        # static clip from the default sigma, like the fused decode path:
+        # the kernel's clip/LUT are compile-time immediates, so calibrated
+        # per-layer *traced* clips stay on the gather/jnp path
+        from repro.core.quantizer import exaq_params
+
+        p = exaq_params(cfg.quant.sigma_default, statics.bits, rule=cfg.quant.clip_rule)
+        o = ops.paged_prefill_attention(qh, new_pool_k, new_pool_v, block_table, start,
+                                        p, dh**-0.5, k_scale=k_scale, v_scale=v_scale)
+    else:
+        # window live length: everything cached before this chunk plus the
+        # chunk itself — entries past ceil((start+C)/bs) clamp to null
+        kg, vg = ops.gather_block_kv(new_pool_k, new_pool_v, block_table[None],
+                                     start + C, k_scale, v_scale)  # (1, KV, W, Dh)
+        group = cfg.num_heads // cfg.num_kv_heads
+        kk = _repeat_kv(kg, group)
+        vv = _repeat_kv(vg, group)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qh, kk).astype(jnp.float32) * dh**-0.5
+        rows = start + jnp.arange(C, dtype=jnp.int32)
+        valid = ops.window_valid_mask(kk.shape[2], (rows + 1)[None, :])
+        w = _weights(s, statics, clip, valid)
+        o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
     o = jnp.swapaxes(o, 1, 2).reshape(B, C, -1).astype(x.dtype)
     out = jnp.einsum("bse,ed->bsd", o, params["wo"].astype(x.dtype))
     new_kv = (new_pool_k, new_pool_v) + ((k_scale, v_scale) if quantized else ())

@@ -82,7 +82,6 @@ def _ssd_chunk(h, xs, dt, a, Bm, Cm):
 def ssd_scan(xs, dt, a, Bm, Cm, h0, chunk: int):
     """Full sequence via scan over chunks. xs: (b, S, nh, hd). Returns y, h_T."""
     b, S, nh, hd = xs.shape
-    ds = Bm.shape[-1]
     nc = -(-S // chunk)
     pad = nc * chunk - S
     if pad:

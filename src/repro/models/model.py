@@ -18,12 +18,10 @@ SPMD compiles. Families:
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import clipping
 from repro.models import attention as attn
@@ -627,10 +625,14 @@ class Model:
         table; start scalar — tokens already cached (prefix hits + previous
         chunks); chunk_len scalar — live tokens in this chunk; blk_t/off_t
         (C,) host-computed scatter targets (padded rows -> null block).
-        Attends causally by global position against the gathered window, so
+        Attends causally by global position against the request's window, so
         a prompt prefilled in chunks matches a one-shot prefill bit-for-bit
-        (DESIGN.md §3). int8 pools carry "k_scale"/"v_scale" planes that the
-        scatter seeds and the gather dequantizes against (DESIGN.md §6).
+        (DESIGN.md §3). With ``cfg.quant.use_fused_kernel`` + exaq, every
+        layer's attention runs the fused Pallas paged-prefill kernel
+        (block-table-indexed pool reads, no dense window gather —
+        DESIGN.md §7); otherwise the gather-then-attend reference. int8
+        pools carry "k_scale"/"v_scale" planes that the scatter seeds and
+        the read paths dequantize against (DESIGN.md §6).
         Returns (logits (1, V) at the chunk's last live row, new_pool) —
         only the final chunk's logits seed sampling.
         """

@@ -20,7 +20,9 @@ class AdamW:
     clip_norm: float = 1.0
 
     def init(self, params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return {
             "m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
@@ -59,7 +61,7 @@ class AdamW:
 
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
 
 
 def apply_updates(params, updates):

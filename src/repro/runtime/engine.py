@@ -503,17 +503,18 @@ class PagedEngine(Engine):
     scales host-reset to the "unset" sentinel before the next device write
     so recycled blocks can't inherit a stale quantization grid.
 
-    ``fused`` selects the decode attention path (DESIGN.md §3, fused paged
-    decode): ``True`` dispatches the fused Pallas paged-decode kernel —
-    block-table-indexed K/V loads straight from the pool, no HBM gather —
-    requires ``softmax_impl="exaq"``; ``False`` forces the gather-then-
-    dispatch reference; ``None`` (default) keeps whatever
-    ``cfg.quant.use_fused_kernel`` says. Both paths share the global-grid
-    EXAQ combine, so greedy outputs agree under the default qstate
-    (asserted by the tier-1 suite). Caveat: the fused kernel folds the
-    default-sigma clip as a compile-time constant — a *calibrated*
-    per-layer ``qstate`` only takes effect on the gather path, so keep
-    ``fused=False`` when serving calibrated clips.
+    ``fused`` selects the paged attention path for BOTH halves of the
+    serving loop (DESIGN.md §3 fused paged decode, §7 fused paged prefill):
+    ``True`` dispatches the fused Pallas kernels — block-table-indexed K/V
+    loads straight from the pool, no HBM gather copy on decode steps and no
+    dense window copy per prefill chunk — requires ``softmax_impl="exaq"``;
+    ``False`` forces the gather-then-dispatch references; ``None``
+    (default) keeps whatever ``cfg.quant.use_fused_kernel`` says. All
+    paths share the global-grid EXAQ combine, so greedy outputs agree
+    under the default qstate (asserted by the tier-1 suite). Caveat: the
+    fused kernels fold the default-sigma clip as a compile-time constant —
+    a *calibrated* per-layer ``qstate`` only takes effect on the gather
+    paths, so keep ``fused=False`` when serving calibrated clips.
     """
 
     def __init__(

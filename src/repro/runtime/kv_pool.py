@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import zlib
 from collections import OrderedDict, deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -16,8 +16,6 @@ and their results are masked — the standard single-program formulation.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map

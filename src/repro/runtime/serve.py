@@ -10,8 +10,6 @@ integer-histogram composition pays off; see DESIGN.md §2)."""
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -89,8 +87,9 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
     block-paged engine (``runtime.engine.PagedEngine``): shared-prefix rows
     reuse cached KV blocks and long prompts prefill in ``prefill_chunk``-token
     chunks (DESIGN.md §3) — greedy outputs are identical to the slot engine;
-    ``fused`` picks the paged decode-attention path (True = fused Pallas
-    paged-decode kernel, False = gather reference, None = per cfg);
+    ``fused`` picks the paged attention path for decode steps AND prefill
+    chunks (True = fused Pallas paged-decode + paged-prefill kernels,
+    False = gather references, None = per cfg — DESIGN.md §3/§7);
     ``kv_dtype`` ("fp32" | "bf16" | "int8") picks the KV storage format —
     "int8" (paged only) stores the pool as int8 codes with per-block
     per-kv-head scales, dequantized inside the read paths (DESIGN.md §6).
@@ -110,8 +109,8 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
 
         if fused is not None and not paged:
             raise ValueError(
-                "fused= selects the paged decode-attention path; pass paged=True "
-                "(the slot engine would silently ignore it)"
+                "fused= selects the paged attention kernels (decode + prefill); pass "
+                "paged=True (the slot engine would silently ignore it)"
             )
         if kv_dtype not in KV_DTYPES:
             raise ValueError(f"kv_dtype must be one of {sorted(KV_DTYPES)}, got {kv_dtype!r}")

@@ -9,7 +9,6 @@ Optional cross-pod int8 gradient compression lives in optim/compression.py
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

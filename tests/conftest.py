@@ -2,3 +2,28 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def quantize_pool():
+    """fp pool -> (int8 codes, per-(block, kv-head) scales) the way the write
+    path would store it (DESIGN.md §6): scale = margin * amax / 127. The ONE
+    test-side encoding of the write-path contract, shared by the paged-decode
+    and paged-prefill kernel suites."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import KV_QMAX, KV_SCALE_MARGIN, kv_quantize
+
+    def _quantize(pk, pv):
+        def q(pool):
+            amax = jnp.max(jnp.abs(pool), axis=(2, 3))  # (N, KV)
+            scale = KV_SCALE_MARGIN * amax / KV_QMAX
+            return kv_quantize(pool, scale[:, :, None, None]), scale
+
+        qk, ks = q(pk.astype(jnp.float32))
+        qv, vs = q(pv.astype(jnp.float32))
+        return qk, qv, ks, vs
+
+    return _quantize

@@ -1,0 +1,115 @@
+"""Comparison rules of the CI bench-regression gate (tools/check_bench.py):
+within-run timing ratios (machine-portable), directional tolerances,
+exact-or-better floors for parity/hit-rate/ratio metrics,
+missing-gated-metric failures, and new-metric notes."""
+
+import importlib.util
+from pathlib import Path
+
+_spec = importlib.util.spec_from_file_location(
+    "check_bench", Path(__file__).resolve().parent.parent / "tools" / "check_bench.py"
+)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+def _report(tok_per_s=100.0, agree=1.0, parity=True, step_ms=5.0, reduction=4.0,
+            gather_ms=2.0, exact_tok=125.0):
+    return {
+        "serving": {
+            "impls": {
+                "exact": {"tok_per_s": exact_tok},
+                "exaq-int2": {"tok_per_s": tok_per_s, "agreement_vs_exact": agree},
+            },
+            "paged": {"exaq": {"greedy_parity_vs_slot": parity, "prefix_hit_rate": 0.8}},
+            "kv_dtype": {"agreement_int8_vs_fp32": 1.0, "pool_shrink_x": 3.9},
+        },
+        "micro": {
+            "fused_step_ms": step_ms,
+            "gather_step_ms": gather_ms,
+            "bytes_reduction_x": reduction,
+            "prefill": {
+                "fused_chunk_ms": step_ms,
+                "gather_chunk_ms": gather_ms,
+                "bytes_reduction_x": reduction,
+            },
+        },
+    }
+
+
+def test_identical_run_passes():
+    fails, notes = check_bench.compare(_report(), _report(), 0.2)
+    assert fails == [] and notes == []
+
+
+def test_improvements_always_pass():
+    fails, _ = check_bench.compare(
+        _report(), _report(tok_per_s=250.0, step_ms=1.0, reduction=9.0), 0.2
+    )
+    assert fails == []
+
+
+def test_machine_speed_shift_passes():
+    """A uniformly 3x slower runner moves every absolute timing but no
+    within-run ratio — the gate must not care what machine it runs on."""
+    slow = _report(tok_per_s=100.0 / 3, exact_tok=125.0 / 3, step_ms=15.0, gather_ms=6.0)
+    fails, _ = check_bench.compare(_report(), slow, 0.2)
+    assert fails == []
+
+
+def test_relative_throughput_dip_within_tolerance_passes_beyond_fails():
+    fails, _ = check_bench.compare(_report(), _report(tok_per_s=85.0), 0.2)
+    assert fails == []
+    fails, _ = check_bench.compare(_report(), _report(tok_per_s=79.0), 0.2)
+    assert any("tok_per_s_rel_exact" in f for f in fails)
+
+
+def test_relative_latency_rise_gated_one_sided():
+    fails, _ = check_bench.compare(_report(), _report(step_ms=5.9), 0.2)
+    assert fails == []
+    fails, _ = check_bench.compare(_report(), _report(step_ms=6.2), 0.2)
+    assert sum("over_gather" in f for f in fails) == 2  # decode step + prefill chunk
+
+
+def test_latency_tolerance_widens_only_the_latency_class():
+    """CI's interpret-mode noise budget must not loosen the throughput gate."""
+    fails, _ = check_bench.compare(
+        _report(), _report(step_ms=14.0, tok_per_s=79.0), 0.2, latency_tolerance=2.0
+    )
+    assert not any("over_gather" in f for f in fails)
+    assert any("tok_per_s_rel_exact" in f for f in fails)
+    fails, _ = check_bench.compare(_report(), _report(step_ms=16.0), 0.2, latency_tolerance=2.0)
+    assert sum("over_gather" in f for f in fails) == 2
+
+
+def test_parity_and_ratio_metrics_are_exact_or_better():
+    fails, _ = check_bench.compare(_report(), _report(parity=False), 0.2)
+    assert any("greedy_parity_vs_slot" in f for f in fails)
+    fails, _ = check_bench.compare(_report(), _report(agree=0.999), 0.2)
+    assert any("agreement_vs_exact" in f for f in fails)
+    fails, _ = check_bench.compare(_report(), _report(reduction=3.5), 0.2)
+    assert sum("bytes_reduction_x" in f for f in fails) == 2
+
+
+def test_missing_gated_metric_fails_new_metric_notes():
+    fresh = _report()
+    del fresh["micro"]["prefill"]["bytes_reduction_x"]
+    fresh["micro"]["prefill"]["fused_int8_chunk_ms"] = 1.0  # derives a new gated ratio
+    fails, notes = check_bench.compare(_report(), fresh, 0.2)
+    assert any("missing from the fresh run" in f for f in fails)
+    assert any("fused_int8_over_gather_chunk_ms" in n for n in notes)
+
+
+def test_committed_baseline_matches_gate_schema():
+    """The committed BENCH_baseline.json actually exercises the gate: it
+    holds both halves and every SPEC rule matches at least one metric
+    (after the within-run ratios are derived)."""
+    import json
+
+    baseline = json.loads((Path(check_bench.ROOT) / "BENCH_baseline.json").read_text())
+    assert set(baseline) == {"serving", "micro"}
+    flat = check_bench.derive(check_bench.flatten(baseline))
+    for pattern, _ in check_bench.SPEC:
+        assert any(
+            check_bench.fnmatch.fnmatch(p, pattern) for p in flat
+        ), f"no baseline metric matches gate rule {pattern!r}"

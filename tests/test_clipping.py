@@ -13,7 +13,8 @@ def _numeric_mse(C, sigma, bits, mu=0.0):
     """Brute-force trapezoid integration of Eq. 14 (independent of the closed form)."""
     xs_in = np.linspace(C, 0, 4000)
     xs_lo = np.linspace(mu - 14 * sigma, C, 8000)
-    pdf = lambda x: np.exp(-0.5 * ((x - mu) / sigma) ** 2) / (sigma * np.sqrt(2 * np.pi))
+    def pdf(x):
+        return np.exp(-0.5 * ((x - mu) / sigma) ** 2) / (sigma * np.sqrt(2 * np.pi))
     delta = -C / 2**bits
     quant = delta**2 / 12 * np.trapezoid(np.exp(2 * xs_in) * pdf(xs_in), xs_in)
     clip = np.trapezoid((np.exp(C) - np.exp(xs_lo)) ** 2 * pdf(xs_lo), xs_lo)

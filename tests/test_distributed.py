@@ -7,13 +7,11 @@ must be set before jax initializes).
   * tiny-config dry-run (lower+compile+cost extraction) end-to-end
 """
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
-import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 

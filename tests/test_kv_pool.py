@@ -245,7 +245,7 @@ def test_int8_prefix_reuse_replays_fresh_prefill():
     tail_b = rng.integers(0, 500, 5)
 
     cfg, params, shared = _int8_engine(max_slots=2)
-    ua = shared.submit(np.concatenate([system, tail_a]), 6)
+    shared.submit(np.concatenate([system, tail_a]), 6)
     shared.step_chunk()  # prefill chunk 1: publishes the first system block
     shared.step_chunk()  # prefill chunk 2: publishes the second
     ub = shared.submit(np.concatenate([system, tail_b]), 6)

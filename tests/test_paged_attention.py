@@ -29,19 +29,7 @@ def _pool_setup(S, KV, bs, MB, D, *, dtype=jnp.float32, seed=0):
     return pk, pv, jnp.asarray(ids, jnp.int32)
 
 
-def _quantize_pool(pk, pv):
-    """fp pool -> (int8 codes, per-(block, kv-head) scales) the way the write
-    path would store it (DESIGN.md §6): scale = margin * amax / 127."""
-    from repro.kernels.ops import KV_QMAX, KV_SCALE_MARGIN, kv_quantize
-
-    def q(pool):
-        amax = jnp.max(jnp.abs(pool), axis=(2, 3))  # (N, KV)
-        scale = KV_SCALE_MARGIN * amax / KV_QMAX
-        return kv_quantize(pool, scale[:, :, None, None]), scale
-
-    qk, ks = q(pk.astype(jnp.float32))
-    qv, vs = q(pv.astype(jnp.float32))
-    return qk, qv, ks, vs
+# int8 pools quantize via the shared `quantize_pool` fixture (conftest.py).
 
 
 @pytest.mark.parametrize("group", [1, 4, 8])
@@ -117,7 +105,7 @@ def test_fused_bf16_pool():
 # ------------------------------------------------------------- int8 KV pool
 
 @pytest.mark.parametrize("group", [1, 4, 8])
-def test_fused_int8_matches_dequantizing_gather_gqa(group):
+def test_fused_int8_matches_dequantizing_gather_gqa(group, quantize_pool):
     """GQA 1/4/8 at int8: the fused kernel (scalar-prefetched scales, dequant
     in VMEM) matches the dequantizing gather oracle to <= 1e-5 — both read
     the same codes and the same per-(block, kv-head) scales (DESIGN.md §6)."""
@@ -126,7 +114,7 @@ def test_fused_int8_matches_dequantizing_gather_gqa(group):
     p = exaq_params(1.5, 2)
     q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
     pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=10 + group)
-    qk, qv, ks, vs = _quantize_pool(pk, pv)
+    qk, qv, ks, vs = quantize_pool(pk, pv)
     lens = jnp.asarray([5, 17, MB * bs], jnp.int32)
     got = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
                                      k_scale=ks, v_scale=vs, use_kernel=True)
@@ -136,14 +124,14 @@ def test_fused_int8_matches_dequantizing_gather_gqa(group):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
-def test_fused_int8_close_to_fp_oracle():
+def test_fused_int8_close_to_fp_oracle(quantize_pool):
     """Quantization error is bounded by the scale grid: int8 outputs stay
     within a few dequant ulps of the fp32-pool result on the same values."""
     S, H, KV, bs, MB, D = 2, 4, 2, 8, 3, 32
     p = exaq_params(1.0, 2)
     q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
     pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=11)
-    qk, qv, ks, vs = _quantize_pool(pk, pv)
+    qk, qv, ks, vs = quantize_pool(pk, pv)
     lens = jnp.asarray([7, 2 * bs], jnp.int32)
     got = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
                                      k_scale=ks, v_scale=vs, use_kernel=True)
@@ -155,14 +143,14 @@ def test_fused_int8_close_to_fp_oracle():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol)
 
 
-def test_fused_int8_dead_tail_and_null_block_zero():
+def test_fused_int8_dead_tail_and_null_block_zero(quantize_pool):
     """Ragged lens at int8: empty slot reads only the null block (scale 0,
     payload 0) and outputs exactly zero; boundary lens match the oracle."""
     S, H, KV, bs, MB, D = 5, 4, 2, 8, 3, 32
     p = exaq_params(1.0, 2)
     q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
     pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=12)
-    qk, qv, ks, vs = _quantize_pool(pk, pv)
+    qk, qv, ks, vs = quantize_pool(pk, pv)
     lens = jnp.asarray([0, bs, 2 * bs, 2 * bs + 1, MB * bs], jnp.int32)
     got = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
                                      k_scale=ks, v_scale=vs, use_kernel=True)
@@ -172,9 +160,9 @@ def test_fused_int8_dead_tail_and_null_block_zero():
     assert float(jnp.abs(got[0]).max()) == 0.0
 
 
-def test_gather_requires_scales_iff_int8():
+def test_gather_requires_scales_iff_int8(quantize_pool):
     pk, pv, tbl = _pool_setup(1, 2, 8, 2, 16, seed=13)
-    qk, qv, ks, vs = _quantize_pool(pk, pv)
+    qk, qv, ks, vs = quantize_pool(pk, pv)
     with pytest.raises(ValueError):
         ops.gather_block_kv(qk, qv, tbl)  # int8 without scales
     with pytest.raises(ValueError):

@@ -10,7 +10,7 @@ import pytest
 from repro.checkpointing.manager import CheckpointManager
 from repro.configs import get_config
 from repro.data.pipeline import SyntheticLMData
-from repro.optim.adamw import AdamW, apply_updates, global_norm
+from repro.optim.adamw import AdamW, apply_updates
 from repro.optim.compression import dequantize_int8, ef_compress, init_error_state, quantize_int8
 from repro.optim.schedule import cosine_with_warmup
 from repro.runtime.train import cross_entropy, init_train_state, make_train_step

@@ -1,0 +1,201 @@
+#!/usr/bin/env python
+"""Bench-regression gate (CI `bench-serving` job).
+
+Compares a fresh `benchmarks/bench_serving.py --json / --micro-json` run
+against the committed snapshot `BENCH_baseline.json`, so a perf or parity
+regression fails the PR instead of silently shipping.
+
+Absolute wall-clock numbers measured on the dev machine do not transfer to
+CI runners (different CPUs, shared tenancy), so the gated timing metrics
+are *within-run ratios* — both sides of each ratio come from the same
+process on the same machine, so runner hardware cancels and the committed
+baseline stays meaningful anywhere. The raw absolutes ride in the JSON as
+informational context. Per-metric rules:
+
+  * relative throughput (EXAQ engine tok/s over the same run's
+    exact-softmax engine) may dip at most `--tolerance` (default 20%)
+    below baseline; improvements always pass.
+  * relative latency (fused kernel step/chunk time over the same run's
+    gather path) may rise at most `--latency-tolerance` (default =
+    `--tolerance`) above baseline. Interpret-mode Pallas timings still
+    carry run-to-run noise (~2x absolute, much less as a ratio), so CI
+    passes an explicit noise-calibrated budget for this class — the
+    modeled-bytes ratios below are the exact perf claims.
+  * parity, hit-rate, agreement, and modeled-bytes-ratio metrics are
+    exact-or-better: they are deterministic given the pinned seed/toolchain,
+    so any dip is a real regression.
+
+Metrics in the baseline that no rule matches are informational. Metrics the
+rules match that *disappear* from a fresh run fail (a silently dropped
+assertion is itself a regression). After an intentional perf change,
+regenerate the snapshot with `--update`.
+
+Usage (what CI runs):
+
+    python benchmarks/bench_serving.py --json bench_serving.json \
+        --micro-json bench_paged_decode.json
+    python tools/check_bench.py --serving bench_serving.json \
+        --micro bench_paged_decode.json
+
+Exit status 0 = within tolerance; 1 = regression(s), each printed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE = ROOT / "BENCH_baseline.json"
+
+# machine-portable timing ratios derived at check time from each run's own
+# raw numbers: (derived path, numerator path, denominator path)
+DERIVED = [
+    ("serving.impls.exaq-int2.tok_per_s_rel_exact",
+     "serving.impls.exaq-int2.tok_per_s", "serving.impls.exact.tok_per_s"),
+    ("serving.impls.exaq-int3.tok_per_s_rel_exact",
+     "serving.impls.exaq-int3.tok_per_s", "serving.impls.exact.tok_per_s"),
+    ("micro.fused_over_gather_step_ms", "micro.fused_step_ms", "micro.gather_step_ms"),
+    ("micro.fused_int8_over_gather_step_ms", "micro.fused_int8_step_ms", "micro.gather_step_ms"),
+    ("micro.prefill.fused_over_gather_chunk_ms",
+     "micro.prefill.fused_chunk_ms", "micro.prefill.gather_chunk_ms"),
+    ("micro.prefill.fused_int8_over_gather_chunk_ms",
+     "micro.prefill.fused_int8_chunk_ms", "micro.prefill.gather_chunk_ms"),
+]
+
+# (dotted-path pattern, rule). Rules: "higher" / "lower" are ratio-tolerant
+# in one direction; "floor" is exact-or-better; "bool" must stay truthy.
+SPEC = [
+    ("serving.impls.*.tok_per_s_rel_exact", "higher"),
+    ("micro.*_over_gather_step_ms", "lower"),
+    ("micro.prefill.*_over_gather_chunk_ms", "lower"),
+    ("serving.impls.*.agreement_vs_exact", "floor"),
+    ("serving.paged.*.prefix_hit_rate", "floor"),
+    ("serving.paged.*.greedy_parity_vs_slot", "bool"),
+    ("serving.kv_dtype.agreement_int8_vs_fp32", "floor"),
+    ("serving.kv_dtype.pool_shrink_x", "floor"),
+    ("micro.bytes_reduction_x", "floor"),
+    ("micro.int8_vs_bf16_bytes_reduction_x", "floor"),
+    ("micro.prefill.bytes_reduction_x", "floor"),
+    ("micro.prefill.int8_vs_bf16_bytes_reduction_x", "floor"),
+]
+FLOOR_EPS = 1e-9  # fp-serialization slack for the exact-or-better rules
+
+
+def flatten(obj, prefix=""):
+    """Nested dicts -> {dotted.path: leaf}; lists stay leaves."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    else:
+        out[prefix[:-1]] = obj
+    return out
+
+
+def rule_for(path: str) -> str | None:
+    for pattern, rule in SPEC:
+        if fnmatch.fnmatch(path, pattern):
+            return rule
+    return None
+
+
+def derive(flat: dict) -> dict:
+    """Augment a flattened report with the DERIVED within-run ratios."""
+    out = dict(flat)
+    for name, num, den in DERIVED:
+        if num in flat and den in flat and float(flat[den]) != 0.0:
+            out[name] = float(flat[num]) / float(flat[den])
+    return out
+
+
+def compare(
+    baseline: dict, fresh: dict, tolerance: float, latency_tolerance: float | None = None
+) -> tuple[list[str], list[str]]:
+    """-> (failures, notes). Both inputs are {"serving": ..., "micro": ...}."""
+    lat_tol = tolerance if latency_tolerance is None else latency_tolerance
+    base_flat = derive(flatten(baseline))
+    fresh_flat = derive(flatten(fresh))
+    failures, notes = [], []
+    for path, base in sorted(base_flat.items()):
+        rule = rule_for(path)
+        if rule is None:
+            continue
+        if path not in fresh_flat:
+            failures.append(f"{path}: gated metric missing from the fresh run")
+            continue
+        new = fresh_flat[path]
+        if rule == "bool":
+            if bool(base) and not bool(new):
+                failures.append(f"{path}: was {base!r}, now {new!r}")
+            continue
+        base_f, new_f = float(base), float(new)
+        if rule == "higher" and new_f < base_f * (1.0 - tolerance):
+            failures.append(f"{path}: {new_f:.4g} fell >{tolerance:.0%} below baseline {base_f:.4g}")
+        elif rule == "lower" and new_f > base_f * (1.0 + lat_tol):
+            failures.append(f"{path}: {new_f:.4g} rose >{lat_tol:.0%} above baseline {base_f:.4g}")
+        elif rule == "floor" and new_f < base_f - FLOOR_EPS:
+            failures.append(f"{path}: {new_f:.6g} regressed below baseline {base_f:.6g}")
+    for path in sorted(set(fresh_flat) - set(base_flat)):
+        if rule_for(path) is not None:
+            notes.append(f"{path}: new gated metric not in baseline — refresh it with --update")
+    return failures, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--serving", required=True, help="fresh bench_serving --json output")
+    ap.add_argument("--micro", required=True, help="fresh bench_serving --micro-json output")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.2,
+        help="allowed one-sided drift for throughput metrics (default 0.20)",
+    )
+    ap.add_argument(
+        "--latency-tolerance",
+        type=float,
+        default=None,
+        help="allowed one-sided rise for latency metrics (default: --tolerance); "
+        "CI widens this to the measured interpret-mode run-to-run noise",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the fresh run instead of checking against it",
+    )
+    args = ap.parse_args()
+
+    fresh = {
+        "serving": json.loads(Path(args.serving).read_text()),
+        "micro": json.loads(Path(args.micro).read_text()),
+    }
+    if args.update:
+        Path(args.baseline).write_text(json.dumps(fresh, indent=2) + "\n")
+        print(f"wrote baseline snapshot to {args.baseline}")
+        return 0
+
+    baseline = json.loads(Path(args.baseline).read_text())
+    failures, notes = compare(baseline, fresh, args.tolerance, args.latency_tolerance)
+    for n in notes:
+        print(f"note: {n}")
+    for f in failures:
+        print(f"REGRESSION: {f}")
+    if failures:
+        print(f"FAIL: {len(failures)} bench metric(s) regressed past tolerance")
+        return 1
+    n_gated = sum(1 for p in derive(flatten(baseline)) if rule_for(p) is not None)
+    lat = args.tolerance if args.latency_tolerance is None else args.latency_tolerance
+    print(
+        f"bench OK: {n_gated} gated metrics within tolerance "
+        f"(throughput -{args.tolerance:.0%}, latency +{lat:.0%}, parity/ratio exact-or-better)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

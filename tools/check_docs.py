@@ -13,9 +13,9 @@ Three checks, all cheap and dependency-free:
      honest about it.
   3. CLI flag drift: every argparse flag of `src/repro/launch/serve.py` must
      be mentioned in README.md, and every `--flag` token README mentions must
-     exist in some argparse definition under src/repro/launch/, benchmarks/,
-     or experiments/ — so the serving docs can't silently fall behind the
-     code (or vice versa).
+     exist in some argparse definition under FLAG_SOURCE_GLOBS
+     (src/repro/launch/, benchmarks/, experiments/, tools/) — so the serving
+     docs can't silently fall behind the code (or vice versa).
 
 Exit status 0 = clean; 1 = problems (each printed on its own line).
 """
@@ -103,7 +103,7 @@ ARGPARSE_FLAG_RE = re.compile(r"""add_argument\(\s*["'](--[A-Za-z][\w-]*)["']"""
 # a flag token in prose/code blocks: "--" + letter start, not the "---" rule
 README_FLAG_RE = re.compile(r"(?<![\w-])--[A-Za-z][\w-]*")
 # CLI-bearing sources whose flags README may legitimately mention
-FLAG_SOURCE_GLOBS = ["src/repro/launch/*.py", "benchmarks/*.py", "experiments/*.py"]
+FLAG_SOURCE_GLOBS = ["src/repro/launch/*.py", "benchmarks/*.py", "experiments/*.py", "tools/*.py"]
 ALWAYS_KNOWN_FLAGS = {"--help"}  # argparse built-in
 
 
@@ -119,15 +119,15 @@ def check_cli_flags() -> list[str]:
     errors = []
     for flag in sorted(argparse_flags(serve)):
         if flag not in readme_flags:
-            errors.append(f"README.md: serving flag {flag} ({serve.relative_to(ROOT)}) "
-                          "is undocumented")
+            errors.append(f"README.md: serving flag {flag} ({serve.relative_to(ROOT)}) is undocumented")
     known = set(ALWAYS_KNOWN_FLAGS)
     for pattern in FLAG_SOURCE_GLOBS:
         for path in ROOT.glob(pattern):
             known |= argparse_flags(path)
     for flag in sorted(readme_flags - known):
-        errors.append(f"README.md: mentions flag {flag}, which no CLI under "
-                      f"{', '.join(FLAG_SOURCE_GLOBS)} defines")
+        errors.append(
+            f"README.md: mentions flag {flag}, which no CLI under {', '.join(FLAG_SOURCE_GLOBS)} defines"
+        )
     return errors
 
 
@@ -138,8 +138,7 @@ def main() -> int:
     if errors:
         print(f"FAIL: {len(errors)} docs problem(s)")
         return 1
-    print("docs OK: links resolve, every DESIGN.md § citation exists, "
-          "README and launch/serve.py flags agree")
+    print("docs OK: links resolve, DESIGN.md § citations exist, README and serve flags agree")
     return 0
 
 
