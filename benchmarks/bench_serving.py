@@ -48,6 +48,12 @@ fp32 pool and an int8 pool (same calibrated EXAQ-INT2 softmax) and asserts
 greedy decode agrees on >= 99% of tokens while the pool shrinks ~4x
 (per-block scales included) — the serving-accuracy claim of DESIGN.md §6.
 
+Part 5 replays the same trace through a 2-replica ``DataParallelEngine``
+(DESIGN.md §9) behind the shared admission queue and asserts bit-exact
+greedy parity with the single paged engine, that the deterministic
+least-loaded dispatch fed both replicas, and reports per-replica stats
+plus aggregated hit rate / occupancy under ``"dp"`` in the JSON.
+
 The smoke model is a 2-layer reduced config briefly overfit on a periodic
 token sequence: a random-init model has near-tied logits (argmax margins
 below any quantizer's noise floor, so agreement would measure tie-breaking,
@@ -70,7 +76,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.optim.adamw import AdamW
-from repro.runtime.engine import Engine, PagedEngine
+from repro.runtime.engine import DataParallelEngine, Engine, PagedEngine
 from repro.runtime.train import init_train_state, make_train_step
 
 PERIOD, TOK0 = 7, 5  # the learned pattern: TOK0, TOK0+1, ..., cyclic
@@ -104,10 +110,14 @@ def make_trace(rng, n_requests: int, rate: float, lo: int, hi: int):
 
 
 def run_trace(cfg, params, qstate, trace, prompts, *, slots, max_seq, gen, chunk,
-              paged=False, block_size=8, prefill_chunk=16, cache_dtype=jnp.bfloat16):
+              paged=False, block_size=8, prefill_chunk=16, cache_dtype=jnp.bfloat16,
+              dp=0):
     kw = dict(qstate=qstate, max_slots=slots, max_seq=max_seq, steps_per_sync=chunk, seed=0,
               cache_dtype=cache_dtype)
-    if paged:
+    if dp:
+        eng = DataParallelEngine(cfg, params, replicas=dp, block_size=block_size,
+                                 prefill_chunk=prefill_chunk, **kw)
+    elif paged:
         eng = PagedEngine(cfg, params, block_size=block_size, prefill_chunk=prefill_chunk, **kw)
     else:
         eng = Engine(cfg, params, **kw)
@@ -276,6 +286,66 @@ def bench_kv_dtype(base, params, calib_stats, args, rng, report):
         "pool_bytes_fp32": int(fp32_bytes),
         "pool_bytes_int8": int(int8_bytes),
         "pool_shrink_x": fp32_bytes / int8_bytes,
+    }
+
+
+def bench_dp(base, params, calib_stats, args, rng, report):
+    """Part 5: data-parallel replica fleet vs a single paged engine
+    (DESIGN.md §9).
+
+    The same shared-prefix Poisson trace runs through one ``PagedEngine``
+    and through a ``DataParallelEngine`` of 2 replicas behind the shared
+    admission queue. Greedy decode is batch-composition-independent, so the
+    fleet must reproduce the single engine's tokens bit-exactly (asserted
+    and gated) no matter how the deterministic least-loaded dispatch splits
+    the trace. Per-replica stats verify the dispatch actually balanced, and
+    the aggregated hit rate / occupancy are gated as floors — dispatch is
+    deterministic, so they are too."""
+    replicas = 2
+    sys_len, tail_lo, tail_hi = args.shared_prefix, 1, 8
+    trace = make_trace(rng, args.requests, args.paged_rate, tail_lo, tail_hi)
+    pattern = np.arange(sys_len + tail_hi + PERIOD) % PERIOD + TOK0
+    prompts = [pattern[: sys_len + n] for _, n in trace]
+    max_seq = sys_len + tail_hi + args.gen
+
+    cfg = base.with_quant(softmax_impl="exaq", bits=2)
+    qstate = build_model(cfg).qstate_from_stats(calib_stats)
+    kw = dict(slots=args.slots, max_seq=max_seq, gen=args.gen, chunk=args.chunk,
+              block_size=args.block_size, prefill_chunk=args.prefill_chunk)
+    single, single_out = run_trace(cfg, params, qstate, trace, prompts, paged=True, **kw)
+    fleet, fleet_out = run_trace(cfg, params, qstate, trace, prompts, dp=replicas, **kw)
+    parity = all(single_out[i] == fleet_out[i] for i in range(len(trace)))
+    per = fleet.per_replica_stats
+    agg_hit = fleet.prefix_hit_rate
+    agg_occ = fleet.mean_occupancy
+    pst = fleet.pool_stats
+    print(f"dp={replicas} fleet: greedy parity vs single paged engine: {parity}; "
+          f"aggregate hit rate {100*agg_hit:.1f}%, occupancy {agg_occ:.2f} "
+          f"(sum over replicas), {pst.cow_copies} CoW, {pst.evictions} evictions")
+    for i, s in enumerate(per):
+        print(f"  replica {i}: {s['prefills']} requests, {s['tokens_out']} tokens, "
+              f"occupancy {s['mean_occupancy']:.2f}/{args.slots}, "
+              f"hit rate {100*s['prefix_hit_rate']:.1f}%")
+    assert parity, "dp fleet greedy tokens diverged from the single paged engine"
+    assert all(s["prefills"] > 0 for s in per), (
+        f"dispatch starved a replica: {[s['prefills'] for s in per]}"
+    )
+    report["dp"] = {
+        "replicas": replicas,
+        "greedy_parity_vs_single": parity,
+        "aggregate": {
+            "prefix_hit_rate": agg_hit,
+            "mean_occupancy": agg_occ,
+            "requests": fleet.stats["prefills"],
+            "cow_copies": pst.cow_copies,
+            "evictions": pst.evictions,
+        },
+        "per_replica": [
+            {"requests": s["prefills"], "tokens_out": s["tokens_out"],
+             "mean_occupancy": s["mean_occupancy"],
+             "prefix_hit_rate": s["prefix_hit_rate"]}
+            for s in per
+        ],
     }
 
 
@@ -478,6 +548,9 @@ def main():
     print("--- int8 KV pool: greedy parity + memory vs fp32 (DESIGN.md §6) ---")
     bench_kv_dtype(base, params, calib_stats, args, rng, report)
 
+    print("--- data-parallel fleet: 2 replicas vs single engine (DESIGN.md §9) ---")
+    bench_dp(base, params, calib_stats, args, rng, report)
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
@@ -489,7 +562,8 @@ def main():
     print("OK: >=2 concurrent ragged requests per jitted step; EXAQ-2bit greedy == exact; "
           ">=50% prefix-cache hits with slot-engine parity on the paged engine; "
           ">=2x modeled KV bytes cut by the fused paged-decode AND paged-prefill kernels; "
-          ">=1.8x further cut and >=99% greedy agreement on the int8 pool")
+          ">=1.8x further cut and >=99% greedy agreement on the int8 pool; "
+          "bit-exact dp=2 fleet parity with both replicas served")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,16 @@ block_tables ``(S, MB)`` int32; kv_lens ``(S,)`` int32; optional
 k_scale/v_scale ``(N, KV)`` fp32. Compiled-mode tiling wants ``bs`` a
 multiple of 8 and ``Dh`` lane-padded (both hold for production shapes;
 tests run interpret mode where any shape goes).
+
+Tensor-parallel contract (DESIGN.md §9): under a mesh whose 'model' axis
+divides KV, ``kernels.ops.paged_decode_attention`` wraps this kernel in a
+shard_map that splits q's H axis and the pool's KV axis by the same factor
+and replicates tables/lens/scalars. The kernel itself is unchanged — inside
+the shard_map its ``pool_k``/``pool_v`` are the *local* head partition and
+its grid's kv_head axis runs over local heads only, so index maps never see
+a global head id (q head ``h``'s group maps to local kv head ``h // group``
+exactly as on one device). Per-(slot, head) rows are computed whole on one
+shard, making the sharded kernel bit-exact vs the single-shard dispatch.
 """
 
 from __future__ import annotations
@@ -287,6 +297,7 @@ def paged_decode_bytes_model(
     kv_lens,
     dtype_bytes: int = 2,
     kv_dtype: str | None = None,
+    tp: int = 1,
 ) -> dict:
     """Modeled HBM KV bytes per decode step per layer: gather vs fused.
 
@@ -304,9 +315,19 @@ def paged_decode_bytes_model(
     gather oracle dequantizes during assembly — prices the gather path's
     dense intermediate copy at fp32 width, which is what actually crosses
     HBM there.
+
+    ``tp`` models the tensor-parallel pool split (DESIGN.md §9): the kv-head
+    dim shards over the mesh's 'model' axis, so each shard reads
+    ``kv_heads / tp`` heads' worth of every block (payload and scale plane
+    alike) and the reported figures are *per-shard* bytes — the quantity
+    that bounds a shard's step latency. ``tp`` must divide ``kv_heads``
+    (non-divisible counts serve a replicated pool; model that as tp=1).
     """
     import numpy as np
 
+    if kv_heads % tp:
+        raise ValueError(f"tp={tp} must divide kv_heads={kv_heads} (replicated fallback is tp=1)")
+    kv_heads //= tp
     if kv_dtype is not None:
         dtype_bytes = KV_DTYPE_BYTES[kv_dtype]
     scale_bytes = kv_heads * 4 if kv_dtype == "int8" else 0
@@ -322,6 +343,7 @@ def paged_decode_bytes_model(
     fused = live_blocks * (2 + 1) * block_bytes                 # 2x K + 1x V, live only
     return {
         "kv_dtype": kv_dtype,
+        "tp": tp,
         "gather_then_read_bytes": int(gather),
         "fused_pool_read_bytes": int(fused),
         "bytes_reduction_x": gather / max(fused, 1),

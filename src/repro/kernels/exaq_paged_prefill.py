@@ -51,6 +51,16 @@ block_table ``(MB,)`` int32; start scalar int32 (tokens already cached);
 optional k_scale/v_scale ``(N, KV)`` fp32. Compiled-mode tiling wants ``bs``
 a multiple of 8 and ``Dh`` lane-padded (production shapes satisfy both;
 tests run interpret mode where any shape goes).
+
+Tensor-parallel contract (DESIGN.md §9): under a mesh whose 'model' axis
+divides KV, ``kernels.ops.paged_prefill_attention`` wraps this kernel in a
+shard_map that splits q's H axis and the pool's KV axis by the same factor
+and replicates table/start/scalars. Inside the shard_map the kernel sees
+the *local* head partition, its grid's kv_head axis runs over local heads
+only, and GQA group alignment is preserved (H and KV shard by the same
+factor) — no global-head offsets in the index maps, and per-(row, head)
+outputs are computed whole on one shard, so the sharded kernel is bit-exact
+vs the single-shard dispatch.
 """
 
 from __future__ import annotations
@@ -265,6 +275,7 @@ def paged_prefill_bytes_model(
     start_cached: int = 0,
     dtype_bytes: int = 2,
     kv_dtype: str | None = None,
+    tp: int = 1,
 ) -> dict:
     """Modeled HBM KV bytes per layer to prefill one prompt, gather vs fused.
 
@@ -283,9 +294,17 @@ def paged_prefill_bytes_model(
     of the raw ``dtype_bytes`` knob; int8 (DESIGN.md §6) adds the 4-byte
     per-(block, kv-head) scale to every pool-block read and prices the
     gather path's dense dequantized copy at fp32 width.
+
+    ``tp`` models the tensor-parallel pool split (DESIGN.md §9): each shard
+    reads ``kv_heads / tp`` heads of every block, so the figures are
+    per-shard bytes. ``tp`` must divide ``kv_heads`` (non-divisible counts
+    serve a replicated pool; model that as tp=1).
     """
     from repro.kernels.exaq_paged_attention import KV_DTYPE_BYTES
 
+    if kv_heads % tp:
+        raise ValueError(f"tp={tp} must divide kv_heads={kv_heads} (replicated fallback is tp=1)")
+    kv_heads //= tp
     if kv_dtype is not None:
         dtype_bytes = KV_DTYPE_BYTES[kv_dtype]
     scale_bytes = kv_heads * 4 if kv_dtype == "int8" else 0
@@ -305,6 +324,7 @@ def paged_prefill_bytes_model(
         chunks += 1
     return {
         "kv_dtype": kv_dtype,
+        "tp": tp,
         "prompt_len": prompt_len,
         "chunk": chunk,
         "chunks": chunks,

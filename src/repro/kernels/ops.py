@@ -301,6 +301,64 @@ def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.
     return g(pool_k, k_scale), g(pool_v, v_scale)
 
 
+# ------------------------------------------------ tensor-parallel dispatch
+
+def _tp_mesh(num_kv_heads: int):
+    """The ambient mesh, when its 'model' axis can split the kv heads.
+
+    Trace-time discovery: the serving device layer (runtime/device_step.py)
+    activates its mesh via ``sharding.use_mesh`` around every jitted call, so
+    this sees it while the engine functions are being traced. No mesh, a
+    1-sized 'model' axis, or a head count the axis does not divide all
+    return None — the caller stays on the single-shard path, mirroring
+    ``sharding.block_pool_spec``'s replicated fallback (DESIGN.md §9).
+    """
+    from repro.runtime import sharding as shd
+
+    mesh = shd.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    tp = mesh.shape["model"]
+    if tp <= 1 or num_kv_heads % tp != 0:
+        return None
+    return mesh
+
+
+def _tp_paged_attention(mesh, local_fn, head_args, table_args, scales):
+    """shard_map a fused paged kernel over the 'model' axis (DESIGN.md §9).
+
+    ``head_args`` (q and the two pool planes) shard their head axis — axis 1
+    on every one of them — so each shard DMAs only its local heads from a
+    local pool partition; ``table_args`` (block tables, lens, start) stay
+    replicated scalar-prefetch inputs; int8 ``scales`` (N, KV) planes follow
+    the pool's head split. Because q heads and kv heads shard by the same
+    factor, a shard's query group h // group lands exactly on its local kv
+    heads — the kernels' index maps need no global-head offsets, and each
+    (slot, head) row is computed whole on exactly one shard, so the sharded
+    kernel is *bit-exact* against the single-shard one. The output is
+    re-replicated before returning: the caller's cross-head ``wo``
+    contraction must run whole on every shard, or fp reassociation in a
+    partitioned psum would break greedy parity vs a single-shard engine.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    heads = P(None, "model", None, None)  # q / pool planes are all rank 4
+    in_specs = (
+        tuple(heads for _ in head_args)
+        + tuple(P(*(None,) * jnp.ndim(a)) for a in table_args)
+        + tuple(P(None, "model") for _ in scales)
+    )
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P(None, "model", None, None),
+        check_rep=False,
+    )
+    out = fn(*head_args, *table_args, *scales)
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
+
+
 def paged_decode_attention(
     q: jnp.ndarray,
     pool_k: jnp.ndarray,
@@ -339,6 +397,21 @@ def paged_decode_attention(
     kv_lens: (S,) live positions per slot -> (S, H, 1, Dh).
     """
     if use_kernel:
+        mesh = _tp_mesh(pool_k.shape[1])
+        if mesh is not None:
+            has_scales = k_scale is not None
+
+            def local(q, pk, pv, bt, kl, *scales):
+                ks, vs = scales if has_scales else (None, None)
+                return exaq_paged_decode_attention(
+                    q, pk, pv, bt, kl, params, scale,
+                    k_scale=ks, v_scale=vs, interpret=on_cpu()
+                )
+
+            return _tp_paged_attention(
+                mesh, local, (q, pool_k, pool_v), (block_tables, kv_lens),
+                (k_scale, v_scale) if has_scales else (),
+            )
         return exaq_paged_decode_attention(
             q, pool_k, pool_v, block_tables, kv_lens, params, scale,
             k_scale=k_scale, v_scale=v_scale, interpret=on_cpu()
@@ -388,6 +461,22 @@ def paged_prefill_attention(
     start: scalar int32 tokens already cached -> (1, H, C, Dh) fp32.
     """
     if use_kernel:
+        mesh = _tp_mesh(pool_k.shape[1])
+        if mesh is not None:
+            has_scales = k_scale is not None
+            start_arr = jnp.asarray(start, jnp.int32)
+
+            def local(q, pk, pv, bt, st, *scales):
+                ks, vs = scales if has_scales else (None, None)
+                return exaq_paged_prefill_attention(
+                    q, pk, pv, bt, st, params, scale,
+                    k_scale=ks, v_scale=vs, interpret=on_cpu()
+                )
+
+            return _tp_paged_attention(
+                mesh, local, (q, pool_k, pool_v), (block_table, start_arr),
+                (k_scale, v_scale) if has_scales else (),
+            )
         return exaq_paged_prefill_attention(
             q, pool_k, pool_v, block_table, start, params, scale,
             k_scale=k_scale, v_scale=v_scale, interpret=on_cpu()

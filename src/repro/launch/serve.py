@@ -15,8 +15,12 @@ attention — DESIGN.md §3/§7; ``--kv-dtype int8`` stores the pool as int8
 codes with per-block scales, dequantized inside the fused kernels —
 DESIGN.md §6); with ``--shared-prefix N``
 every request opens with the same N-token system prompt, so the printed
-prefix-cache hit rate shows the reuse win. Other families fall back to
-the rectangular greedy loop in ``runtime.serve.generate``.
+prefix-cache hit rate shows the reuse win. ``--tp N`` shards each block
+pool's kv-head axis over an N-way 'model' mesh axis and ``--dp M`` runs M
+independent engine replicas behind one shared admission queue
+(DESIGN.md §9) — both paged-only; greedy tokens stay bit-exact across any
+dp/tp layout. Other families fall back to the rectangular greedy loop in
+``runtime.serve.generate``.
 """
 
 from __future__ import annotations
@@ -32,6 +36,38 @@ from repro.configs import get_config
 from repro.models import build_model
 from repro.runtime import serve as serve_rt
 from repro.runtime.sampling import SamplingParams
+
+
+def validate_serve_args(args, device_count: int | None = None):
+    """Reject inconsistent flag combinations with actionable messages.
+
+    Pure function over the parsed namespace so unit tests can exercise it
+    without devices; pass ``device_count`` to also check that ``--dp x --tp``
+    fits the visible device set. Raises SystemExit (argparse idiom) on the
+    first problem found.
+    """
+    if args.fused is not None and not args.paged:
+        raise SystemExit("--fused/--no-fused select the paged decode path; add --paged")
+    if args.fused and args.impl != "exaq":
+        raise SystemExit(
+            f"--fused folds the EXAQ clip/LUT into the kernel and needs --impl exaq, "
+            f"got --impl {args.impl}; drop --fused or switch --impl"
+        )
+    if args.kv_dtype == "int8" and not args.paged:
+        raise SystemExit("--kv-dtype int8 needs the block pool's per-block scales; add --paged")
+    if args.dp < 1 or args.tp < 1:
+        raise SystemExit(f"--dp and --tp must be >= 1, got --dp {args.dp} --tp {args.tp}")
+    if (args.dp > 1 or args.tp > 1) and not args.paged:
+        raise SystemExit(
+            "--dp/--tp shard the block pool and replicate the paged engine "
+            "(DESIGN.md §9); add --paged"
+        )
+    if device_count is not None and args.dp * args.tp > device_count:
+        raise SystemExit(
+            f"--dp {args.dp} x --tp {args.tp} needs {args.dp * args.tp} devices, "
+            f"only {device_count} visible (try XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N on CPU)"
+        )
 
 
 def main():
@@ -68,11 +104,15 @@ def main():
                          "quantized with per-block scales (DESIGN.md §6)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend the same N-token system prompt to every request")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel engine replicas, each with its own block "
+                         "pool over a disjoint device slice (paged; DESIGN.md §9)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards per replica: block pool split on "
+                         "the kv-head axis over the 'model' mesh axis (paged; "
+                         "DESIGN.md §9)")
     args = ap.parse_args()
-    if args.fused is not None and not args.paged:
-        raise SystemExit("--fused/--no-fused select the paged decode path; add --paged")
-    if args.kv_dtype == "int8" and not args.paged:
-        raise SystemExit("--kv-dtype int8 needs the block pool's per-block scales; add --paged")
+    validate_serve_args(args, device_count=jax.device_count())
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -99,11 +139,24 @@ def main():
         from repro.runtime.serve import KV_DTYPES
 
         if args.paged:
-            eng = PagedEngine(cfg, params, max_slots=args.slots, max_seq=max_seq,
-                              eos_id=eos, seed=args.seed, block_size=args.block_size,
-                              prefill_chunk=args.prefill_chunk,
-                              num_blocks=args.num_blocks or None, fused=args.fused,
-                              cache_dtype=KV_DTYPES[args.kv_dtype])
+            engine_kw = dict(max_slots=args.slots, max_seq=max_seq,
+                             eos_id=eos, seed=args.seed, block_size=args.block_size,
+                             prefill_chunk=args.prefill_chunk,
+                             num_blocks=args.num_blocks or None, fused=args.fused,
+                             cache_dtype=KV_DTYPES[args.kv_dtype])
+            if args.dp > 1 or args.tp > 1:
+                from repro.launch.mesh import make_replica_meshes
+
+                meshes = make_replica_meshes(args.dp, args.tp)
+                if args.dp > 1:
+                    from repro.runtime.engine import DataParallelEngine
+
+                    eng = DataParallelEngine(cfg, params, replicas=args.dp,
+                                             meshes=meshes, **engine_kw)
+                else:
+                    eng = PagedEngine(cfg, params, mesh=meshes[0], **engine_kw)
+            else:
+                eng = PagedEngine(cfg, params, **engine_kw)
         else:
             eng = Engine(cfg, params, max_slots=args.slots, max_seq=max_seq,
                          eos_id=eos, seed=args.seed, cache_dtype=KV_DTYPES[args.kv_dtype])
@@ -113,6 +166,8 @@ def main():
         wall = time.time() - t0
         n_out = sum(len(g.tokens) for g in results.values())
         kind = "paged engine" if args.paged else "engine"
+        if args.dp > 1 or args.tp > 1:
+            kind += f" (dp={args.dp}, tp={args.tp})"
         print(f"{kind}: {args.requests} requests (prompts "
               f"{min(map(len, prompts))}-{max(map(len, prompts))} tok) "
               f"through {args.slots} slots")
@@ -120,12 +175,17 @@ def main():
               f"({n_out/max(wall, 1e-9):.0f} tok/s incl. compile); "
               f"mean slot occupancy {eng.mean_occupancy:.2f}/{args.slots}")
         if args.paged:
-            st = eng.pool.stats
+            st = eng.pool_stats
             print(f"prefix-cache hit rate {100*eng.prefix_hit_rate:.1f}% "
                   f"({eng.stats['prefix_hit_tokens']}/{eng.stats['prompt_tokens']} prompt tokens); "
                   f"{eng.stats['prefill_chunks']} prefill chunks of {args.prefill_chunk}; "
                   f"pool {eng.kv_pool_bytes/2**20:.1f} MiB, "
                   f"{st.cow_copies} CoW copies, {st.evictions} evictions")
+        if args.dp > 1:
+            for i, s in enumerate(eng.per_replica_stats):
+                print(f"  replica {i}: {s['prefills']} requests, "
+                      f"occupancy {s['mean_occupancy']:.2f}/{args.slots}, "
+                      f"hit rate {100*s['prefix_hit_rate']:.1f}%")
         for uid in uids[: min(2, len(uids))]:
             print(f"  req {uid} [{results[uid].finish_reason}]:",
                   results[uid].tokens[:16])

@@ -391,7 +391,8 @@ class Model:
             cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
         return cache
 
-    def init_block_pool(self, num_blocks: int, block_size: int, dtype=jnp.bfloat16) -> dict:
+    def init_block_pool(self, num_blocks: int, block_size: int, dtype=jnp.bfloat16,
+                        mesh=None) -> dict:
         """Global paged KV pool: {"k","v"} of (L, num_blocks, KV, bs, Dh).
 
         The device half of the paged cache (DESIGN.md §3): blocks are the unit
@@ -403,6 +404,12 @@ class Model:
         payloads plus "k_scale"/"v_scale" planes of (L, num_blocks, KV) fp32
         per-block per-kv-head dequant scales, zero-initialized (0 = "scale
         not yet seeded by a first write").
+
+        ``mesh`` places the pool sharded at construction (DESIGN.md §9):
+        payloads per ``sharding.block_pool_spec`` (kv-heads over 'model'
+        when divisible, else replicated), scale planes per
+        ``sharding.block_scale_spec`` — so each tensor-parallel shard
+        allocates only its local head partition.
         """
         cfg = self.cfg
         assert cfg.family in ("dense", "vlm", "moe"), (
@@ -417,6 +424,18 @@ class Model:
             shape = (cfg.num_layers, num_blocks, cfg.num_kv_heads)
             pool["k_scale"] = jnp.zeros(shape, jnp.float32)
             pool["v_scale"] = jnp.zeros(shape, jnp.float32)
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+
+            from repro.runtime import sharding as shd
+
+            sh = NamedSharding(mesh, shd.block_pool_spec(cfg, mesh))
+            pool["k"] = jax.device_put(pool["k"], sh)
+            pool["v"] = jax.device_put(pool["v"], sh)
+            if "k_scale" in pool:
+                ssh = NamedSharding(mesh, shd.block_scale_spec(cfg, mesh))
+                pool["k_scale"] = jax.device_put(pool["k_scale"], ssh)
+                pool["v_scale"] = jax.device_put(pool["v_scale"], ssh)
         return pool
 
     def _ssm_cache(self, n_layers, batch, dtype):

@@ -4,8 +4,19 @@ The serving problem EXAQ targets (paper §4: attention-heavy decode) is only
 won at the *runtime* level: many concurrent requests of different lengths
 must share one jitted step, or the kernel savings drown in per-request
 dispatch and padding waste (cf. QUIK/SoftmAP — low-bit inference pays off
-when the surrounding runtime is batched and fused). Two engines share the
-host scheduler scaffolding:
+when the surrounding runtime is batched and fused).
+
+This module is the glue layer of the host/device split (DESIGN.md §9):
+
+  * ``runtime/engine_core.py`` — every scheduling decision (slot table,
+    BlockPool allocator, prefix cache, admission, preempt-and-recompute) as
+    plain Python + numpy; imports no jax.
+  * ``runtime/device_step.py`` — every jitted function, operating on an
+    explicitly mesh-sharded cache/pool pytree.
+  * here — ``Engine`` and ``PagedEngine`` wire core plans into device calls
+    and absorb device results back into core state, and
+    ``DataParallelEngine`` runs independent paged replicas over disjoint
+    device subsets behind one shared admission queue.
 
 ``Engine`` — slot cache (PR 1 baseline, kept as the parity oracle):
 
@@ -54,58 +65,57 @@ batches — admitting vlm needs per-request ``vision_embeds`` plumbing first.
 from __future__ import annotations
 
 import time
-from collections import deque
-from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import build_model, default_qstate
 from repro.runtime import sampling as smp
-from repro.runtime import sharding as shd
-from repro.runtime.kv_pool import NULL_BLOCK, BlockPool, PoolExhausted, chain_hashes
+from repro.runtime.device_step import PagedDeviceStep, SlotDeviceStep
+from repro.runtime.engine_core import (
+    EngineCore,
+    Generation,
+    HostCore,
+    Request,
+    _bucket,
+    _PagedSlot,
+    _Slot,
+)
+from repro.runtime.kv_pool import (
+    NULL_BLOCK,
+    BlockPool,
+    PoolExhausted,
+    PoolStats,
+    chain_hashes,
+)
+
+__all__ = [
+    "DataParallelEngine",
+    "Engine",
+    "Generation",
+    "PagedEngine",
+    "Request",
+]
+
+# re-exported for existing importers; the host halves live in engine_core
+_ = (BlockPool, PoolExhausted, chain_hashes, NULL_BLOCK, _Slot, _PagedSlot)
 
 
-@dataclass(frozen=True)
-class Request:
-    uid: int
-    prompt: tuple[int, ...]
-    max_new: int
-    sampling: smp.SamplingParams = smp.GREEDY
+def _validate_engine_cfg(cfg, cache_dtype, *, paged: bool) -> None:
+    if cfg.family not in ("dense", "moe") or cfg.frontend is not None:
+        raise ValueError(
+            f"Engine supports token-only attention decoders (dense/moe), got "
+            f"family={cfg.family!r} frontend={cfg.frontend!r} (frontend models need "
+            "per-request embeds at prefill; ssm/hybrid/audio caches aren't slot-ragged)"
+        )
+    if jnp.dtype(cache_dtype) == jnp.int8 and not paged:
+        raise ValueError(
+            "int8 KV is a paged-pool storage format (per-block scales — DESIGN.md §6); "
+            "the slot engine's rectangular cache supports fp dtypes only"
+        )
 
 
-@dataclass
-class Generation:
-    """Finished request: generated ids (EOS included when hit) + why it ended."""
-
-    uid: int
-    tokens: list[int]
-    finish_reason: str  # "eos" | "length"
-
-
-@dataclass
-class _Slot:
-    uid: int = -1
-    generated: list[int] = field(default_factory=list)
-
-    @property
-    def free(self) -> bool:
-        return self.uid < 0
-
-    @property
-    def prefilling(self) -> bool:
-        return False  # slot-engine prefill is synchronous at admission
-
-
-def _bucket(n: int, lo: int = 16) -> int:
-    b = lo
-    while b < n:
-        b *= 2
-    return b
-
-
-class Engine:
+class Engine(HostCore):
     """Continuous-batching serving engine for one model + qstate.
 
     Typical use::
@@ -133,256 +143,35 @@ class Engine:
         seed: int = 0,
         mesh=None,
     ):
-        self._init_common(cfg, params, max_slots=max_slots, max_seq=max_seq, qstate=qstate,
-                          eos_id=eos_id, steps_per_sync=steps_per_sync,
-                          cache_dtype=cache_dtype, seed=seed)
-
-        cache = self.model.init_cache(max_slots, max_seq, cache_dtype)
-        if mesh is not None:
-            from jax.sharding import NamedSharding
-
-            spec = shd.slot_cache_spec(cfg, mesh)
-            cache["k"] = jax.device_put(cache["k"], NamedSharding(mesh, spec))
-            cache["v"] = jax.device_put(cache["v"], NamedSharding(mesh, spec))
-        self._cache_k, self._cache_v = cache["k"], cache["v"]
-
-        # donate the K/V buffers on the hot paths: the engine rebinds them from
-        # the outputs immediately, so XLA may update the cache in place instead
-        # of copying the full (L, slots, KV, max_seq, Dh) arrays per chunk /
-        # admission (CPU ignores donation; TPU/GPU halve peak cache memory)
-        self._jit_prefill = jax.jit(self._prefill_fn)
-        self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0, 1))
-        self._jit_chunk = jax.jit(self._chunk_fn, static_argnames=("steps", "sampler"),
-                                  donate_argnums=(1,))
-
-    # --------------------------------------------------- shared host scaffold
-
-    def _init_common(self, cfg, params, *, max_slots, max_seq, qstate, eos_id,
-                     steps_per_sync, cache_dtype, seed):
-        if cfg.family not in ("dense", "moe") or cfg.frontend is not None:
-            raise ValueError(
-                f"Engine supports token-only attention decoders (dense/moe), got "
-                f"family={cfg.family!r} frontend={cfg.frontend!r} (frontend models need "
-                "per-request embeds at prefill; ssm/hybrid/audio caches aren't slot-ragged)"
-            )
-        if jnp.dtype(cache_dtype) == jnp.int8 and not isinstance(self, PagedEngine):
-            raise ValueError(
-                "int8 KV is a paged-pool storage format (per-block scales — DESIGN.md §6); "
-                "the slot engine's rectangular cache supports fp dtypes only"
-            )
-        self.cfg = cfg
-        self.params = params
-        self.model = build_model(cfg)
-        self.qstate = qstate if qstate is not None else default_qstate(cfg)
-        self.max_slots = max_slots
-        self.max_seq = max_seq
-        self.eos_id = eos_id
-        self.steps_per_sync = steps_per_sync
-        self.cache_dtype = cache_dtype
+        _validate_engine_cfg(cfg, cache_dtype, paged=isinstance(self, PagedEngine))
+        HostCore.__init__(self, max_slots=max_slots, max_seq=max_seq, eos_id=eos_id,
+                          steps_per_sync=steps_per_sync)
+        self._dev = SlotDeviceStep(
+            cfg, params, qstate=qstate, max_slots=max_slots, max_seq=max_seq,
+            eos_id=eos_id, cache_dtype=cache_dtype, mesh=mesh,
+        )
+        self._bind_device_step()
         self._key = jax.random.PRNGKey(seed)
+        self._cache_k, self._cache_v = self._dev.init_cache()
 
-        # host-side slot state (small; shipped to device each chunk)
-        self._slots = [self._new_slot() for _ in range(max_slots)]
-        self.kv_lens = np.zeros((max_slots,), np.int32)
-        self._active = np.zeros((max_slots,), bool)
-        self._budget = np.zeros((max_slots,), np.int32)
-        self._tokens = np.zeros((max_slots, 1), np.int32)
-        self._temperature = np.zeros((max_slots,), np.float32)
-        self._top_k = np.zeros((max_slots,), np.int32)
-        self._top_p = np.ones((max_slots,), np.float32)
-
-        self._queue: deque[Request] = deque()
-        self._results: dict[int, Generation] = {}
-        self._next_uid = 0
-
-        # telemetry for bench_serving
-        self.stats = {"decode_steps": 0, "tokens_out": 0, "occupancy_sum": 0.0,
-                      "max_active": 0, "prefills": 0, "decode_time": 0.0}
-
-        self._jit_sample = jax.jit(smp.sample_tokens)
-
-    def _new_slot(self):
-        return _Slot()
-
-    def _validate_request(self, prompt, max_new: int) -> None:
-        if not prompt:
-            raise ValueError("empty prompt")
-        if len(prompt) >= self.max_seq:
-            raise ValueError(f"prompt length {len(prompt)} >= max_seq {self.max_seq}")
-        if max_new < 1:
-            raise ValueError("max_new must be >= 1")
+    def _bind_device_step(self):
+        """Expose the device step's resolved objects under the engine's
+        long-standing attribute names (params is the *placed* copy)."""
+        self.cfg = self._dev.cfg
+        self.params = self._dev.params
+        self.model = self._dev.model
+        self.qstate = self._dev.qstate
+        self.cache_dtype = self._dev.cache_dtype
 
     def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY) -> int:
-        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
-        self._validate_request(prompt, max_new)
-        uid = self._next_uid
-        self._next_uid += 1
-        self._queue.append(Request(uid, prompt, max_new, sampling))
-        return uid
-
-    @property
-    def num_active(self) -> int:
-        return int(self._active.sum())
-
-    @property
-    def num_queued(self) -> int:
-        return len(self._queue)
-
-    def has_work(self) -> bool:
-        return (bool(self._queue) or self.num_active > 0
-                or any(not s.free and s.prefilling for s in self._slots))
-
-    def _free_slots(self) -> list[int]:
-        return [i for i, s in enumerate(self._slots) if s.free]
+        return super().submit(prompt, max_new, sampling)
 
     def _sample_first(self, slot: int, req: Request, logits) -> None:
-        """Sample the first generated token from prefill logits and flip the
-        slot into decode state (or finish immediately on EOS / budget 1)."""
+        """Sample the first generated token from prefill logits (device) and
+        hand the host transition to the core."""
         self._key, sub = jax.random.split(self._key)
-        sp = req.sampling
-        first = int(
-            self._jit_sample(
-                logits,
-                jnp.asarray([sp.temperature], jnp.float32),
-                jnp.asarray([sp.top_k], jnp.int32),
-                jnp.asarray([sp.top_p], jnp.float32),
-                sub,
-            )[0]
-        )
-        self.stats["tokens_out"] += 1
-        s = self._slots[slot]
-        s.uid, s.generated = req.uid, [first]
-        self.kv_lens[slot] = len(req.prompt)
-        self._tokens[slot, 0] = first
-        self._temperature[slot] = sp.temperature
-        self._top_k[slot] = sp.top_k
-        self._top_p[slot] = sp.top_p
-        self._budget[slot] = req.max_new - 1
-        hit_eos = self.eos_id is not None and first == self.eos_id
-        if hit_eos or req.max_new == 1:
-            self._finish(slot, "eos" if hit_eos else "length")
-        else:
-            self._active[slot] = True
-
-    def _finish(self, slot: int, reason: str):
-        s = self._slots[slot]
-        self._results[s.uid] = Generation(s.uid, list(s.generated), reason)
-        self._slots[slot] = self._new_slot()
-        self._active[slot] = False
-
-    def _pick_sampler(self) -> str:
-        """Cheapest chunk sampler covering every active slot's params."""
-        act = self._active
-        if (self._temperature[act] <= 0.0).all():
-            return "greedy"
-        if (self._top_k[act] == 0).all() and (self._top_p[act] >= 1.0).all():
-            return "temperature"
-        return "full"
-
-    def _clamp_steps(self, steps: int | None) -> int:
-        # clamp to the largest remaining budget among active slots: a tail
-        # chunk never runs whole-model decode steps nobody can consume (at
-        # most steps_per_sync distinct scan lengths ever compile)
-        max_budget = int(self._budget[self._active].max())
-        return min(steps or self.steps_per_sync, max(max_budget, 1))
-
-    def _absorb_chunk(self, tokens, lens, active, budget, emitted, masks, was_active) -> int:
-        """Pull a finished decode chunk's state back to host: emissions per
-        slot, occupancy telemetry, and finish transitions for slots that
-        went inactive inside the chunk."""
-        self._tokens = np.array(tokens)
-        self.kv_lens = np.array(lens)
-        self._active = np.array(active)
-        self._budget = np.array(budget)
-        emitted = np.asarray(emitted)  # (steps, S)
-        masks = np.asarray(masks)
-        n_out = 0
-        for t in range(emitted.shape[0]):
-            self.stats["decode_steps"] += 1
-            self.stats["occupancy_sum"] += float(masks[t].sum())
-            self.stats["max_active"] = max(self.stats["max_active"], int(masks[t].sum()))
-            for slot in np.nonzero(masks[t])[0]:
-                self._slots[slot].generated.append(int(emitted[t, slot]))
-                n_out += 1
-        self.stats["tokens_out"] += n_out
-        for slot in range(self.max_slots):
-            if was_active[slot] and not self._active[slot]:
-                last = self._slots[slot].generated[-1]
-                hit_eos = self.eos_id is not None and last == self.eos_id
-                self._finish(slot, "eos" if hit_eos else "length")
-        return n_out
-
-    def _decode_scan(self, step_kv, kv, tokens, lens, active, budget, temperature,
-                     top_k, top_p, key, *, steps, sampler):
-        """``steps`` decode iterations under one jit: per step, one attention
-        dispatch over all slots + one batched sampling dispatch. EOS/budget/
-        max_seq transitions update the active mask *inside* the scan, so a
-        slot that finishes mid-chunk stops consuming budget and its later
-        emissions are masked. ``sampler`` (static, known host-side from the
-        active slots' params) picks the cheapest variant: "greedy" is pure
-        argmax, "temperature" is sort-free Gumbel-max, "full" is the general
-        top-k/top-p sampler. ``step_kv(tokens, kv, lens, active)`` is the
-        engine-specific model call (slot-ragged or paged); ``kv`` is the
-        engine's cache pytree — {"k","v"} for the slot cache, plus
-        "k_scale"/"v_scale" planes for an int8 paged pool."""
-        eos = -1 if self.eos_id is None else self.eos_id
-
-        def step(carry, _):
-            kv, tokens, lens, active, budget, key = carry
-            logits, kv = step_kv(tokens, kv, lens, active)
-            key, sub = jax.random.split(key)
-            if sampler == "greedy":
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            elif sampler == "temperature":
-                nxt = smp.sample_temperature(logits, temperature, sub)
-            else:
-                nxt = smp.sample_tokens(logits, temperature, top_k, top_p, sub)
-            emit_mask = active
-            new_lens = jnp.where(active, lens + 1, lens)
-            new_budget = jnp.where(active, budget - 1, budget)
-            finished = (nxt == eos) | (new_budget <= 0) | (new_lens >= self.max_seq)
-            new_active = active & ~finished
-            new_tokens = jnp.where(active, nxt, tokens[:, 0])[:, None]
-            emitted = jnp.where(emit_mask, nxt, -1)
-            return (kv, new_tokens, new_lens, new_active, new_budget, key), (
-                emitted,
-                emit_mask,
-            )
-
-        init = (kv, tokens, lens, active, budget, key)
-        (kv, tokens, lens, active, budget, key), (emitted, masks) = jax.lax.scan(
-            step, init, None, length=steps
-        )
-        return kv, tokens, lens, active, budget, key, emitted, masks
-
-    # ------------------------------------------------------------ jitted fns
-
-    def _prefill_fn(self, params, tokens, length):
-        """tokens (1, P) right-padded; length (1,) true prompt length."""
-        cache = self.model.init_cache(1, tokens.shape[1], self.cache_dtype)
-        logits, cache = self.model.prefill(
-            params, {"tokens": tokens}, cache, self.qstate, lens=length
-        )
-        return logits, cache["k"], cache["v"]
-
-    def _insert_fn(self, big_k, big_v, ks, vs, slot):
-        """Write a (L, 1, KV, P, Dh) prefill cache into slot ``slot``."""
-        start = (0, slot, 0, 0, 0)
-        return (
-            jax.lax.dynamic_update_slice(big_k, ks.astype(big_k.dtype), start),
-            jax.lax.dynamic_update_slice(big_v, vs.astype(big_v.dtype), start),
-        )
-
-    def _chunk_fn(self, params, kv, tokens, lens, active, budget, temperature,
-                  top_k, top_p, key, *, steps, sampler):
-        def step_kv(tokens, kv, lens, active):
-            logits, cache = self.model.decode_step_ragged(
-                params, tokens, kv, lens, self.qstate
-            )
-            return logits, {"k": cache["k"], "v": cache["v"]}
-
-        return self._decode_scan(step_kv, kv, tokens, lens, active, budget,
-                                 temperature, top_k, top_p, key, steps=steps, sampler=sampler)
+        first = self._dev.sample_first(logits, req.sampling, sub)
+        self._complete_first(slot, req, first)
 
     # ------------------------------------------------------------- scheduling
 
@@ -396,10 +185,8 @@ class Engine:
             P = min(_bucket(len(req.prompt)), self.max_seq)
             padded = np.zeros((1, P), np.int32)
             padded[0, : len(req.prompt)] = req.prompt
-            logits, ks, vs = self._jit_prefill(
-                self.params, jnp.asarray(padded), jnp.asarray([len(req.prompt)], jnp.int32)
-            )
-            self._cache_k, self._cache_v = self._jit_insert(
+            logits, ks, vs = self._dev.prefill(padded, [len(req.prompt)])
+            self._cache_k, self._cache_v = self._dev.insert(
                 self._cache_k, self._cache_v, ks, vs, slot
             )
             self.stats["prefills"] += 1
@@ -414,12 +201,11 @@ class Engine:
             return 0
         steps = self._clamp_steps(steps)
         t0 = time.perf_counter()
-        out = self._jit_chunk(
-            self.params, {"k": self._cache_k, "v": self._cache_v},
-            jnp.asarray(self._tokens), jnp.asarray(self.kv_lens),
-            jnp.asarray(self._active), jnp.asarray(self._budget),
-            jnp.asarray(self._temperature), jnp.asarray(self._top_k),
-            jnp.asarray(self._top_p), self._key, steps=steps, sampler=self._pick_sampler(),
+        out = self._dev.decode_chunk(
+            {"k": self._cache_k, "v": self._cache_v},
+            self._tokens, self.kv_lens, self._active, self._budget,
+            self._temperature, self._top_k, self._top_p, self._key,
+            steps=steps, sampler=self._pick_sampler(),
         )
         kv, tokens, lens, active, budget, self._key, emitted, masks = out
         jax.block_until_ready(emitted)
@@ -428,43 +214,11 @@ class Engine:
         was_active = self._active
         return self._absorb_chunk(tokens, lens, active, budget, emitted, masks, was_active)
 
-    def run(self) -> dict[int, Generation]:
-        """Drain the queue and all active slots; returns {uid: Generation}."""
-        while self.has_work():
-            self.step_chunk()
-        out, self._results = self._results, {}
-        return out
-
-    @property
-    def mean_occupancy(self) -> float:
-        steps = max(self.stats["decode_steps"], 1)
-        return self.stats["occupancy_sum"] / steps
-
 
 # ===================================================================== paged
 
 
-@dataclass
-class _PagedSlot:
-    uid: int = -1
-    generated: list[int] = field(default_factory=list)
-    req: Request | None = None
-    table: list[int] = field(default_factory=list)   # host truth; mirrored to _tables
-    hashes: list[tuple[int, int]] = field(default_factory=list)
-    filled: int = 0        # prompt tokens with KV materialized (hits + chunks)
-    cached: int = 0        # tokens satisfied from the prefix cache
-    _prefilling: bool = False
-
-    @property
-    def free(self) -> bool:
-        return self.uid < 0
-
-    @property
-    def prefilling(self) -> bool:
-        return self._prefilling
-
-
-class PagedEngine(Engine):
+class PagedEngine(EngineCore, Engine):
     """Continuous batching over a block-paged KV cache (DESIGN.md §3).
 
     Same public surface as ``Engine`` (submit / step_chunk / run), same
@@ -473,7 +227,8 @@ class PagedEngine(Engine):
       * KV lives in a global pool of ``num_blocks`` blocks of ``block_size``
         tokens; each slot's cache is the blocks its table names
         (``runtime/kv_pool.BlockPool`` owns ids, refcounts, the prefix index
-        and CoW adjudication — this engine performs the device copies).
+        and CoW adjudication — the core queues the device copies, the device
+        step performs them).
       * Admission matches the prompt's rolling block hashes against the
         prefix index; hits retain cached blocks and skip their prefill. At
         least the prompt's last token is always re-prefilled so sampling has
@@ -515,6 +270,14 @@ class PagedEngine(Engine):
     fused kernels fold the default-sigma clip as a compile-time constant —
     a *calibrated* per-layer ``qstate`` only takes effect on the gather
     paths, so keep ``fused=False`` when serving calibrated clips.
+
+    ``mesh`` shards the pool tensor-parallel (DESIGN.md §9): the kv-head dim
+    of payloads and scale planes partitions over the mesh's 'model' axis
+    when divisible (``block_pool_spec``/``block_scale_spec``; non-divisible
+    head counts fall back to a replicated pool), block tables stay
+    replicated, and the fused kernels run under shard_map with each shard
+    DMAing only its local heads (kernels/ops.py). Params stay replicated so
+    greedy decode is bit-exact against a single-shard run.
     """
 
     def __init__(
@@ -542,143 +305,37 @@ class PagedEngine(Engine):
                     f"kernel), got {cfg.quant.softmax_impl!r}"
                 )
             cfg = cfg.with_quant(use_fused_kernel=fused)
-        self._init_common(cfg, params, max_slots=max_slots, max_seq=max_seq, qstate=qstate,
-                          eos_id=eos_id, steps_per_sync=steps_per_sync,
-                          cache_dtype=cache_dtype, seed=seed)
-        self.block_size = block_size
-        self.prefill_chunk = prefill_chunk
-        self.blocks_per_table = -(-max_seq // block_size)
-        if num_blocks is None:
-            num_blocks = 1 + max_slots * self.blocks_per_table  # +1: reserved null block
-        self.pool = BlockPool(num_blocks, block_size)
-        self._tables = np.full((max_slots, self.blocks_per_table), NULL_BLOCK, np.int32)
-
+        _validate_engine_cfg(cfg, cache_dtype, paged=True)
         self._quantized = jnp.dtype(cache_dtype) == jnp.int8
-        pool = self.model.init_block_pool(num_blocks, block_size, cache_dtype)
-        if mesh is not None:
-            from jax.sharding import NamedSharding
-
-            spec = shd.block_pool_spec(cfg, mesh)
-            pool["k"] = jax.device_put(pool["k"], NamedSharding(mesh, spec))
-            pool["v"] = jax.device_put(pool["v"], NamedSharding(mesh, spec))
-            if self._quantized:
-                sspec = shd.block_scale_spec(cfg, mesh)
-                pool["k_scale"] = jax.device_put(pool["k_scale"], NamedSharding(mesh, sspec))
-                pool["v_scale"] = jax.device_put(pool["v_scale"], NamedSharding(mesh, sspec))
-        self._pool = pool
-
-        self.stats.update(prompt_tokens=0, prefix_hit_tokens=0,
-                          prefill_tokens=0, prefill_chunks=0, preemptions=0)
-        self._preempt_carry: dict[int, list[int]] = {}
-        # blocks handed out by the pool since the last device launch whose
-        # scale planes must be reset to "unset" before anything writes them
-        # (recycled/evicted blocks carry a stale grid otherwise) — int8 only.
-        # A set: an id can be released (admission rollback, preemption) and
-        # re-allocated before the flush, and a CoW fork destination must be
-        # *removed* (its valid scales arrive with the copied payload)
-        self._fresh_blocks: set[int] = set()
-
-        self._jit_prefill_chunk = jax.jit(self._prefill_chunk_fn, donate_argnums=(1,))
-        self._jit_copy_block = jax.jit(self._copy_block_fn, donate_argnums=(0,))
-        self._jit_reset_scales = jax.jit(self._reset_scales_fn, donate_argnums=(0,))
-        self._jit_chunk = jax.jit(self._paged_chunk_fn, static_argnames=("steps", "sampler"),
-                                  donate_argnums=(1,))
-
-    def _new_slot(self):
-        return _PagedSlot()
-
-    def _validate_request(self, prompt, max_new: int) -> None:
-        super()._validate_request(prompt, max_new)
-        worst = min(len(prompt) + max_new, self.max_seq)
-        need = -(-worst // self.block_size)
-        if need > self.pool.num_blocks - 1:
-            raise ValueError(
-                f"request needs up to {need} blocks of {self.block_size} but the pool "
-                f"has {self.pool.num_blocks - 1} usable blocks"
-            )
-
-    # ------------------------------------------------------------ jitted fns
-
-    def _prefill_chunk_fn(self, params, pool, tokens, table, start, chunk_len, blk_t, off_t):
-        return self.model.prefill_paged_chunk(
-            params, tokens, pool, table, start, chunk_len, blk_t, off_t, self.qstate
+        EngineCore.__init__(
+            self, max_slots=max_slots, max_seq=max_seq, block_size=block_size,
+            prefill_chunk=prefill_chunk, num_blocks=num_blocks, eos_id=eos_id,
+            steps_per_sync=steps_per_sync, quantized=self._quantized,
         )
-
-    def _copy_block_fn(self, pool, src, dst):
-        """Copy-on-write device half: duplicate block ``src`` into ``dst``
-        across all layers (the pool already moved the refcounts). For an int8
-        pool the per-block scale planes travel with the payload — the fork
-        must dequantize identically to the shared original (DESIGN.md §6)."""
-        return {k: a.at[:, dst].set(a[:, src]) for k, a in pool.items()}
-
-    def _reset_scales_fn(self, pool, ids):
-        """Zero the scale planes of freshly allocated blocks: 0 is the
-        "unset" sentinel the next scatter seeds from (DESIGN.md §6)."""
-        pool = dict(pool)
-        pool["k_scale"] = pool["k_scale"].at[:, ids].set(0.0)
-        pool["v_scale"] = pool["v_scale"].at[:, ids].set(0.0)
-        return pool
-
-    def _paged_chunk_fn(self, params, pool, tables, tokens, lens, active, budget,
-                        temperature, top_k, top_p, key, *, steps, sampler):
-        def step_kv(tokens, pool, lens, active):
-            return self.model.decode_step_paged(
-                params, tokens, pool, tables, lens, active, self.qstate
-            )
-
-        return self._decode_scan(step_kv, pool, tokens, lens, active, budget,
-                                 temperature, top_k, top_p, key, steps=steps, sampler=sampler)
+        self._dev = PagedDeviceStep(
+            cfg, params, qstate=qstate, num_blocks=self.num_blocks,
+            block_size=block_size, max_seq=max_seq, eos_id=eos_id,
+            cache_dtype=cache_dtype, mesh=mesh,
+        )
+        self._bind_device_step()
+        self._key = jax.random.PRNGKey(seed)
+        self._pool = self._dev.init_pool()
+        # raw jitted (pool, src, dst) -> pool CoW copy; tests drive it directly
+        self._jit_copy_block = self._dev.copy_block
 
     # -------------------------------------------------------------- block ops
 
     def _make_writable(self, slot: int, bi: int) -> None:
-        """CoW: before appending into table entry ``bi``, fork a shared block
-        (refcount > 1) and copy its payload; exclusive blocks append in place
-        (appends land beyond the hashed token count — DESIGN.md §3)."""
-        s = self._slots[slot]
-        blk = s.table[bi]
-        if self.pool.writable(blk):
-            return
-        new = self.pool.fork(blk)
-        # the fork gets payload AND scales copied, so it must NOT be pending
-        # a scale reset: fork() allocates internally and can hand back an id
-        # that was _alloc_fresh'd and then released (rollback/preemption)
-        # while still queued — flushing that id after this copy would zero
-        # the fork's grid and corrupt its dequant
-        self._fresh_blocks.discard(new)
-        self._pool = self._jit_copy_block(
-            self._pool, jnp.asarray(blk, jnp.int32), jnp.asarray(new, jnp.int32)
-        )
-        s.table[bi] = new
-        self._tables[slot, bi] = new
+        """Core CoW adjudication + immediate device copy: the engine drains
+        the copy queue as soon as it is planned, so the pool state callers
+        observe (tests, telemetry) is never behind the host tables."""
+        EngineCore._make_writable(self, slot, bi)
+        self._drain_copies()
 
-    def _ensure_decode_blocks(self, slot: int, steps: int) -> None:
-        """Pre-chunk allocation: positions [lens, lens+writes) must have
-        writable blocks before the jitted chunk launches (tables are fixed
-        for the whole chunk). ``writes`` is bounded by the slot's own budget
-        so a nearly-finished slot never allocates blocks it cannot write;
-        blocks over-allocated for an EOS mid-chunk are reclaimed at finish."""
-        s = self._slots[slot]
-        lens = int(self.kv_lens[slot])
-        writes = min(steps, int(self._budget[slot]) + 1)  # +1: the finishing write
-        last_pos = min(lens + writes, self.max_seq) - 1
-        bi0 = lens // self.block_size
-        if bi0 < len(s.table):
-            self._make_writable(slot, bi0)
-        need = last_pos // self.block_size + 1
-        while len(s.table) < need:
-            blk = self._alloc_fresh()
-            self._tables[slot, len(s.table)] = blk
-            s.table.append(blk)
-
-    def _alloc_fresh(self) -> int:
-        """Pool alloc that queues the block for a scale reset (int8 pools):
-        a block off the free list or evicted from the LRU carries a stale
-        quantization grid that must not seed the next write."""
-        blk = self.pool.alloc()
-        if self._quantized:
-            self._fresh_blocks.add(blk)
-        return blk
+    def _drain_copies(self) -> None:
+        copies = self.take_pending_copies()
+        if copies:
+            self._pool = self._dev.copy_blocks(self._pool, copies)
 
     def _flush_fresh_scales(self) -> None:
         """Reset the scale planes of blocks allocated since the last launch.
@@ -686,157 +343,34 @@ class PagedEngine(Engine):
         write so the first scatter into a recycled block seeds a fresh scale.
         Released-but-still-queued ids are harmless: a free block's scales
         may be zeroed; only fork destinations must escape (see
-        ``_make_writable``)."""
-        if not self._fresh_blocks:
+        ``EngineCore._make_writable``)."""
+        fresh = self.take_fresh_scale_ids()
+        if not fresh:
             return
-        fresh = sorted(self._fresh_blocks)
-        self._fresh_blocks = set()
         n = _bucket(len(fresh), 8)
         ids = np.full((n,), NULL_BLOCK, np.int32)
         ids[: len(fresh)] = fresh
-        self._pool = self._jit_reset_scales(self._pool, jnp.asarray(ids))
-
-    def _preempt(self, slot: int) -> None:
-        """Release a live slot's blocks under pool pressure and requeue the
-        request for recompute: the continuation prompt is the original prompt
-        plus everything generated so far, so prefilling it reproduces the
-        decode state exactly (greedy continuation is bit-identical — chunked
-        prefill is exact, DESIGN.md §3), and its prompt blocks usually hit
-        the prefix cache the preempted slot just parked."""
-        s = self._slots[slot]
-        req = s.req
-        done = list(s.generated)
-        remaining = int(self._budget[slot])
-        self._preempt_carry[req.uid] = self._preempt_carry.pop(req.uid, []) + done
-        cont = Request(req.uid, req.prompt + tuple(done), remaining, req.sampling)
-        for blk in s.table:
-            self.pool.release(blk)
-        self._tables[slot, :] = NULL_BLOCK
-        self._slots[slot] = self._new_slot()
-        self._active[slot] = False
-        self.stats["preemptions"] += 1
-        self._queue.appendleft(cont)  # continuation bypasses _validate_request:
-        # its prompt may legitimately reach max_seq (finishes right after prefill)
-
-    def _reserve_chunk_blocks(self, steps: int) -> None:
-        """Ensure every active slot can write its share of the coming chunk.
-        Exhaustion preempts the newest active slot (its blocks free up, its
-        request recomputes later) instead of crashing the engine — honest
-        back-pressure on undersized pools."""
-        for i in np.argsort([self._slots[i].uid if self._active[i] else np.iinfo(np.int64).max
-                             for i in range(self.max_slots)]):
-            i = int(i)
-            if not self._active[i]:
-                continue
-            while self._active[i]:
-                try:
-                    self._ensure_decode_blocks(i, steps)
-                    break
-                except PoolExhausted:
-                    victims = [j for j in range(self.max_slots) if self._active[j]]
-                    victim = max(victims, key=lambda j: self._slots[j].uid)
-                    if victim == i and len(victims) == 1:
-                        raise PoolExhausted(
-                            f"cannot grow KV for the only active request (uid "
-                            f"{self._slots[i].uid}): pool of {self.pool.num_blocks - 1} "
-                            f"usable blocks is too small for max_seq {self.max_seq}"
-                        ) from None
-                    self._preempt(victim)
+        self._pool = self._dev.reset_fresh_scales(self._pool, ids)
 
     # ------------------------------------------------------------- scheduling
-
-    def _admit(self) -> int:
-        """Match prefix hashes, retain hits, allocate the rest of the prompt's
-        blocks, and park the slot in chunked-prefill state. Pool exhaustion
-        rolls the request back into the queue (back-pressure)."""
-        admitted = 0
-        free = self._free_slots()
-        while free and self._queue:
-            req = self._queue[0]
-            hashes = chain_hashes(req.prompt, self.block_size)
-            table, cached = [], 0
-            for h, n in hashes:
-                blk = self.pool.lookup(h)
-                if blk is None:
-                    break
-                table.append(blk)
-                cached += n
-            # always re-prefill at least the last prompt token: sampling needs
-            # its logits (a fully-cached prompt has KV but no logits)
-            cached = min(cached, len(req.prompt) - 1)
-            try:
-                while len(table) < len(hashes):
-                    table.append(self._alloc_fresh())
-            except PoolExhausted:
-                for b in table:
-                    self.pool.release(b)
-                break
-            self._queue.popleft()
-            slot = free.pop(0)
-            s = self._slots[slot]
-            s.uid, s.req, s.table, s.hashes = req.uid, req, table, hashes
-            s.filled = s.cached = cached
-            s._prefilling = True
-            self._tables[slot, :] = NULL_BLOCK
-            self._tables[slot, : len(table)] = table
-            self.stats["prompt_tokens"] += len(req.prompt)
-            self.stats["prefix_hit_tokens"] += cached
-            admitted += 1
-        return admitted
 
     def _prefill_step(self, slot: int) -> None:
         """Advance one ``prefill_chunk``-token chunk for a prefilling slot;
         on prompt completion, sample the first token and activate."""
-        s = self._slots[slot]
-        req = s.req
-        L = len(req.prompt)
-        bs = self.block_size
-        n = min(self.prefill_chunk, L - s.filled)
-        start = s.filled
-        for bi in range(start // bs, (start + n - 1) // bs + 1):
-            self._make_writable(slot, bi)
-        C = self.prefill_chunk
-        toks = np.zeros((1, C), np.int32)
-        toks[0, :n] = req.prompt[start : start + n]
-        blk_t = np.full((C,), NULL_BLOCK, np.int32)
-        off_t = np.arange(C, dtype=np.int32) % bs  # spread padded-row writes in the null block
-        for i in range(n):
-            pos = start + i
-            blk_t[i] = s.table[pos // bs]
-            off_t[i] = pos % bs
+        req = self._slots[slot].req
+        plan = self.plan_prefill_chunk(slot)
         self._flush_fresh_scales()
-        logits, self._pool = self._jit_prefill_chunk(
-            self.params, self._pool, jnp.asarray(toks),
-            jnp.asarray(self._tables[slot]), jnp.asarray(start, jnp.int32),
-            jnp.asarray(n, jnp.int32), jnp.asarray(blk_t), jnp.asarray(off_t),
+        logits, self._pool = self._dev.prefill_chunk(
+            self._pool, plan.tokens, self._tables[slot], plan.start, plan.n,
+            plan.blk_t, plan.off_t,
         )
-        s.filled += n
-        self.stats["prefill_chunks"] += 1
-        self.stats["prefill_tokens"] += n
-        # publish blocks whose hashed tokens are now fully materialized
-        for bi, (h, ntok) in enumerate(s.hashes):
-            if bi * bs + ntok <= s.filled:
-                self.pool.register(h, s.table[bi])
-        if s.filled == L:
-            s._prefilling = False
-            self.stats["prefills"] += 1
+        if self.commit_prefill_chunk(slot, plan.n):
             self._sample_first(slot, req, logits)
             # a preempted-at-the-brink continuation can legally have
             # len(prompt) == max_seq: its first sampled token is also its
             # last (no cache room to decode further)
             if self._active[slot] and int(self.kv_lens[slot]) >= self.max_seq:
                 self._finish(slot, "length")
-
-    def _finish(self, slot: int, reason: str):
-        s = self._slots[slot]
-        for blk in s.table:
-            self.pool.release(blk)
-        self._tables[slot, :] = NULL_BLOCK
-        carry = self._preempt_carry.pop(s.uid, None)
-        super()._finish(slot, reason)
-        if carry:  # tokens generated before a preemption lead the final answer
-            g = self._results[s.uid]
-            self._results[s.uid] = Generation(g.uid, carry + g.tokens, g.finish_reason)
 
     def step_chunk(self, steps: int | None = None) -> int:
         """Admit; advance one prefill chunk per prefilling slot; run one
@@ -853,12 +387,10 @@ class PagedEngine(Engine):
             return 0
         self._flush_fresh_scales()
         t0 = time.perf_counter()
-        out = self._jit_chunk(
-            self.params, self._pool, jnp.asarray(self._tables),
-            jnp.asarray(self._tokens), jnp.asarray(self.kv_lens),
-            jnp.asarray(self._active), jnp.asarray(self._budget),
-            jnp.asarray(self._temperature), jnp.asarray(self._top_k),
-            jnp.asarray(self._top_p), self._key, steps=steps, sampler=self._pick_sampler(),
+        out = self._dev.decode_chunk(
+            self._pool, self._tables, self._tokens, self.kv_lens, self._active,
+            self._budget, self._temperature, self._top_k, self._top_p, self._key,
+            steps=steps, sampler=self._pick_sampler(),
         )
         pool, tokens, lens, active, budget, self._key, emitted, masks = out
         jax.block_until_ready(emitted)
@@ -870,21 +402,146 @@ class PagedEngine(Engine):
     # -------------------------------------------------------------- telemetry
 
     @property
+    def kv_pool_bytes(self) -> int:
+        """Device bytes of the whole pool (int8: payloads + scale planes)."""
+        return self._dev.pool_bytes(self._pool)
+
+    @property
+    def pool_stats(self) -> PoolStats:
+        """Allocator counters; same accessor shape as ``DataParallelEngine``."""
+        return self.pool.stats
+
+
+# ================================================================ data parallel
+
+
+class DataParallelEngine:
+    """Independent ``PagedEngine`` replicas over the 'data' axis behind one
+    shared admission queue (DESIGN.md §9).
+
+    The block pool is deliberately *not* sharded over 'data' — prefix sharing
+    only pays within one pool, so each replica owns a full engine (scheduler
+    + pool + tables) on its own device subset (``launch.mesh.
+    make_replica_meshes``), and data parallelism is pure request-level
+    scaling: submissions land in a shared host queue and are dispatched to
+    the least-loaded replica at each ``step_chunk``. Dispatch is
+    deterministic (load, then replica index), and greedy decode is
+    batch-composition-independent (per-slot attention is masked to the slot;
+    sampling is argmax), so a DP fleet reproduces a single engine's greedy
+    tokens bit-exactly — the parity suite asserts it.
+
+    Public surface mirrors the single engine: ``submit`` / ``step_chunk`` /
+    ``run`` / ``has_work`` plus aggregated telemetry (``stats``,
+    ``prefix_hit_rate``, ``mean_occupancy``) and ``per_replica_stats`` for
+    bench_serving's per-replica reporting.
+    """
+
+    def __init__(self, cfg, params, *, replicas: int = 2, meshes=None, **engine_kw):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if meshes is not None and len(meshes) != replicas:
+            raise ValueError(f"got {len(meshes)} meshes for {replicas} replicas")
+        meshes = meshes if meshes is not None else [None] * replicas
+        self.engines = [PagedEngine(cfg, params, mesh=m, **engine_kw) for m in meshes]
+        self._pending: list[Request] = []
+        self._route: dict[int, tuple[int, int]] = {}  # global uid -> (replica, local uid)
+        self._next_uid = 0
+        self._results: dict[int, Generation] = {}
+
+    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY) -> int:
+        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+        # validate against replica 0 (all replicas are configured identically)
+        self.engines[0]._validate_request(prompt, max_new)
+        uid = self._next_uid
+        self._next_uid += 1
+        self._pending.append(Request(uid, prompt, max_new, sampling))
+        return uid
+
+    def _dispatch(self) -> None:
+        """Hand queued requests to replicas with admission capacity, least
+        loaded first (live slots + local backlog; ties break on index)."""
+        while self._pending:
+            loads = [
+                (len([s for s in e._slots if not s.free]) + e.num_queued, i)
+                for i, e in enumerate(self.engines)
+            ]
+            load, i = min(loads)
+            if load >= self.engines[i].max_slots:
+                break  # every replica is saturated; keep the shared backlog
+            req = self._pending.pop(0)
+            local = self.engines[i].submit(req.prompt, req.max_new, req.sampling)
+            self._route[req.uid] = (i, local)
+
+    def has_work(self) -> bool:
+        return bool(self._pending) or any(e.has_work() for e in self.engines)
+
+    def step_chunk(self, steps: int | None = None) -> int:
+        self._dispatch()
+        return sum(e.step_chunk(steps) for e in self.engines if e.has_work())
+
+    def run(self) -> dict[int, Generation]:
+        while self.has_work():
+            self.step_chunk()
+        out = {}
+        for uid, (i, local) in self._route.items():
+            g = self.engines[i]._results.pop(local, None)
+            if g is None:
+                g = self._results.pop(uid, None)
+            if g is not None:
+                out[uid] = Generation(uid, g.tokens, g.finish_reason)
+        self._route = {uid: r for uid, r in self._route.items() if uid not in out}
+        return out
+
+    # -------------------------------------------------------------- telemetry
+
+    @property
+    def num_active(self) -> int:
+        return sum(e.num_active for e in self.engines)
+
+    @property
+    def num_queued(self) -> int:
+        return len(self._pending) + sum(e.num_queued for e in self.engines)
+
+    @property
+    def per_replica_stats(self) -> list[dict]:
+        out = []
+        for e in self.engines:
+            s = dict(e.stats)
+            s["prefix_hit_rate"] = e.prefix_hit_rate
+            s["mean_occupancy"] = e.mean_occupancy
+            out.append(s)
+        return out
+
+    @property
+    def stats(self) -> dict:
+        """Replica stats summed (max_active is a max across replicas)."""
+        agg: dict = {}
+        for s in (e.stats for e in self.engines):
+            for k, v in s.items():
+                if k == "max_active":
+                    agg[k] = max(agg.get(k, 0), v)
+                else:
+                    agg[k] = agg.get(k, 0) + v
+        return agg
+
+    @property
     def prefix_hit_rate(self) -> float:
-        """Fraction of submitted prompt tokens served from the prefix cache."""
-        return self.stats["prefix_hit_tokens"] / max(self.stats["prompt_tokens"], 1)
+        s = self.stats
+        return s["prefix_hit_tokens"] / max(s["prompt_tokens"], 1)
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean live slots per decode step, summed over replicas (occupancy
+        sums add; steps are the max so overlapping replicas don't divide
+        each other's occupancy away)."""
+        steps = max(max(e.stats["decode_steps"] for e in self.engines), 1)
+        return sum(e.stats["occupancy_sum"] for e in self.engines) / steps
 
     @property
     def kv_pool_bytes(self) -> int:
-        """Device bytes of the whole pool (int8: payloads + scale planes)."""
-        return sum(a.nbytes for a in self._pool.values())
+        return sum(e.kv_pool_bytes for e in self.engines)
 
     @property
-    def live_kv_tokens(self) -> int:
-        """Tokens of KV currently materialized for unfinished requests."""
-        total = 0
-        for i, s in enumerate(self._slots):
-            if s.free:
-                continue
-            total += s.filled if s.prefilling else int(self.kv_lens[i])
-        return total
+    def pool_stats(self) -> PoolStats:
+        """Field-wise sum of every replica pool's allocator counters."""
+        return PoolStats.merged([e.pool.stats for e in self.engines])

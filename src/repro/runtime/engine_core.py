@@ -1,0 +1,561 @@
+"""Pure-host engine core: slot table, block allocator, prefix cache, scheduler.
+
+This module is the HOST half of the serving engines (DESIGN.md §9): every
+scheduling decision — admission against the rolling-hash prefix cache, block
+allocation and copy-on-write adjudication, chunked-prefill planning,
+preempt-and-recompute back-pressure, finish transitions, telemetry — lives
+here as plain Python + numpy over small integer state. It imports **no jax**
+(enforced by tests/test_engine_core.py): the device half is
+``runtime/device_step.py``, which holds the jitted functions that consume the
+plans produced here and carry the (possibly mesh-sharded) pool pytree.
+
+The split is what lets the system scale past one chip: the same ``EngineCore``
+instance schedules a single-device engine, a tensor-parallel engine whose pool
+is sharded over the 'model' mesh axis, or one replica of a data-parallel
+fleet (``runtime.engine.DataParallelEngine``) — the core never knows, because
+block ids, tables, and lengths are device-layout-free.
+
+Two classes:
+
+  * ``HostCore``   — slot-level state shared by the slot and paged engines:
+                     per-slot arrays (lens / active / budget / sampling
+                     params), the request queue, results, finish transitions,
+                     chunk-absorption bookkeeping, occupancy telemetry.
+  * ``EngineCore`` — the paged scheduler on top: ``BlockPool`` allocator +
+                     per-slot block tables, prefix-hash admission, chunked-
+                     prefill planning, CoW planning (device copies are
+                     *queued* as (src, dst) pairs for the device step to
+                     drain), fresh-block scale-reset queueing for int8 pools,
+                     and the preempt-and-recompute policy.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.runtime.kv_pool import NULL_BLOCK, BlockPool, PoolExhausted, chain_hashes
+
+
+@dataclass(frozen=True)
+class GreedySampling:
+    """jax-free stand-in for ``runtime.sampling.SamplingParams`` defaults —
+    the engines pass real SamplingParams; the core only reads these fields."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+
+GREEDY = GreedySampling()
+
+
+@dataclass(frozen=True)
+class Request:
+    uid: int
+    prompt: tuple[int, ...]
+    max_new: int
+    sampling: Any = GREEDY
+
+
+@dataclass
+class Generation:
+    """Finished request: generated ids (EOS included when hit) + why it ended."""
+
+    uid: int
+    tokens: list[int]
+    finish_reason: str  # "eos" | "length"
+
+
+@dataclass
+class _Slot:
+    uid: int = -1
+    generated: list[int] = field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.uid < 0
+
+    @property
+    def prefilling(self) -> bool:
+        return False  # slot-engine prefill is synchronous at admission
+
+
+@dataclass
+class _PagedSlot:
+    uid: int = -1
+    generated: list[int] = field(default_factory=list)
+    req: Request | None = None
+    table: list[int] = field(default_factory=list)   # host truth; mirrored to _tables
+    hashes: list[tuple[int, int]] = field(default_factory=list)
+    filled: int = 0        # prompt tokens with KV materialized (hits + chunks)
+    cached: int = 0        # tokens satisfied from the prefix cache
+    _prefilling: bool = False
+
+    @property
+    def free(self) -> bool:
+        return self.uid < 0
+
+    @property
+    def prefilling(self) -> bool:
+        return self._prefilling
+
+
+@dataclass(frozen=True)
+class PrefillChunkPlan:
+    """Host-computed launch plan for one chunked-prefill step: everything the
+    device step needs, as plain numpy (the device step ships it)."""
+
+    slot: int
+    tokens: np.ndarray       # (1, C) int32, right-padded
+    start: int               # tokens already materialized (hits + prior chunks)
+    n: int                   # live tokens in this chunk
+    blk_t: np.ndarray        # (C,) int32 scatter target blocks (pad -> null)
+    off_t: np.ndarray        # (C,) int32 scatter target offsets
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class HostCore:
+    """Slot-level host scheduler state shared by both engines (no jax)."""
+
+    def __init__(self, *, max_slots: int, max_seq: int, eos_id: int | None = None,
+                 steps_per_sync: int = 8):
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.steps_per_sync = steps_per_sync
+
+        # host-side slot state (small; shipped to device each chunk)
+        self._slots = [self._new_slot() for _ in range(max_slots)]
+        self.kv_lens = np.zeros((max_slots,), np.int32)
+        self._active = np.zeros((max_slots,), bool)
+        self._budget = np.zeros((max_slots,), np.int32)
+        self._tokens = np.zeros((max_slots, 1), np.int32)
+        self._temperature = np.zeros((max_slots,), np.float32)
+        self._top_k = np.zeros((max_slots,), np.int32)
+        self._top_p = np.ones((max_slots,), np.float32)
+
+        self._queue: deque[Request] = deque()
+        self._results: dict[int, Generation] = {}
+        self._next_uid = 0
+
+        # telemetry for bench_serving
+        self.stats = {"decode_steps": 0, "tokens_out": 0, "occupancy_sum": 0.0,
+                      "max_active": 0, "prefills": 0, "decode_time": 0.0}
+
+    def _new_slot(self):
+        return _Slot()
+
+    def _validate_request(self, prompt, max_new: int) -> None:
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_seq:
+            raise ValueError(f"prompt length {len(prompt)} >= max_seq {self.max_seq}")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+
+    def submit(self, prompt, max_new: int, sampling=GREEDY) -> int:
+        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+        self._validate_request(prompt, max_new)
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(Request(uid, prompt, max_new, sampling))
+        return uid
+
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def num_queued(self) -> int:
+        return len(self._queue)
+
+    def has_work(self) -> bool:
+        return (bool(self._queue) or self.num_active > 0
+                or any(not s.free and s.prefilling for s in self._slots))
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s.free]
+
+    def _complete_first(self, slot: int, req: Request, first: int) -> None:
+        """Record the first generated token and flip the slot into decode
+        state (or finish immediately on EOS / budget 1). The *sampling* of
+        that token from prefill logits is device work (the engine's
+        ``_sample_first``); this is the host transition it feeds."""
+        sp = req.sampling
+        self.stats["tokens_out"] += 1
+        s = self._slots[slot]
+        s.uid, s.generated = req.uid, [first]
+        self.kv_lens[slot] = len(req.prompt)
+        self._tokens[slot, 0] = first
+        self._temperature[slot] = sp.temperature
+        self._top_k[slot] = sp.top_k
+        self._top_p[slot] = sp.top_p
+        self._budget[slot] = req.max_new - 1
+        hit_eos = self.eos_id is not None and first == self.eos_id
+        if hit_eos or req.max_new == 1:
+            self._finish(slot, "eos" if hit_eos else "length")
+        else:
+            self._active[slot] = True
+
+    def _finish(self, slot: int, reason: str):
+        s = self._slots[slot]
+        self._results[s.uid] = Generation(s.uid, list(s.generated), reason)
+        self._slots[slot] = self._new_slot()
+        self._active[slot] = False
+
+    def _pick_sampler(self) -> str:
+        """Cheapest chunk sampler covering every active slot's params."""
+        act = self._active
+        if (self._temperature[act] <= 0.0).all():
+            return "greedy"
+        if (self._top_k[act] == 0).all() and (self._top_p[act] >= 1.0).all():
+            return "temperature"
+        return "full"
+
+    def _clamp_steps(self, steps: int | None) -> int:
+        # clamp to the largest remaining budget among active slots: a tail
+        # chunk never runs whole-model decode steps nobody can consume (at
+        # most steps_per_sync distinct scan lengths ever compile)
+        max_budget = int(self._budget[self._active].max())
+        return min(steps or self.steps_per_sync, max(max_budget, 1))
+
+    def _absorb_chunk(self, tokens, lens, active, budget, emitted, masks, was_active) -> int:
+        """Pull a finished decode chunk's state back to host: emissions per
+        slot, occupancy telemetry, and finish transitions for slots that
+        went inactive inside the chunk."""
+        self._tokens = np.array(tokens)
+        self.kv_lens = np.array(lens)
+        self._active = np.array(active)
+        self._budget = np.array(budget)
+        emitted = np.asarray(emitted)  # (steps, S)
+        masks = np.asarray(masks)
+        n_out = 0
+        for t in range(emitted.shape[0]):
+            self.stats["decode_steps"] += 1
+            self.stats["occupancy_sum"] += float(masks[t].sum())
+            self.stats["max_active"] = max(self.stats["max_active"], int(masks[t].sum()))
+            for slot in np.nonzero(masks[t])[0]:
+                self._slots[slot].generated.append(int(emitted[t, slot]))
+                n_out += 1
+        self.stats["tokens_out"] += n_out
+        for slot in range(self.max_slots):
+            if was_active[slot] and not self._active[slot]:
+                last = self._slots[slot].generated[-1]
+                hit_eos = self.eos_id is not None and last == self.eos_id
+                self._finish(slot, "eos" if hit_eos else "length")
+        return n_out
+
+    def step_chunk(self, steps: int | None = None) -> int:  # pragma: no cover
+        raise NotImplementedError("the engine layer (runtime/engine.py) drives device chunks")
+
+    def run(self) -> dict[int, Generation]:
+        """Drain the queue and all active slots; returns {uid: Generation}."""
+        while self.has_work():
+            self.step_chunk()
+        out, self._results = self._results, {}
+        return out
+
+    @property
+    def mean_occupancy(self) -> float:
+        steps = max(self.stats["decode_steps"], 1)
+        return self.stats["occupancy_sum"] / steps
+
+
+# ===================================================================== paged
+
+
+class EngineCore(HostCore):
+    """Host scheduler for the block-paged engine (DESIGN.md §3/§9).
+
+    Owns every paged scheduling decision with zero device state: the
+    ``BlockPool`` allocator + refcounted prefix index, the per-slot block
+    tables (host truth in ``_slots[i].table``, device mirror in ``_tables``),
+    prefix-hash admission, chunked-prefill planning, the preempt-and-
+    recompute policy, and the int8 fresh-block scale-reset queue.
+
+    Device effects are *queued, never performed*: copy-on-write forks append
+    ``(src, dst)`` to ``pending_copies`` and fresh allocations accumulate in
+    ``_fresh_blocks`` — ``runtime.engine.PagedEngine`` drains both through
+    the jitted functions in ``runtime/device_step.py`` before any launch
+    that reads or writes the pool. Draining order matters and is part of the
+    contract: copies first (in queue order — a queued copy's source may be
+    released and recycled afterwards, and a later fork may target it), then
+    scale resets (so a stale queued copy can never resurrect a recycled
+    block's old quantization grid).
+    """
+
+    def __init__(self, *, max_slots: int, max_seq: int, block_size: int = 16,
+                 prefill_chunk: int = 32, num_blocks: int | None = None,
+                 eos_id: int | None = None, steps_per_sync: int = 8,
+                 quantized: bool = False):
+        # explicit base call: PagedEngine linearizes as (EngineCore, Engine,
+        # HostCore) and Engine.__init__ must not run on this path
+        HostCore.__init__(self, max_slots=max_slots, max_seq=max_seq, eos_id=eos_id,
+                          steps_per_sync=steps_per_sync)
+        self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        self.blocks_per_table = -(-max_seq // block_size)
+        if num_blocks is None:
+            num_blocks = 1 + max_slots * self.blocks_per_table  # +1: reserved null block
+        self.num_blocks = num_blocks
+        self.pool = BlockPool(num_blocks, block_size)
+        self._tables = np.full((max_slots, self.blocks_per_table), NULL_BLOCK, np.int32)
+        self._quantized = quantized
+
+        self.stats.update(prompt_tokens=0, prefix_hit_tokens=0,
+                          prefill_tokens=0, prefill_chunks=0, preemptions=0)
+        self._preempt_carry: dict[int, list[int]] = {}
+        # CoW device copies planned but not yet performed: (src, dst) pairs in
+        # the order they must execute (see class docstring)
+        self.pending_copies: list[tuple[int, int]] = []
+        # blocks handed out by the pool since the last device launch whose
+        # scale planes must be reset to "unset" before anything writes them
+        # (recycled/evicted blocks carry a stale grid otherwise) — int8 only.
+        # A set: an id can be released (admission rollback, preemption) and
+        # re-allocated before the flush, and a CoW fork destination must be
+        # *removed* (its valid scales arrive with the copied payload)
+        self._fresh_blocks: set[int] = set()
+
+    def _new_slot(self):
+        return _PagedSlot()
+
+    def _validate_request(self, prompt, max_new: int) -> None:
+        super()._validate_request(prompt, max_new)
+        worst = min(len(prompt) + max_new, self.max_seq)
+        need = -(-worst // self.block_size)
+        if need > self.pool.num_blocks - 1:
+            raise ValueError(
+                f"request needs up to {need} blocks of {self.block_size} but the pool "
+                f"has {self.pool.num_blocks - 1} usable blocks"
+            )
+
+    # -------------------------------------------------------------- block ops
+
+    def _make_writable(self, slot: int, bi: int) -> None:
+        """CoW: before appending into table entry ``bi``, fork a shared block
+        (refcount > 1) and queue its payload copy; exclusive blocks append in
+        place (appends land beyond the hashed token count — DESIGN.md §3)."""
+        s = self._slots[slot]
+        blk = s.table[bi]
+        if self.pool.writable(blk):
+            return
+        new = self.pool.fork(blk)
+        # the fork gets payload AND scales copied, so it must NOT be pending
+        # a scale reset: fork() allocates internally and can hand back an id
+        # that was _alloc_fresh'd and then released (rollback/preemption)
+        # while still queued — flushing that id after this copy would zero
+        # the fork's grid and corrupt its dequant
+        self._fresh_blocks.discard(new)
+        self.pending_copies.append((blk, new))
+        s.table[bi] = new
+        self._tables[slot, bi] = new
+
+    def take_pending_copies(self) -> list[tuple[int, int]]:
+        """Hand the queued CoW copies to the device layer (clears the queue)."""
+        out, self.pending_copies = self.pending_copies, []
+        return out
+
+    def _ensure_decode_blocks(self, slot: int, steps: int) -> None:
+        """Pre-chunk allocation: positions [lens, lens+writes) must have
+        writable blocks before the jitted chunk launches (tables are fixed
+        for the whole chunk). ``writes`` is bounded by the slot's own budget
+        so a nearly-finished slot never allocates blocks it cannot write;
+        blocks over-allocated for an EOS mid-chunk are reclaimed at finish."""
+        s = self._slots[slot]
+        lens = int(self.kv_lens[slot])
+        writes = min(steps, int(self._budget[slot]) + 1)  # +1: the finishing write
+        last_pos = min(lens + writes, self.max_seq) - 1
+        bi0 = lens // self.block_size
+        if bi0 < len(s.table):
+            self._make_writable(slot, bi0)
+        need = last_pos // self.block_size + 1
+        while len(s.table) < need:
+            blk = self._alloc_fresh()
+            self._tables[slot, len(s.table)] = blk
+            s.table.append(blk)
+
+    def _alloc_fresh(self) -> int:
+        """Pool alloc that queues the block for a scale reset (int8 pools):
+        a block off the free list or evicted from the LRU carries a stale
+        quantization grid that must not seed the next write."""
+        blk = self.pool.alloc()
+        if self._quantized:
+            self._fresh_blocks.add(blk)
+        return blk
+
+    def take_fresh_scale_ids(self) -> list[int]:
+        """Blocks allocated since the last device launch whose scale planes
+        the device layer must reset before any jitted write (clears the
+        queue; sorted for a deterministic device call)."""
+        fresh = sorted(self._fresh_blocks)
+        self._fresh_blocks = set()
+        return fresh
+
+    def _preempt(self, slot: int) -> None:
+        """Release a live slot's blocks under pool pressure and requeue the
+        request for recompute: the continuation prompt is the original prompt
+        plus everything generated so far, so prefilling it reproduces the
+        decode state exactly (greedy continuation is bit-identical — chunked
+        prefill is exact, DESIGN.md §3), and its prompt blocks usually hit
+        the prefix cache the preempted slot just parked."""
+        s = self._slots[slot]
+        req = s.req
+        done = list(s.generated)
+        remaining = int(self._budget[slot])
+        self._preempt_carry[req.uid] = self._preempt_carry.pop(req.uid, []) + done
+        cont = Request(req.uid, req.prompt + tuple(done), remaining, req.sampling)
+        for blk in s.table:
+            self.pool.release(blk)
+        self._tables[slot, :] = NULL_BLOCK
+        self._slots[slot] = self._new_slot()
+        self._active[slot] = False
+        self.stats["preemptions"] += 1
+        self._queue.appendleft(cont)  # continuation bypasses _validate_request:
+        # its prompt may legitimately reach max_seq (finishes right after prefill)
+
+    def _reserve_chunk_blocks(self, steps: int) -> None:
+        """Ensure every active slot can write its share of the coming chunk.
+        Exhaustion preempts the newest active slot (its blocks free up, its
+        request recomputes later) instead of crashing the engine — honest
+        back-pressure on undersized pools."""
+        for i in np.argsort([self._slots[i].uid if self._active[i] else np.iinfo(np.int64).max
+                             for i in range(self.max_slots)]):
+            i = int(i)
+            if not self._active[i]:
+                continue
+            while self._active[i]:
+                try:
+                    self._ensure_decode_blocks(i, steps)
+                    break
+                except PoolExhausted:
+                    victims = [j for j in range(self.max_slots) if self._active[j]]
+                    victim = max(victims, key=lambda j: self._slots[j].uid)
+                    if victim == i and len(victims) == 1:
+                        raise PoolExhausted(
+                            f"cannot grow KV for the only active request (uid "
+                            f"{self._slots[i].uid}): pool of {self.pool.num_blocks - 1} "
+                            f"usable blocks is too small for max_seq {self.max_seq}"
+                        ) from None
+                    self._preempt(victim)
+
+    # ------------------------------------------------------------- scheduling
+
+    def _admit(self) -> int:
+        """Match prefix hashes, retain hits, allocate the rest of the prompt's
+        blocks, and park the slot in chunked-prefill state. Pool exhaustion
+        rolls the request back into the queue (back-pressure)."""
+        admitted = 0
+        free = self._free_slots()
+        while free and self._queue:
+            req = self._queue[0]
+            hashes = chain_hashes(req.prompt, self.block_size)
+            table, cached = [], 0
+            for h, n in hashes:
+                blk = self.pool.lookup(h)
+                if blk is None:
+                    break
+                table.append(blk)
+                cached += n
+            # always re-prefill at least the last prompt token: sampling needs
+            # its logits (a fully-cached prompt has KV but no logits)
+            cached = min(cached, len(req.prompt) - 1)
+            try:
+                while len(table) < len(hashes):
+                    table.append(self._alloc_fresh())
+            except PoolExhausted:
+                for b in table:
+                    self.pool.release(b)
+                break
+            self._queue.popleft()
+            slot = free.pop(0)
+            s = self._slots[slot]
+            s.uid, s.req, s.table, s.hashes = req.uid, req, table, hashes
+            s.filled = s.cached = cached
+            s._prefilling = True
+            self._tables[slot, :] = NULL_BLOCK
+            self._tables[slot, : len(table)] = table
+            self.stats["prompt_tokens"] += len(req.prompt)
+            self.stats["prefix_hit_tokens"] += cached
+            admitted += 1
+        return admitted
+
+    def plan_prefill_chunk(self, slot: int) -> PrefillChunkPlan:
+        """Plan the next ``prefill_chunk``-token chunk for a prefilling slot:
+        CoW-protect the chunk's target blocks (copies are queued) and compute
+        the padded token window plus per-row scatter targets. Does not
+        advance ``filled`` — ``commit_prefill_chunk`` does, after the device
+        step ran the plan."""
+        s = self._slots[slot]
+        req = s.req
+        bs = self.block_size
+        n = min(self.prefill_chunk, len(req.prompt) - s.filled)
+        start = s.filled
+        for bi in range(start // bs, (start + n - 1) // bs + 1):
+            self._make_writable(slot, bi)
+        C = self.prefill_chunk
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = req.prompt[start : start + n]
+        blk_t = np.full((C,), NULL_BLOCK, np.int32)
+        off_t = np.arange(C, dtype=np.int32) % bs  # spread padded-row writes in the null block
+        for i in range(n):
+            pos = start + i
+            blk_t[i] = s.table[pos // bs]
+            off_t[i] = pos % bs
+        return PrefillChunkPlan(slot, toks, start, n, blk_t, off_t)
+
+    def commit_prefill_chunk(self, slot: int, n: int) -> bool:
+        """Host transitions after a prefill chunk ran on device: advance
+        ``filled``, publish fully-materialized hashed blocks to the prefix
+        index, and report whether the prompt just completed (the engine then
+        samples the first token from the chunk's logits)."""
+        s = self._slots[slot]
+        s.filled += n
+        self.stats["prefill_chunks"] += 1
+        self.stats["prefill_tokens"] += n
+        bs = self.block_size
+        for bi, (h, ntok) in enumerate(s.hashes):
+            if bi * bs + ntok <= s.filled:
+                self.pool.register(h, s.table[bi])
+        if s.filled == len(s.req.prompt):
+            s._prefilling = False
+            self.stats["prefills"] += 1
+            return True
+        return False
+
+    def _finish(self, slot: int, reason: str):
+        s = self._slots[slot]
+        for blk in s.table:
+            self.pool.release(blk)
+        self._tables[slot, :] = NULL_BLOCK
+        carry = self._preempt_carry.pop(s.uid, None)
+        super()._finish(slot, reason)
+        if carry:  # tokens generated before a preemption lead the final answer
+            g = self._results[s.uid]
+            self._results[s.uid] = Generation(g.uid, carry + g.tokens, g.finish_reason)
+
+    # -------------------------------------------------------------- telemetry
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of submitted prompt tokens served from the prefix cache."""
+        return self.stats["prefix_hit_tokens"] / max(self.stats["prompt_tokens"], 1)
+
+    @property
+    def live_kv_tokens(self) -> int:
+        """Tokens of KV currently materialized for unfinished requests."""
+        total = 0
+        for i, s in enumerate(self._slots):
+            if s.free:
+                continue
+            total += s.filled if s.prefilling else int(self.kv_lens[i])
+        return total

@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import zlib
 from collections import OrderedDict, deque
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
 
 import numpy as np
 
@@ -97,6 +97,15 @@ class PoolStats:
     cow_copies: int = 0
     hash_hits: int = 0
     hash_misses: int = 0
+
+    @classmethod
+    def merged(cls, parts: "list[PoolStats] | tuple[PoolStats, ...]") -> "PoolStats":
+        """Field-wise sum across data-parallel replica pools (DESIGN.md §9)."""
+        out = cls()
+        for p in parts:
+            for f in fields(cls):
+                setattr(out, f.name, getattr(out, f.name) + getattr(p, f.name))
+        return out
 
 
 class BlockPool:

@@ -48,6 +48,24 @@ def activation_rules(mesh: Mesh, rules: dict[str, P]):
         _CTX.update(old)
 
 
+def use_mesh(mesh: Mesh | None):
+    """Activate ``mesh`` (no activation rules) for the duration of a call.
+
+    The serving device layer wraps every jitted call in this so trace-time
+    mesh discovery works: the shard_map dispatch around the fused paged
+    kernels (kernels/ops.py) and ``shard_activation`` both read the ambient
+    ``_CTX`` mesh while the function body is being traced. ``None`` is a
+    no-op, so single-device engines pay nothing."""
+    if mesh is None:
+        return contextlib.nullcontext()
+    return activation_rules(mesh, {})
+
+
+def current_mesh() -> Mesh | None:
+    """The ambient mesh (``activation_rules``/``use_mesh``), or None."""
+    return _CTX["mesh"]
+
+
 def shard_activation(x, name: str):
     mesh = _CTX["mesh"]
     if mesh is None:

@@ -1,0 +1,50 @@
+"""launch/serve.py flag-combination validation (no devices, no model)."""
+
+import os
+import sys
+from argparse import Namespace
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import validate_serve_args  # noqa: E402
+
+
+def _args(**kw):
+    base = dict(paged=False, fused=None, impl="exaq", kv_dtype="bf16", dp=1, tp=1)
+    base.update(kw)
+    return Namespace(**base)
+
+
+def test_defaults_pass():
+    validate_serve_args(_args())
+    validate_serve_args(_args(paged=True, fused=True, kv_dtype="int8", dp=2, tp=2),
+                        device_count=4)
+
+
+@pytest.mark.parametrize("kw,msg", [
+    (dict(fused=True), "--paged"),
+    (dict(fused=False), "--paged"),
+    (dict(paged=True, fused=True, impl="exact"), "--impl exaq"),
+    (dict(kv_dtype="int8"), "--paged"),
+    (dict(dp=2), "--paged"),
+    (dict(tp=2), "--paged"),
+    (dict(dp=0), ">= 1"),
+    (dict(tp=-1), ">= 1"),
+])
+def test_rejections_name_the_fix(kw, msg):
+    with pytest.raises(SystemExit, match=msg):
+        validate_serve_args(_args(**kw))
+
+
+def test_device_count_check():
+    with pytest.raises(SystemExit, match="needs 8 devices"):
+        validate_serve_args(_args(paged=True, dp=4, tp=2), device_count=4)
+    validate_serve_args(_args(paged=True, dp=4, tp=2), device_count=8)
+    # no device_count given -> the mesh builder checks at construction instead
+    validate_serve_args(_args(paged=True, dp=64, tp=64))
+
+
+def test_no_fused_flag_is_paged_only_but_impl_agnostic():
+    validate_serve_args(_args(paged=True, fused=False, impl="exact"))

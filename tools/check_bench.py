@@ -16,14 +16,17 @@ informational context. Per-metric rules:
     exact-softmax engine) may dip at most `--tolerance` (default 20%)
     below baseline; improvements always pass.
   * relative latency (fused kernel step/chunk time over the same run's
-    gather path) may rise at most `--latency-tolerance` (default =
-    `--tolerance`) above baseline. Interpret-mode Pallas timings still
-    carry run-to-run noise (~2x absolute, much less as a ratio), so CI
-    passes an explicit noise-calibrated budget for this class — the
-    modeled-bytes ratios below are the exact perf claims.
-  * parity, hit-rate, agreement, and modeled-bytes-ratio metrics are
-    exact-or-better: they are deterministic given the pinned seed/toolchain,
-    so any dip is a real regression.
+    gather path) is *informational only*: on CPU the fused kernels run
+    interpret-mode Pallas against a native-XLA gather, so the ratio
+    measures the interpreter, not the kernel, and its run-to-run noise
+    (~2x absolute) repeatedly tripped the gate on healthy runs. The
+    ratios are still derived and printed for trend-watching; the
+    modeled-bytes ratios below are the gated perf claims.
+  * parity, hit-rate, agreement, occupancy, and modeled-bytes-ratio
+    metrics are exact-or-better: they are deterministic given the pinned
+    seed/toolchain, so any dip is a real regression. This includes the
+    data-parallel fleet metrics (`serving.dp.*`): replica dispatch is
+    deterministic, so the aggregated hit rate and occupancy are too.
 
 Metrics in the baseline that no rule matches are informational. Metrics the
 rules match that *disappear* from a fresh run fail (a silently dropped
@@ -70,8 +73,6 @@ DERIVED = [
 # in one direction; "floor" is exact-or-better; "bool" must stay truthy.
 SPEC = [
     ("serving.impls.*.tok_per_s_rel_exact", "higher"),
-    ("micro.*_over_gather_step_ms", "lower"),
-    ("micro.prefill.*_over_gather_chunk_ms", "lower"),
     ("serving.impls.*.agreement_vs_exact", "floor"),
     ("serving.paged.*.prefix_hit_rate", "floor"),
     ("serving.paged.*.greedy_parity_vs_slot", "bool"),
@@ -81,8 +82,18 @@ SPEC = [
     ("micro.int8_vs_bf16_bytes_reduction_x", "floor"),
     ("micro.prefill.bytes_reduction_x", "floor"),
     ("micro.prefill.int8_vs_bf16_bytes_reduction_x", "floor"),
+    ("serving.dp.greedy_parity_vs_single", "bool"),
+    ("serving.dp.aggregate.prefix_hit_rate", "floor"),
+    ("serving.dp.aggregate.mean_occupancy", "floor"),
 ]
 FLOOR_EPS = 1e-9  # fp-serialization slack for the exact-or-better rules
+
+# derived wall-clock ratios reported but NOT gated: interpret-mode Pallas vs
+# native-XLA timings on CI runners measure the interpreter, not the kernel
+INFORMATIONAL = [
+    "micro.*_over_gather_step_ms",
+    "micro.prefill.*_over_gather_chunk_ms",
+]
 
 
 def flatten(obj, prefix=""):
@@ -142,6 +153,10 @@ def compare(
     for path in sorted(set(fresh_flat) - set(base_flat)):
         if rule_for(path) is not None:
             notes.append(f"{path}: new gated metric not in baseline — refresh it with --update")
+    for path in sorted(fresh_flat):
+        if any(fnmatch.fnmatch(path, pat) for pat in INFORMATIONAL):
+            base_txt = f" (baseline {float(base_flat[path]):.3g})" if path in base_flat else ""
+            notes.append(f"informational, not gated: {path} = {float(fresh_flat[path]):.3g}{base_txt}")
     return failures, notes
 
 
@@ -160,8 +175,9 @@ def main() -> int:
         "--latency-tolerance",
         type=float,
         default=None,
-        help="allowed one-sided rise for latency metrics (default: --tolerance); "
-        "CI widens this to the measured interpret-mode run-to-run noise",
+        help="accepted for compatibility; wall-clock latency ratios are "
+        "informational (printed, never gated) since interpret-mode timings "
+        "measure the Pallas interpreter, not the kernel",
     )
     ap.add_argument(
         "--update",
@@ -189,10 +205,10 @@ def main() -> int:
         print(f"FAIL: {len(failures)} bench metric(s) regressed past tolerance")
         return 1
     n_gated = sum(1 for p in derive(flatten(baseline)) if rule_for(p) is not None)
-    lat = args.tolerance if args.latency_tolerance is None else args.latency_tolerance
     print(
         f"bench OK: {n_gated} gated metrics within tolerance "
-        f"(throughput -{args.tolerance:.0%}, latency +{lat:.0%}, parity/ratio exact-or-better)"
+        f"(throughput -{args.tolerance:.0%}, parity/ratio/occupancy exact-or-better; "
+        f"wall-clock latency ratios informational)"
     )
     return 0
 

@@ -104,7 +104,12 @@ ARGPARSE_FLAG_RE = re.compile(r"""add_argument\(\s*["'](--[A-Za-z][\w-]*)["']"""
 README_FLAG_RE = re.compile(r"(?<![\w-])--[A-Za-z][\w-]*")
 # CLI-bearing sources whose flags README may legitimately mention
 FLAG_SOURCE_GLOBS = ["src/repro/launch/*.py", "benchmarks/*.py", "experiments/*.py", "tools/*.py"]
-ALWAYS_KNOWN_FLAGS = {"--help"}  # argparse built-in
+ALWAYS_KNOWN_FLAGS = {
+    "--help",  # argparse built-in
+    # XLA runtime flag (an XLA_FLAGS env-var value, not a CLI flag): README's
+    # dp/tp example must stay copy-pasteable on a single-CPU box
+    "--xla_force_host_platform_device_count",
+}
 
 
 def argparse_flags(path: Path) -> set[str]:
