@@ -26,13 +26,15 @@ metrics (DESIGN.md §3):
 Part 3 is the paged-decode microbenchmark (DESIGN.md §3, fused paged
 decode): one jitted ``decode_step_paged`` at 50% pool occupancy, fused
 Pallas kernel vs gather-then-dispatch reference, plus the fused kernel on
-an int8 pool (DESIGN.md §6). It reports the modeled per-step HBM KV bytes
-(pool-read vs gather-then-read — asserted >= 2x in the fused kernel's
-favor; fused-int8 vs fused-bf16 — asserted >= 1.8x, scale reads counted;
-these are the numbers that transfer to the accelerator) and the measured
-step latency (directional on CPU, where the fused kernel runs in Pallas
-interpret mode while the gather lowers to native XLA). ``--micro-json``
-dumps this part alone for CI artifact upload.
+an int8 pool (DESIGN.md §6) and a packed-int4 pool (DESIGN.md §10). It
+reports the modeled per-step HBM KV bytes (pool-read vs gather-then-read —
+asserted >= 2x in the fused kernel's favor; fused-int8 vs fused-bf16 —
+asserted >= 1.8x; fused-int4 vs fused-int8 — asserted >= 1.8x, and >= 3.5x
+vs bf16, scale + sub-code reads counted; these are the numbers that
+transfer to the accelerator) and the measured step latency (directional on
+CPU, where the fused kernel runs in Pallas interpret mode while the gather
+lowers to native XLA). ``--micro-json`` dumps this part alone for CI
+artifact upload.
 
 Part 3b is the paged-*prefill* microbenchmark (DESIGN.md §7): one jitted
 ``prefill_paged_chunk`` whose window fills 50% of the padded table, fused
@@ -44,9 +46,11 @@ latency (directional on CPU). The metrics ride in the ``--micro-json``
 object under ``"prefill"``.
 
 Part 4 replays the shared-prefix trace through the paged engine with an
-fp32 pool and an int8 pool (same calibrated EXAQ-INT2 softmax) and asserts
-greedy decode agrees on >= 99% of tokens while the pool shrinks ~4x
-(per-block scales included) — the serving-accuracy claim of DESIGN.md §6.
+fp32 pool, an int8 pool and a packed-int4 pool (same calibrated EXAQ-INT2
+softmax) and asserts greedy decode agrees on >= 99% of tokens for both
+quantized pools while the pool shrinks ~4x (int8) and >= 1.8x further
+(int4; all scale planes included) — the serving-accuracy claims of
+DESIGN.md §6/§10.
 
 Part 5 replays the same trace through a 2-replica ``DataParallelEngine``
 (DESIGN.md §9) behind the shared admission queue and asserts bit-exact
@@ -83,13 +87,19 @@ PERIOD, TOK0 = 7, 5  # the learned pattern: TOK0, TOK0+1, ..., cyclic
 
 
 def make_smoke_model(arch: str, train_steps: int = 60):
-    """Reduced 2-layer model overfit on a periodic sequence (confident head)."""
+    """Reduced 2-layer model overfit on a periodic sequence (confident head).
+
+    The training window covers every position the serving traces below can
+    reach (shared prefix + ragged tail + generation): beyond the trained
+    window the head's argmax margins collapse to RoPE-extrapolation noise,
+    where agreement metrics would measure tie-breaking against the
+    quantizer's noise floor instead of the pool's fidelity."""
     base = get_config(arch).reduced(num_layers=2)
     cfg = base.with_quant(softmax_impl="exact")
     opt = AdamW(lr=3e-3)
     state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
     step = jax.jit(make_train_step(cfg, opt))
-    T = 32
+    T = 80
     seq = np.arange(T + 1) % PERIOD + TOK0
     batch = {
         "tokens": jnp.asarray(np.stack([np.roll(seq, -s)[:T] for s in range(8)]), jnp.int32),
@@ -245,15 +255,17 @@ def bench_paged(base, params, calib_stats, args, rng, report):
 
 
 def bench_kv_dtype(base, params, calib_stats, args, rng, report):
-    """Part 4: int8 KV pool vs fp32 pool on the shared-prefix trace
-    (DESIGN.md §6).
+    """Part 4: int8 and packed-int4 KV pools vs the fp32 pool on the
+    shared-prefix trace (DESIGN.md §6/§10).
 
     Same engine, same trace, same calibrated EXAQ-INT2 softmax — only the
     pool storage format changes. The int8 pool holds int8 codes plus
-    per-(block, kv-head) fp32 scales, quantized on scatter and dequantized
-    inside the read paths, so the claim under test is *accuracy*: greedy
-    decode must agree with the fp32 pool on >= 99% of tokens (asserted),
-    while the pool shrinks ~4x (scales included, reported)."""
+    per-(block, kv-head) fp32 scales; the int4 pool packs two codes per byte
+    under a block-scale x sub-block-code grid. Both quantize on scatter and
+    dequantize inside the read paths, so the claim under test is *accuracy*:
+    greedy decode must agree with the fp32 pool on >= 99% of tokens
+    (asserted), while the pool shrinks ~4x (int8) and ~7x+ (int4, all scale
+    planes included, reported)."""
     sys_len, tail_lo, tail_hi = args.shared_prefix, 1, 8
     trace = make_trace(rng, args.requests, args.paged_rate, tail_lo, tail_hi)
     pattern = np.arange(sys_len + tail_hi + PERIOD) % PERIOD + TOK0
@@ -263,30 +275,36 @@ def bench_kv_dtype(base, params, calib_stats, args, rng, report):
     cfg = base.with_quant(softmax_impl="exaq", bits=2)
     qstate = build_model(cfg).qstate_from_stats(calib_stats)
     engines, outs = {}, {}
-    for label, dt in (("fp32", jnp.float32), ("int8", jnp.int8)):
+    for label, dt in (("fp32", jnp.float32), ("int8", jnp.int8), ("int4", "int4")):
         engines[label], outs[label] = run_trace(
             cfg, params, qstate, trace, prompts, slots=args.slots, max_seq=max_seq,
             gen=args.gen, chunk=args.chunk, paged=True, block_size=args.block_size,
             prefill_chunk=args.prefill_chunk, cache_dtype=dt)
     a = np.concatenate([np.asarray(outs["fp32"][i]) for i in range(len(trace))])
-    b = np.concatenate([np.asarray(outs["int8"][i]) for i in range(len(trace))])
-    agree = float((a == b).mean())
     fp32_bytes = engines["fp32"].kv_pool_bytes
-    int8_bytes = engines["int8"].kv_pool_bytes
-    print(f"int8 KV pool: greedy agreement vs fp32 pool {100*agree:.1f}% "
-          f"({int((a == b).sum())}/{a.size} tokens); pool "
-          f"{fp32_bytes/2**20:.2f} MiB fp32 -> {int8_bytes/2**20:.2f} MiB int8 "
-          f"({fp32_bytes/int8_bytes:.2f}x smaller, scales included)")
-    assert agree >= 0.99, (
-        f"int8 KV pool greedy agreement {agree:.3f} < 0.99 vs the fp32 pool"
+    report["kv_dtype"] = {"tokens_compared": int(a.size),
+                         "pool_bytes_fp32": int(fp32_bytes)}
+    for label in ("int8", "int4"):
+        b = np.concatenate([np.asarray(outs[label][i]) for i in range(len(trace))])
+        agree = float((a == b).mean())
+        q_bytes = engines[label].kv_pool_bytes
+        print(f"{label} KV pool: greedy agreement vs fp32 pool {100*agree:.1f}% "
+              f"({int((a == b).sum())}/{a.size} tokens); pool "
+              f"{fp32_bytes/2**20:.2f} MiB fp32 -> {q_bytes/2**20:.2f} MiB {label} "
+              f"({fp32_bytes/q_bytes:.2f}x smaller, scales included)")
+        assert agree >= 0.99, (
+            f"{label} KV pool greedy agreement {agree:.3f} < 0.99 vs the fp32 pool"
+        )
+        report["kv_dtype"][f"agreement_{label}_vs_fp32"] = agree
+        report["kv_dtype"][f"pool_bytes_{label}"] = int(q_bytes)
+        report["kv_dtype"][f"pool_shrink_{label}_x"] = fp32_bytes / q_bytes
+    int4_vs_int8 = (report["kv_dtype"]["pool_bytes_int8"]
+                    / report["kv_dtype"]["pool_bytes_int4"])
+    report["kv_dtype"]["pool_shrink_x"] = report["kv_dtype"]["pool_shrink_int8_x"]
+    report["kv_dtype"]["int4_vs_int8_pool_x"] = int4_vs_int8
+    assert int4_vs_int8 >= 1.8, (
+        f"int4 pool must be >= 1.8x smaller than int8 (got {int4_vs_int8:.2f}x)"
     )
-    report["kv_dtype"] = {
-        "agreement_int8_vs_fp32": agree,
-        "tokens_compared": int(a.size),
-        "pool_bytes_fp32": int(fp32_bytes),
-        "pool_bytes_int8": int(int8_bytes),
-        "pool_shrink_x": fp32_bytes / int8_bytes,
-    }
 
 
 def bench_dp(base, params, calib_stats, args, rng, report):
@@ -377,7 +395,8 @@ def bench_paged_decode_micro(base, params, args, report):
              "occupancy": float(lens.mean() / max_seq)}
     for label, fused, dt in (("fused", True, jnp.bfloat16),
                              ("gather", False, jnp.bfloat16),
-                             ("fused_int8", True, jnp.int8)):
+                             ("fused_int8", True, jnp.int8),
+                             ("fused_int4", True, "int4")):
         cfg = base.with_quant(softmax_impl="exaq", bits=2, use_fused_kernel=fused)
         model = build_model(cfg)
         pool = model.init_block_pool(1 + S * MB, bs, dt)
@@ -396,24 +415,37 @@ def bench_paged_decode_micro(base, params, args, report):
               head_dim=base.resolved_head_dim, kv_lens=lens)
     m = paged_decode_bytes_model(kv_dtype="bf16", **kw)
     m_int8 = paged_decode_bytes_model(kv_dtype="int8", **kw)
+    m_int4 = paged_decode_bytes_model(kv_dtype="int4", **kw)
     micro["modeled_per_layer"] = m
     micro["modeled_per_layer_int8"] = m_int8
+    micro["modeled_per_layer_int4"] = m_int4
     micro["modeled_step_gather_bytes"] = m["gather_then_read_bytes"] * base.num_layers
     micro["modeled_step_fused_bytes"] = m["fused_pool_read_bytes"] * base.num_layers
     micro["modeled_step_fused_int8_bytes"] = m_int8["fused_pool_read_bytes"] * base.num_layers
+    micro["modeled_step_fused_int4_bytes"] = m_int4["fused_pool_read_bytes"] * base.num_layers
     micro["bytes_reduction_x"] = m["bytes_reduction_x"]
     micro["int8_vs_bf16_bytes_reduction_x"] = (
         m["fused_pool_read_bytes"] / m_int8["fused_pool_read_bytes"]
+    )
+    micro["int4_vs_int8_bytes_reduction_x"] = (
+        m_int8["fused_pool_read_bytes"] / m_int4["fused_pool_read_bytes"]
+    )
+    micro["int4_vs_bf16_bytes_reduction_x"] = (
+        m["fused_pool_read_bytes"] / m_int4["fused_pool_read_bytes"]
     )
     print(f"paged-decode micro ({S} slots, {MB}x{bs}-token blocks, "
           f"{100*micro['occupancy']:.0f}% occupancy): "
           f"modeled KV bytes/step {micro['modeled_step_gather_bytes']} gather -> "
           f"{micro['modeled_step_fused_bytes']} fused ({m['bytes_reduction_x']:.1f}x less) -> "
           f"{micro['modeled_step_fused_int8_bytes']} fused-int8 "
-          f"({micro['int8_vs_bf16_bytes_reduction_x']:.2f}x less than bf16, scales counted); "
+          f"({micro['int8_vs_bf16_bytes_reduction_x']:.2f}x less than bf16, scales counted) -> "
+          f"{micro['modeled_step_fused_int4_bytes']} fused-int4 "
+          f"({micro['int4_vs_int8_bytes_reduction_x']:.2f}x less than int8, "
+          f"{micro['int4_vs_bf16_bytes_reduction_x']:.2f}x less than bf16); "
           f"measured step {micro['gather_step_ms']:.1f} ms gather vs "
           f"{micro['fused_step_ms']:.1f} ms fused / {micro['fused_int8_step_ms']:.1f} ms "
-          f"fused-int8 (CPU: fused runs interpret-mode Pallas — latency is directional)")
+          f"fused-int8 / {micro['fused_int4_step_ms']:.1f} ms fused-int4 "
+          f"(CPU: fused runs interpret-mode Pallas — latency is directional)")
     assert m["bytes_reduction_x"] >= 2.0, (
         f"fused paged decode must cut modeled KV bytes >= 2x at 50% occupancy, "
         f"got {m['bytes_reduction_x']:.2f}x"
@@ -421,6 +453,14 @@ def bench_paged_decode_micro(base, params, args, report):
     assert micro["int8_vs_bf16_bytes_reduction_x"] >= 1.8, (
         f"int8 pool must cut modeled fused KV bytes >= 1.8x vs bf16 at 50% occupancy, "
         f"got {micro['int8_vs_bf16_bytes_reduction_x']:.2f}x"
+    )
+    assert micro["int4_vs_int8_bytes_reduction_x"] >= 1.8, (
+        f"packed int4 must cut modeled fused KV bytes >= 1.8x vs int8, "
+        f"got {micro['int4_vs_int8_bytes_reduction_x']:.2f}x"
+    )
+    assert micro["int4_vs_bf16_bytes_reduction_x"] >= 3.5, (
+        f"packed int4 must cut modeled fused KV bytes >= 3.5x vs bf16, "
+        f"got {micro['int4_vs_bf16_bytes_reduction_x']:.2f}x"
     )
     report["paged_decode_micro"] = micro
     return micro
@@ -457,7 +497,8 @@ def bench_paged_prefill_micro(base, params, args, micro):
            "occupancy": P / (MB * bs)}
     for label, fused, dt in (("fused", True, jnp.bfloat16),
                              ("gather", False, jnp.bfloat16),
-                             ("fused_int8", True, jnp.int8)):
+                             ("fused_int8", True, jnp.int8),
+                             ("fused_int4", True, "int4")):
         cfg = base.with_quant(softmax_impl="exaq", bits=2, use_fused_kernel=fused)
         model = build_model(cfg)
         pool = model.init_block_pool(1 + MB, bs, dt)
@@ -477,13 +518,21 @@ def bench_paged_prefill_micro(base, params, args, micro):
               block_size=bs, head_dim=base.resolved_head_dim)
     m = paged_prefill_bytes_model(kv_dtype="bf16", **kw)
     m_int8 = paged_prefill_bytes_model(kv_dtype="int8", **kw)
+    m_int4 = paged_prefill_bytes_model(kv_dtype="int4", **kw)
     pre["modeled_per_layer"] = m
     pre["modeled_per_layer_int8"] = m_int8
+    pre["modeled_per_layer_int4"] = m_int4
     pre["modeled_prefill_gather_bytes"] = m["gather_then_attend_bytes"] * base.num_layers
     pre["modeled_prefill_fused_bytes"] = m["fused_pool_read_bytes"] * base.num_layers
     pre["bytes_reduction_x"] = m["bytes_reduction_x"]
     pre["int8_vs_bf16_bytes_reduction_x"] = (
         m["fused_pool_read_bytes"] / m_int8["fused_pool_read_bytes"]
+    )
+    pre["int4_vs_int8_bytes_reduction_x"] = (
+        m_int8["fused_pool_read_bytes"] / m_int4["fused_pool_read_bytes"]
+    )
+    pre["int4_vs_bf16_bytes_reduction_x"] = (
+        m["fused_pool_read_bytes"] / m_int4["fused_pool_read_bytes"]
     )
     print(f"paged-prefill micro ({P}-token prompt in {m['chunks']} chunks of {C}, "
           f"{MB}x{bs}-token window, {100*pre['occupancy']:.0f}% occupancy): "
@@ -491,7 +540,8 @@ def bench_paged_prefill_micro(base, params, args, micro):
           f"{pre['modeled_prefill_fused_bytes']} fused ({m['bytes_reduction_x']:.1f}x less); "
           f"measured chunk {pre['gather_chunk_ms']:.1f} ms gather vs "
           f"{pre['fused_chunk_ms']:.1f} ms fused / {pre['fused_int8_chunk_ms']:.1f} ms "
-          f"fused-int8 (CPU: fused runs interpret-mode Pallas — latency is directional)")
+          f"fused-int8 / {pre['fused_int4_chunk_ms']:.1f} ms fused-int4 "
+          f"(CPU: fused runs interpret-mode Pallas — latency is directional)")
     assert m["bytes_reduction_x"] >= 2.0, (
         f"fused paged prefill must cut modeled KV bytes >= 2x at 50% occupancy, "
         f"got {m['bytes_reduction_x']:.2f}x"
@@ -499,6 +549,14 @@ def bench_paged_prefill_micro(base, params, args, micro):
     assert pre["int8_vs_bf16_bytes_reduction_x"] >= 1.8, (
         f"int8 pool must cut modeled fused prefill KV bytes >= 1.8x vs bf16, "
         f"got {pre['int8_vs_bf16_bytes_reduction_x']:.2f}x"
+    )
+    assert pre["int4_vs_int8_bytes_reduction_x"] >= 1.8, (
+        f"packed int4 must cut modeled fused prefill KV bytes >= 1.8x vs int8, "
+        f"got {pre['int4_vs_int8_bytes_reduction_x']:.2f}x"
+    )
+    assert pre["int4_vs_bf16_bytes_reduction_x"] >= 3.5, (
+        f"packed int4 must cut modeled fused prefill KV bytes >= 3.5x vs bf16, "
+        f"got {pre['int4_vs_bf16_bytes_reduction_x']:.2f}x"
     )
     micro["prefill"] = pre
     return pre
@@ -545,7 +603,7 @@ def main():
     print("--- paged-prefill microbenchmark: fused kernel vs window gather ---")
     bench_paged_prefill_micro(base, params, args, micro)
 
-    print("--- int8 KV pool: greedy parity + memory vs fp32 (DESIGN.md §6) ---")
+    print("--- int8/int4 KV pools: greedy parity + memory vs fp32 (DESIGN.md §6/§10) ---")
     bench_kv_dtype(base, params, calib_stats, args, rng, report)
 
     print("--- data-parallel fleet: 2 replicas vs single engine (DESIGN.md §9) ---")
@@ -563,6 +621,7 @@ def main():
           ">=50% prefix-cache hits with slot-engine parity on the paged engine; "
           ">=2x modeled KV bytes cut by the fused paged-decode AND paged-prefill kernels; "
           ">=1.8x further cut and >=99% greedy agreement on the int8 pool; "
+          ">=1.8x beyond int8 (>=3.5x vs bf16) and >=99% agreement on the packed-int4 pool; "
           "bit-exact dp=2 fleet parity with both replicas served")
 
 

@@ -42,11 +42,23 @@ so the modeled bytes/step drop ~2x vs bf16 (~4x vs fp32); the EXAQ
 histogram math downstream is unchanged, and the kernel stays bit-comparable
 to the *dequantizing* gather oracle (``gather_block_kv`` with scales).
 
-Layouts: q ``(S, H, 1, Dh)``; pool_k/pool_v ``(N, KV, bs, Dh)``;
-block_tables ``(S, MB)`` int32; kv_lens ``(S,)`` int32; optional
-k_scale/v_scale ``(N, KV)`` fp32. Compiled-mode tiling wants ``bs`` a
-multiple of 8 and ``Dh`` lane-padded (both hold for production shapes;
-tests run interpret mode where any shape goes).
+Packed int4 pools (DESIGN.md §10) halve the payload again: the pool's last
+dim is ``Dh/2`` uint8 bytes (two head-dim-adjacent nibbles per byte), and
+the per-(block, kv-head, sub-block) uint8 scale codes join the block scales
+on the scalar-prefetch channel. The DMA lands the *packed* block in VMEM;
+nibbles are split, re-biased, and scaled by
+``block_scale * sub_code / 15`` per sub-block row group right there —
+no dense dequantized (or even unpacked) copy ever exists in HBM. q/out/acc
+stay at the unpacked width ``2 * lane_pad(Dh/2)``; q's zero lane-padding
+nulls the K-side garbage that padded nibbles decode to, and the V-side
+garbage lands in output lanes >= Dh that the final slice drops.
+
+Layouts: q ``(S, H, 1, Dh)``; pool_k/pool_v ``(N, KV, bs, Dh)`` (int4:
+``(N, KV, bs, Dh/2)`` uint8); block_tables ``(S, MB)`` int32; kv_lens
+``(S,)`` int32; optional k_scale/v_scale ``(N, KV)`` fp32 and int4-only
+k_sub/v_sub ``(N, KV, n_sub)`` uint8. Compiled-mode tiling wants ``bs`` a
+multiple of 8 and the pool's last dim lane-padded (both hold for
+production shapes; tests run interpret mode where any shape goes).
 
 Tensor-parallel contract (DESIGN.md §9): under a mesh whose 'model' axis
 divides KV, ``kernels.ops.paged_decode_attention`` wraps this kernel in a
@@ -67,6 +79,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.kv_codec import INT4_BIAS, INV_SUB_LEVELS, kv4_num_sub
 
 _NEG_BIG = -1e30
 _LANES = 128
@@ -115,16 +129,25 @@ def _paged_decode_kernel(
     lut: tuple[float, ...],
     scale: float,
     kv_quant: bool,
+    kv_int4: bool = False,
+    n_sub: int = 0,
+    sub_bs: int = 0,
 ):
     """Grid (S, KV, 2*MB): chunks 0..MB-1 are the max pass, MB..2*MB-1 the
     quantize+accumulate pass. Scratch (m, l, acc) carries across the chunk
     axis; the BlockSpec index maps (not this body) steer the pool DMA.
     ``kv_quant`` pools carry two extra scalar-prefetch refs — the
-    per-(block, kv-head) dequant scales (DESIGN.md §6)."""
-    if kv_quant:
+    per-(block, kv-head) dequant scales (DESIGN.md §6); ``kv_int4`` pools
+    carry two more — the (N, KV, n_sub) sub-block scale codes — and their
+    K/V refs hold *packed* nibbles at half width (DESIGN.md §10)."""
+    if kv_int4:
+        (ksc_ref, vsc_ref, ksub_ref, vsub_ref,
+         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+    elif kv_quant:
+        ksub_ref = vsub_ref = None
         ksc_ref, vsc_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
     else:
-        ksc_ref = vsc_ref = None
+        ksc_ref = vsc_ref = ksub_ref = vsub_ref = None
         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
     slot = pl.program_id(0)
     head = pl.program_id(1)
@@ -145,11 +168,35 @@ def _paged_decode_kernel(
     col = t * bs + jax.lax.broadcasted_iota(jnp.int32, (block_q, bs), 1)
     valid = col < kv_len
 
+    def _load_kv(ref, sc_ref, sub_ref):
+        """One pool block from its VMEM ref to fp32 rows, dequantized.
+
+        int4: the ref holds packed nibbles (bs, Pp); split/re-bias them to
+        (bs, 2*Pp) codes and scale each sub_bs-row group by its effective
+        scale ``block_scale * sub_code / 15`` — the same multiply order as
+        ``kv_codec.kv4_effective_scale``, so kernel and gather oracle agree
+        to fp32 roundoff. The per-row scale column is built by a static loop
+        over the n_sub scalar codes (scalar broadcasts, no gather)."""
+        x = ref[0, 0]
+        if kv_int4:
+            lo = (x & 0xF).astype(jnp.int32) - INT4_BIAS
+            hi = (x >> 4).astype(jnp.int32) - INT4_BIAS
+            codes = jnp.stack([lo, hi], axis=-1).reshape(bs, 2 * x.shape[-1])
+            parts = []
+            for sg in range(n_sub):
+                s_eff = sc_ref[blk, head] * sub_ref[blk, head, sg].astype(jnp.float32) \
+                    * INV_SUB_LEVELS
+                parts.append(s_eff * jnp.ones((sub_bs, 1), jnp.float32))
+            row_scale = jnp.concatenate(parts, axis=0) if n_sub > 1 else parts[0]
+            return codes.astype(jnp.float32) * row_scale
+        x = x.astype(jnp.float32)
+        if kv_quant:
+            x = x * sc_ref[blk, head]  # dequant in VMEM: HBM moved 1 byte/elt
+        return x
+
     def _scores():
         q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0].astype(jnp.float32)
-        if kv_quant:
-            k = k * ksc_ref[blk, head]  # dequant in VMEM: HBM moved 1 byte/elt
+        k = _load_kv(k_ref, ksc_ref, ksub_ref)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
@@ -166,9 +213,7 @@ def _paged_decode_kernel(
         m = m_ref[:, :1]  # global row max from pass 1 — shared quantization grid
         e, dden = exaq_accumulate_stage(s, m, valid, levels=levels, clip=clip, lut=lut)
         l_ref[...] = l_ref[...] + dden
-        v = v_ref[0, 0].astype(jnp.float32)
-        if kv_quant:
-            v = v * vsc_ref[blk, head]
+        v = _load_kv(v_ref, vsc_ref, vsub_ref)
         acc_ref[...] += jax.lax.dot_general(
             e, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -194,6 +239,8 @@ def exaq_paged_decode_attention(
     *,
     k_scale: jnp.ndarray | None = None,
     v_scale: jnp.ndarray | None = None,
+    k_sub: jnp.ndarray | None = None,
+    v_sub: jnp.ndarray | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Fused paged-decode EXAQ attention over a block pool.
@@ -201,7 +248,10 @@ def exaq_paged_decode_attention(
     q: (S, H, 1, D); pool_k/pool_v: (N, KV, bs, D); block_tables: (S, MB)
     int32 block ids (null-block padded); kv_lens: (S,) live tokens per slot.
     An int8 pool additionally takes k_scale/v_scale (N, KV) fp32 dequant
-    scales (DESIGN.md §6), scalar-prefetched beside the block tables.
+    scales (DESIGN.md §6), scalar-prefetched beside the block tables. A
+    packed int4 pool (uint8 payload at last dim D/2, DESIGN.md §10) also
+    takes k_sub/v_sub (N, KV, n_sub) uint8 sub-block scale codes; nibbles
+    unpack in VMEM after each half-width block DMA.
     Returns (S, H, 1, D) fp32. Global-grid (exact Algo. 2) semantics.
     """
     S, H, one, D = q.shape
@@ -210,20 +260,53 @@ def exaq_paged_decode_attention(
     MB = block_tables.shape[1]
     group = H // KV
     kv_quant = pool_k.dtype == jnp.int8
-    if (k_scale is not None) != kv_quant or (v_scale is not None) != kv_quant:
-        raise ValueError("int8 pools require both k_scale and v_scale; fp pools forbid them")
+    kv_int4 = pool_k.dtype == jnp.uint8
+    want_scales = kv_quant or kv_int4
+    if (k_scale is not None) != want_scales or (v_scale is not None) != want_scales:
+        raise ValueError(
+            "quantized (int8/int4) pools require both k_scale and v_scale; fp pools forbid them"
+        )
+    if (k_sub is not None) != kv_int4 or (v_sub is not None) != kv_int4:
+        raise ValueError(
+            "packed int4 pools require both k_sub and v_sub sub-scale planes; "
+            "other pools forbid them"
+        )
     q = q.reshape(S, KV, group, D)
     block_q = _round_up(max(group, 8), 8)
     if block_q != group:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, block_q - group), (0, 0)))
-    d_pad = _round_up(max(D, _LANES), _LANES)
-    if d_pad != D:
-        # production head dims are lane-aligned; the pad only fires on the
-        # small shapes tests use (interpret mode), never on the serving path
-        pad = ((0, 0), (0, 0), (0, 0), (0, d_pad - D))
-        q = jnp.pad(q, pad)
-        pool_k = jnp.pad(pool_k, pad)
-        pool_v = jnp.pad(pool_v, pad)
+    if kv_int4:
+        if D % 2 or pool_k.shape[3] != D // 2:
+            raise ValueError(
+                f"packed int4 pool last dim must be head_dim/2 "
+                f"(got pool {pool_k.shape[3]}, head_dim {D})"
+            )
+        n_sub = k_sub.shape[-1]
+        sub_bs = bs // n_sub
+        # the packed payload lane-pads at its own (half) width; q/out/acc
+        # live at the unpacked width 2*Pp. q's zero padding nulls the K
+        # garbage that padded zero-nibbles decode to (code -8 * scale);
+        # the V-side garbage lands in output lanes >= D, sliced off below
+        p_pad = _round_up(max(D // 2, _LANES), _LANES)
+        kv_width = p_pad
+        d_pad = 2 * p_pad
+        if p_pad != D // 2:
+            ppad = ((0, 0), (0, 0), (0, 0), (0, p_pad - D // 2))
+            pool_k = jnp.pad(pool_k, ppad)
+            pool_v = jnp.pad(pool_v, ppad)
+        if d_pad != D:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, d_pad - D)))
+    else:
+        n_sub = sub_bs = 0
+        d_pad = _round_up(max(D, _LANES), _LANES)
+        kv_width = d_pad
+        if d_pad != D:
+            # production head dims are lane-aligned; the pad only fires on the
+            # small shapes tests use (interpret mode), never on the serving path
+            pad = ((0, 0), (0, 0), (0, 0), (0, d_pad - D))
+            q = jnp.pad(q, pad)
+            pool_k = jnp.pad(pool_k, pad)
+            pool_v = jnp.pad(pool_v, pad)
 
     tables = block_tables.astype(jnp.int32)
     lens = kv_lens.astype(jnp.int32)
@@ -246,16 +329,20 @@ def exaq_paged_decode_attention(
 
     # the dequant scales ride the scalar-prefetch channel: (N, KV) fp32 is
     # SMEM-sized (a few hundred KiB at 7B serving shapes) and the kernel
-    # indexes it by the same prefetched table entry that steered the DMA
-    prefetch = (tables, lens) + ((k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
-                                 if kv_quant else ())
+    # indexes it by the same prefetched table entry that steered the DMA.
+    # int4 adds the (N, KV, n_sub) sub codes, widened to int32 (SMEM scalars)
+    prefetch = (tables, lens)
+    if want_scales:
+        prefetch += (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+    if kv_int4:
+        prefetch += (k_sub.astype(jnp.int32), v_sub.astype(jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(prefetch),
         grid=(S, KV, 2 * MB),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, d_pad), _q_index),
-            pl.BlockSpec((1, 1, bs, d_pad), _k_index),
-            pl.BlockSpec((1, 1, bs, d_pad), _v_index),
+            pl.BlockSpec((1, 1, bs, kv_width), _k_index),
+            pl.BlockSpec((1, 1, bs, kv_width), _v_index),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, d_pad), _q_index),
         scratch_shapes=[
@@ -268,7 +355,7 @@ def exaq_paged_decode_attention(
         _paged_decode_kernel,
         bs=bs, mb=MB, block_q=block_q,
         levels=params.levels, clip=float(params.clip), lut=lut, scale=float(scale),
-        kv_quant=kv_quant,
+        kv_quant=kv_quant, kv_int4=kv_int4, n_sub=n_sub, sub_bs=sub_bs,
     )
     out = pl.pallas_call(
         kern,
@@ -284,7 +371,7 @@ def exaq_paged_decode_attention(
     return out[:, :, :group, :D].reshape(S, H, 1, D)
 
 
-KV_DTYPE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+KV_DTYPE_BYTES = {"fp32": 4, "bf16": 2, "int8": 1, "int4": 0.5}
 
 
 def paged_decode_bytes_model(
@@ -309,12 +396,15 @@ def paged_decode_bytes_model(
     pass), V once. Pure arithmetic so benchmarks and tests can assert the
     >= 2x bandwidth win without hardware counters.
 
-    ``kv_dtype`` ("fp32" | "bf16" | "int8") sizes the pool element instead
-    of the raw ``dtype_bytes`` knob. int8 (DESIGN.md §6) adds the 4-byte
-    per-(block, kv-head) scale to every pool-block read, and — because the
-    gather oracle dequantizes during assembly — prices the gather path's
-    dense intermediate copy at fp32 width, which is what actually crosses
-    HBM there.
+    ``kv_dtype`` ("fp32" | "bf16" | "int8" | "int4") sizes the pool element
+    instead of the raw ``dtype_bytes`` knob. int8 (DESIGN.md §6) adds the
+    4-byte per-(block, kv-head) scale to every pool-block read, and —
+    because the gather oracle dequantizes during assembly — prices the
+    gather path's dense intermediate copy at fp32 width, which is what
+    actually crosses HBM there. int4 (DESIGN.md §10) halves the payload to
+    ``block_size * head_dim / 2`` packed bytes per kv head and adds one
+    uint8 sub-block scale code per ``KV_SUB_BLOCK`` tokens on top of the
+    fp32 block scale; its dense gather copy is fp32-priced too.
 
     ``tp`` models the tensor-parallel pool split (DESIGN.md §9): the kv-head
     dim shards over the mesh's 'model' axis, so each shard reads
@@ -330,11 +420,23 @@ def paged_decode_bytes_model(
     kv_heads //= tp
     if kv_dtype is not None:
         dtype_bytes = KV_DTYPE_BYTES[kv_dtype]
-    scale_bytes = kv_heads * 4 if kv_dtype == "int8" else 0
-    dense_bytes_elt = 4 if kv_dtype == "int8" else dtype_bytes
+    # quantized pools carry scale planes per block read and are dequantized
+    # to fp32 by the gather oracle, so the dense copy is fp32-priced
+    if kv_dtype == "int4":
+        payload_bytes = kv_heads * block_size * head_dim // 2  # packed nibbles
+        scale_bytes = kv_heads * (4 + kv4_num_sub(block_size))
+        dense_bytes_elt = 4
+    elif kv_dtype == "int8":
+        payload_bytes = kv_heads * block_size * head_dim
+        scale_bytes = kv_heads * 4
+        dense_bytes_elt = 4
+    else:
+        payload_bytes = kv_heads * block_size * head_dim * dtype_bytes
+        scale_bytes = 0
+        dense_bytes_elt = dtype_bytes
 
     kv_lens = np.asarray(kv_lens)
-    block_bytes = kv_heads * block_size * head_dim * dtype_bytes + scale_bytes
+    block_bytes = payload_bytes + scale_bytes
     dense_block_bytes = kv_heads * block_size * head_dim * dense_bytes_elt
     rect_blocks = slots * max_blocks
     live_blocks = int(np.sum(-(-kv_lens // block_size)))

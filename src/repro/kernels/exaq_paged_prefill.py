@@ -46,11 +46,23 @@ scalar-prefetch channel beside the table and each K/V block is dequantized
 in VMEM right after its 8-bit DMA lands, before the EXAQ clip/LUT stages —
 identical to the dequantizing gather oracle, so parity holds at int8 too.
 
-Layouts: q ``(1, H, C, Dh)``; pool_k/pool_v ``(N, KV, bs, Dh)``;
-block_table ``(MB,)`` int32; start scalar int32 (tokens already cached);
-optional k_scale/v_scale ``(N, KV)`` fp32. Compiled-mode tiling wants ``bs``
-a multiple of 8 and ``Dh`` lane-padded (production shapes satisfy both;
-tests run interpret mode where any shape goes).
+Packed int4 pools (DESIGN.md §10) mirror the decode kernel: the pool's last
+dim is ``Dh/2`` packed uint8 nibbles, the (N, KV, n_sub) sub-block scale
+codes join the block scales on the scalar-prefetch channel, and each block
+is nibble-split and scaled ``block_scale * sub_code / 15`` per sub-block
+row group in VMEM right after its half-width DMA — no unpacked or
+dequantized copy ever exists in HBM. q/out/acc live at the unpacked width
+``2 * lane_pad(Dh/2)``: q's zero lane-padding nulls the K-side garbage
+padded nibbles decode to, and V-side garbage lands in output lanes >= Dh
+that the final slice drops.
+
+Layouts: q ``(1, H, C, Dh)``; pool_k/pool_v ``(N, KV, bs, Dh)`` (int4:
+``(N, KV, bs, Dh/2)`` uint8); block_table ``(MB,)`` int32; start scalar
+int32 (tokens already cached); optional k_scale/v_scale ``(N, KV)`` fp32
+and int4-only k_sub/v_sub ``(N, KV, n_sub)`` uint8. Compiled-mode tiling
+wants ``bs`` a multiple of 8 and the pool's last dim lane-padded
+(production shapes satisfy both; tests run interpret mode where any shape
+goes).
 
 Tensor-parallel contract (DESIGN.md §9): under a mesh whose 'model' axis
 divides KV, ``kernels.ops.paged_prefill_attention`` wraps this kernel in a
@@ -76,6 +88,7 @@ from jax.experimental.pallas import tpu as pltpu
 # two paged kernels must mask, pad, and quantize identically for the
 # decode-vs-prefill parity contract to hold
 from repro.kernels.exaq_paged_attention import _LANES, _NEG_BIG, _round_up, exaq_accumulate_stage
+from repro.kernels.kv_codec import INT4_BIAS, INV_SUB_LEVELS, kv4_num_sub
 
 
 def _paged_prefill_kernel(
@@ -92,17 +105,26 @@ def _paged_prefill_kernel(
     lut: tuple[float, ...],
     scale: float,
     kv_quant: bool,
+    kv_int4: bool = False,
+    n_sub: int = 0,
+    sub_bs: int = 0,
 ):
     """Grid (KV, 2*MB): table entries 0..MB-1 are the max pass, MB..2*MB-1
     the quantize+accumulate pass. Scratch (m, l, acc) carries across the
     chunk axis; the BlockSpec index maps (not this body) steer the pool DMA.
     ``info_ref`` is (2,): [start, start + C] — row positions and the live
     window length. ``kv_quant`` pools carry two extra scalar-prefetch refs,
-    the per-(block, kv-head) dequant scales (DESIGN.md §6)."""
-    if kv_quant:
+    the per-(block, kv-head) dequant scales (DESIGN.md §6); ``kv_int4``
+    pools carry two more — the (N, KV, n_sub) sub-block scale codes — and
+    their K/V refs hold *packed* nibbles at half width (DESIGN.md §10)."""
+    if kv_int4:
+        (ksc_ref, vsc_ref, ksub_ref, vsub_ref,
+         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+    elif kv_quant:
+        ksub_ref = vsub_ref = None
         ksc_ref, vsc_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
     else:
-        ksc_ref = vsc_ref = None
+        ksc_ref = vsc_ref = ksub_ref = vsub_ref = None
         q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
     head = pl.program_id(0)
     j = pl.program_id(1)
@@ -124,11 +146,31 @@ def _paged_prefill_kernel(
     col = t * bs + jax.lax.broadcasted_iota(jnp.int32, (block_q, bs), 1)
     valid = (rows < group * chunk) & (col <= start + rows % chunk)
 
+    def _load_kv(ref, sc_ref, sub_ref):
+        """One pool block from its VMEM ref to fp32 rows, dequantized —
+        kept arithmetic-identical to the decode kernel's ``_load_kv`` and
+        ``kv_codec.kv4_effective_scale`` (same multiply order) so fused
+        prefill matches the gather oracle to fp32 roundoff."""
+        x = ref[0, 0]
+        if kv_int4:
+            lo = (x & 0xF).astype(jnp.int32) - INT4_BIAS
+            hi = (x >> 4).astype(jnp.int32) - INT4_BIAS
+            codes = jnp.stack([lo, hi], axis=-1).reshape(bs, 2 * x.shape[-1])
+            parts = []
+            for sg in range(n_sub):
+                s_eff = sc_ref[blk, head] * sub_ref[blk, head, sg].astype(jnp.float32) \
+                    * INV_SUB_LEVELS
+                parts.append(s_eff * jnp.ones((sub_bs, 1), jnp.float32))
+            row_scale = jnp.concatenate(parts, axis=0) if n_sub > 1 else parts[0]
+            return codes.astype(jnp.float32) * row_scale
+        x = x.astype(jnp.float32)
+        if kv_quant:
+            x = x * sc_ref[blk, head]  # dequant in VMEM: HBM moved 1 byte/elt
+        return x
+
     def _scores():
         q = q_ref[0].astype(jnp.float32)
-        k = k_ref[0, 0].astype(jnp.float32)
-        if kv_quant:
-            k = k * ksc_ref[blk, head]  # dequant in VMEM: HBM moved 1 byte/elt
+        k = _load_kv(k_ref, ksc_ref, ksub_ref)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale
@@ -145,9 +187,7 @@ def _paged_prefill_kernel(
         m = m_ref[:, :1]  # global row max from pass 1 — shared quantization grid
         e, dden = exaq_accumulate_stage(s, m, valid, levels=levels, clip=clip, lut=lut)
         l_ref[...] = l_ref[...] + dden
-        v = v_ref[0, 0].astype(jnp.float32)
-        if kv_quant:
-            v = v * vsc_ref[blk, head]
+        v = _load_kv(v_ref, vsc_ref, vsub_ref)
         acc_ref[...] += jax.lax.dot_general(
             e, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -173,6 +213,8 @@ def exaq_paged_prefill_attention(
     *,
     k_scale: jnp.ndarray | None = None,
     v_scale: jnp.ndarray | None = None,
+    k_sub: jnp.ndarray | None = None,
+    v_sub: jnp.ndarray | None = None,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Fused chunked-prefill EXAQ attention for one request over a block pool.
@@ -182,7 +224,10 @@ def exaq_paged_prefill_attention(
     already scattered in; block_table: (MB,) int32 block ids (null-block
     padded); start: scalar int32 tokens cached before this chunk. An int8
     pool additionally takes k_scale/v_scale (N, KV) fp32 dequant scales
-    (DESIGN.md §6), scalar-prefetched beside the table. Returns
+    (DESIGN.md §6), scalar-prefetched beside the table. A packed int4 pool
+    (uint8 payload at last dim D/2, DESIGN.md §10) also takes k_sub/v_sub
+    (N, KV, n_sub) uint8 sub-block scale codes; nibbles unpack in VMEM
+    after each half-width block DMA. Returns
     (1, H, C, D) fp32. Global-grid (exact Algo. 2) semantics — bit-identical
     to a one-shot prefill of the same window.
     """
@@ -191,21 +236,53 @@ def exaq_paged_prefill_attention(
     MB = block_table.shape[0]
     group = H // KV
     kv_quant = pool_k.dtype == jnp.int8
-    if (k_scale is not None) != kv_quant or (v_scale is not None) != kv_quant:
-        raise ValueError("int8 pools require both k_scale and v_scale; fp pools forbid them")
+    kv_int4 = pool_k.dtype == jnp.uint8
+    want_scales = kv_quant or kv_int4
+    if (k_scale is not None) != want_scales or (v_scale is not None) != want_scales:
+        raise ValueError(
+            "quantized (int8/int4) pools require both k_scale and v_scale; fp pools forbid them"
+        )
+    if (k_sub is not None) != kv_int4 or (v_sub is not None) != kv_int4:
+        raise ValueError(
+            "packed int4 pools require both k_sub and v_sub sub-scale planes; "
+            "other pools forbid them"
+        )
     q = q[0].reshape(KV, group, C, D).reshape(KV, group * C, D)
     block_q = _round_up(max(group * C, 8), 8)
     if block_q != group * C:
         q = jnp.pad(q, ((0, 0), (0, block_q - group * C), (0, 0)))
-    d_pad = _round_up(max(D, _LANES), _LANES)
-    if d_pad != D:
-        # production head dims are lane-aligned; the pad only fires on the
-        # small shapes tests use (interpret mode), never on the serving path
-        pad = ((0, 0), (0, 0), (0, d_pad - D))
-        q = jnp.pad(q, pad)
-        pad4 = ((0, 0), (0, 0), (0, 0), (0, d_pad - D))
-        pool_k = jnp.pad(pool_k, pad4)
-        pool_v = jnp.pad(pool_v, pad4)
+    if kv_int4:
+        if D % 2 or pool_k.shape[3] != D // 2:
+            raise ValueError(
+                f"packed int4 pool last dim must be head_dim/2 "
+                f"(got pool {pool_k.shape[3]}, head_dim {D})"
+            )
+        n_sub = k_sub.shape[-1]
+        sub_bs = bs // n_sub
+        # packed payload lane-pads at its own (half) width; q/out/acc live at
+        # the unpacked width 2*Pp (zero q padding nulls K-side garbage, the
+        # V-side garbage lands in output lanes >= D sliced off below)
+        p_pad = _round_up(max(D // 2, _LANES), _LANES)
+        kv_width = p_pad
+        d_pad = 2 * p_pad
+        if p_pad != D // 2:
+            ppad = ((0, 0), (0, 0), (0, 0), (0, p_pad - D // 2))
+            pool_k = jnp.pad(pool_k, ppad)
+            pool_v = jnp.pad(pool_v, ppad)
+        if d_pad != D:
+            q = jnp.pad(q, ((0, 0), (0, 0), (0, d_pad - D)))
+    else:
+        n_sub = sub_bs = 0
+        d_pad = _round_up(max(D, _LANES), _LANES)
+        kv_width = d_pad
+        if d_pad != D:
+            # production head dims are lane-aligned; the pad only fires on the
+            # small shapes tests use (interpret mode), never on the serving path
+            pad = ((0, 0), (0, 0), (0, d_pad - D))
+            q = jnp.pad(q, pad)
+            pad4 = ((0, 0), (0, 0), (0, 0), (0, d_pad - D))
+            pool_k = jnp.pad(pool_k, pad4)
+            pool_v = jnp.pad(pool_v, pad4)
 
     table = block_table.astype(jnp.int32)
     start = jnp.asarray(start, jnp.int32)
@@ -227,15 +304,18 @@ def exaq_paged_prefill_attention(
     def _q_index(h, j, tbl, inf, *sc):
         return (h, 0, 0)
 
-    prefetch = (table, info) + ((k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
-                                if kv_quant else ())
+    prefetch = (table, info)
+    if want_scales:
+        prefetch += (k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+    if kv_int4:
+        prefetch += (k_sub.astype(jnp.int32), v_sub.astype(jnp.int32))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(prefetch),
         grid=(KV, 2 * MB),
         in_specs=[
             pl.BlockSpec((1, block_q, d_pad), _q_index),
-            pl.BlockSpec((1, 1, bs, d_pad), _k_index),
-            pl.BlockSpec((1, 1, bs, d_pad), _v_index),
+            pl.BlockSpec((1, 1, bs, kv_width), _k_index),
+            pl.BlockSpec((1, 1, bs, kv_width), _v_index),
         ],
         out_specs=pl.BlockSpec((1, block_q, d_pad), _q_index),
         scratch_shapes=[
@@ -248,7 +328,7 @@ def exaq_paged_prefill_attention(
         _paged_prefill_kernel,
         bs=bs, mb=MB, block_q=block_q, chunk=C, group=group,
         levels=params.levels, clip=float(params.clip), lut=lut, scale=float(scale),
-        kv_quant=kv_quant,
+        kv_quant=kv_quant, kv_int4=kv_int4, n_sub=n_sub, sub_bs=sub_bs,
     )
     out = pl.pallas_call(
         kern,
@@ -290,10 +370,13 @@ def paged_prefill_bytes_model(
     so benchmarks and tests can assert the ≥2x bandwidth win without
     hardware counters.
 
-    ``kv_dtype`` ("fp32" | "bf16" | "int8") sizes the pool element instead
-    of the raw ``dtype_bytes`` knob; int8 (DESIGN.md §6) adds the 4-byte
-    per-(block, kv-head) scale to every pool-block read and prices the
-    gather path's dense dequantized copy at fp32 width.
+    ``kv_dtype`` ("fp32" | "bf16" | "int8" | "int4") sizes the pool element
+    instead of the raw ``dtype_bytes`` knob; int8 (DESIGN.md §6) adds the
+    4-byte per-(block, kv-head) scale to every pool-block read and prices
+    the gather path's dense dequantized copy at fp32 width. int4
+    (DESIGN.md §10) halves the payload to packed nibbles and adds one uint8
+    sub-block scale code per ``KV_SUB_BLOCK`` tokens on top of the fp32
+    block scale; its dense copy is fp32-priced too.
 
     ``tp`` models the tensor-parallel pool split (DESIGN.md §9): each shard
     reads ``kv_heads / tp`` heads of every block, so the figures are
@@ -307,9 +390,19 @@ def paged_prefill_bytes_model(
     kv_heads //= tp
     if kv_dtype is not None:
         dtype_bytes = KV_DTYPE_BYTES[kv_dtype]
-    scale_bytes = kv_heads * 4 if kv_dtype == "int8" else 0
-    dense_bytes_elt = 4 if kv_dtype == "int8" else dtype_bytes
-    block_bytes = kv_heads * block_size * head_dim * dtype_bytes + scale_bytes
+    if kv_dtype == "int4":
+        payload_bytes = kv_heads * block_size * head_dim // 2  # packed nibbles
+        scale_bytes = kv_heads * (4 + kv4_num_sub(block_size))
+        dense_bytes_elt = 4
+    elif kv_dtype == "int8":
+        payload_bytes = kv_heads * block_size * head_dim
+        scale_bytes = kv_heads * 4
+        dense_bytes_elt = 4
+    else:
+        payload_bytes = kv_heads * block_size * head_dim * dtype_bytes
+        scale_bytes = 0
+        dense_bytes_elt = dtype_bytes
+    block_bytes = payload_bytes + scale_bytes
     dense_block_bytes = kv_heads * block_size * head_dim * dense_bytes_elt
 
     gather = fused = live_sum = chunks = 0

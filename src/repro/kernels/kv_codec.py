@@ -1,0 +1,184 @@
+"""KV-pool storage codecs: int8 per-block scales, packed int4 sub-block scales.
+
+The ONE home of the quantized-pool encode/decode arithmetic (DESIGN.md
+§6/§10). ``kernels/ops.py`` re-exports everything here for callers; the
+fused Pallas kernels import from here directly (importing ``ops`` back
+would be circular), so the in-VMEM dequant and the gather oracle share one
+implementation and stay roundoff-comparable by construction.
+
+int8 (DESIGN.md §6): symmetric codes, one fp32 scale per (block, kv-head),
+dequant = ``codes * scale``. Scale 0.0 is the "never written" sentinel; a
+set scale is first-write-immutable so published prefix bytes never change.
+
+Packed int4 (DESIGN.md §10): two head-dim-adjacent values per uint8 byte
+(dim 2j low nibble, dim 2j+1 high nibble, +8 bias on disk, clipped to
+±INT4_QMAX on write). The fp32 block scale is kept, and each
+KV_SUB_BLOCK-token sub-block adds a 4-bit scale code: effective scale of
+sub-block s is ``block_scale * sub_code[s] / 15``. Sub code 0 mirrors the
+block-scale sentinel — unset, decodes to exactly zero — and set codes are
+immutable under the same I2 byte-stability argument.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# --------------------------------------------------------- int8 KV blocks
+
+# Symmetric int8 with per-(block, kv-head) scales: dequant is codes * scale
+# (DESIGN.md §6). A block's scale is fixed by its FIRST write — the margin
+# leaves headroom so later appends into the same block saturate rarely
+# instead of ever requantizing published rows (which would break the
+# prefix-hash byte-stability invariant, I2).
+KV_QMAX = 127.0
+KV_SCALE_MARGIN = 1.5
+
+
+def kv_write_scales(amax, old_scale):
+    """Scale update for an int8 KV scatter (DESIGN.md §6).
+
+    amax: per-(target-block, kv-head) max |value| of the rows being written;
+    old_scale: the blocks' current scales, 0.0 meaning "never written" (fresh
+    pool / host-reset on alloc). A set scale is immutable — appends quantize
+    against it (saturating); an unset one is seeded with
+    ``KV_SCALE_MARGIN * amax / KV_QMAX`` so the first write lands well inside
+    the int8 range and near-stationary later rows still fit.
+    """
+    return jnp.where(old_scale > 0.0, old_scale, KV_SCALE_MARGIN * amax / KV_QMAX)
+
+
+def kv_quantize(x, scale):
+    """fp values -> int8 codes at ``scale`` (dequant = codes * scale).
+
+    scale broadcasts against x; zero scale (only possible when x is all-zero,
+    since scales seed from amax) maps to code 0 rather than dividing by zero.
+    """
+    s = jnp.where(scale > 0.0, scale, 1.0)
+    return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -KV_QMAX, KV_QMAX).astype(jnp.int8)
+
+
+# --------------------------------------------------------- int4 KV blocks
+
+INT4_QMAX = 7.0
+INT4_BIAS = 8
+KV_SUB_BLOCK = 4  # tokens per sub-block scale group
+INT4_SUB_LEVELS = 15.0  # sub codes 1..15; effective scale = block * code / 15
+INV_SUB_LEVELS = 1.0 / INT4_SUB_LEVELS
+
+
+def kv4_sub_block(block_size: int) -> int:
+    """Tokens per sub-block scale group (block_size-capped)."""
+    sub = min(KV_SUB_BLOCK, block_size)
+    if block_size % sub != 0:
+        raise ValueError(f"block_size {block_size} not divisible by sub-block {sub}")
+    return sub
+
+
+def kv4_num_sub(block_size: int) -> int:
+    """Sub-block scale entries per block."""
+    return block_size // kv4_sub_block(block_size)
+
+
+def kv_cache_is_int4(cache_dtype) -> bool:
+    """True iff ``cache_dtype`` names the packed-int4 pool format.
+
+    int4 has no jnp dtype, so it travels as the string sentinel ``"int4"``
+    (pool payload dtype uint8). Every ``jnp.dtype(cache_dtype)`` call site
+    must route through here first — ``jnp.dtype("int4")`` raises.
+    """
+    return isinstance(cache_dtype, str) and cache_dtype == "int4"
+
+
+def kv_cache_is_quantized(cache_dtype) -> bool:
+    """True for pool formats that carry scale planes (int8 or packed int4)."""
+    return kv_cache_is_int4(cache_dtype) or jnp.dtype(cache_dtype) == jnp.int8
+
+
+def kv_pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Signed 4-bit codes in [-8, 7] -> packed uint8, two per byte.
+
+    Packing pairs head-dim-adjacent values (last axis, which must be even):
+    byte j holds dim 2j in the low nibble and dim 2j+1 in the high nibble,
+    each biased by +8. Pairing along the head dim keeps every token row's
+    bytes self-contained, so a single-token decode scatter rewrites whole
+    bytes and never read-modify-writes a neighbour token's data.
+    """
+    u = (codes.astype(jnp.int32) + INT4_BIAS).astype(jnp.uint8)
+    return u[..., 0::2] | (u[..., 1::2] << 4)
+
+
+def kv_unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Packed uint8 -> signed int32 codes in [-8, 7], last axis doubled.
+
+    Exact inverse of ``kv_pack_int4`` for every one of the 16 code points
+    (asserted exhaustively in tests/test_kv_packing.py).
+    """
+    lo = (packed & 0xF).astype(jnp.int32) - INT4_BIAS
+    hi = (packed >> 4).astype(jnp.int32) - INT4_BIAS
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], 2 * packed.shape[-1])
+
+
+def kv4_write_block_scales(amax, old_scale):
+    """Block-scale update for an int4 KV scatter — the §6 rule at the int4
+    range: an unset (0.0) scale seeds to ``KV_SCALE_MARGIN * amax /
+    INT4_QMAX`` and is immutable afterwards. The int8 seed (/127) would be
+    ~18x too small here: sub codes only span 1..15, so the effective scale
+    ``block_scale * code / 15`` can never exceed the block scale, and a
+    block scale sized for ±127 codes would saturate every ±7 code.
+    """
+    return jnp.where(old_scale > 0.0, old_scale, KV_SCALE_MARGIN * amax / INT4_QMAX)
+
+
+def kv4_write_sub_scales(amax_sub, block_scale, old_sub):
+    """Sub-block scale-code update for an int4 KV scatter (DESIGN.md §10).
+
+    amax_sub: per-(target-block, kv-head, sub-block) max |value| of the rows
+    being written; block_scale: the blocks' (already-seeded) fp32 scales;
+    old_sub: current uint8 sub codes, 0 meaning "never written". A set code
+    is immutable; an unset one seeds to the smallest code whose effective
+    scale ``block_scale * code / 15`` keeps the margined amax inside ±7 —
+    ``ceil(15 * MARGIN * amax / (7 * block_scale))`` clipped to [1, 15]. A
+    sub-block whose writes are all-zero (amax 0) stays unset and decodes to
+    exactly zero.
+    """
+    bs = jnp.maximum(block_scale[..., None], 1e-30)
+    c = jnp.ceil(INT4_SUB_LEVELS * KV_SCALE_MARGIN * amax_sub / (INT4_QMAX * bs))
+    c = jnp.clip(c, 1.0, INT4_SUB_LEVELS)
+    seeded = jnp.where(amax_sub > 0.0, c, 0.0).astype(jnp.uint8)
+    return jnp.where(old_sub > 0, old_sub, seeded)
+
+
+def kv4_effective_scale(block_scale, sub_codes):
+    """(…,) block scale + (…, n_sub) sub codes -> (…, n_sub) fp32 scales.
+
+    The ONE place the dequant-scale arithmetic lives: fused kernels and the
+    gather oracle must multiply in this exact order (block * code, then
+    * 1/15) for their fp32 results to stay roundoff-comparable.
+    """
+    return block_scale[..., None] * sub_codes.astype(jnp.float32) * INV_SUB_LEVELS
+
+
+def kv4_quantize(x, s_eff):
+    """fp values -> packed uint8 nibbles at per-token scales ``s_eff``.
+
+    x: (..., T, Dh) values, s_eff: (..., T) effective sub-block scales
+    (broadcast over Dh). Zero scale (all-zero writes) maps to code 0.
+    """
+    s = jnp.where(s_eff > 0.0, s_eff, 1.0)[..., None]
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -INT4_QMAX, INT4_QMAX)
+    return kv_pack_int4(codes.astype(jnp.int32))
+
+
+def kv4_dequantize_block(packed, block_scale, sub_codes):
+    """Packed block rows -> fp32 values (the gather-oracle dequant).
+
+    packed: (..., bs, Dh//2) uint8; block_scale: (...); sub_codes:
+    (..., n_sub) uint8 with n_sub dividing bs. Unset scales (block 0.0 or
+    sub code 0) decode to exactly zero — the dead-tail/null-block property
+    the fused kernels rely on.
+    """
+    codes = kv_unpack_int4(packed)
+    bs = packed.shape[-2]
+    sub = bs // sub_codes.shape[-1]
+    per_tok = jnp.repeat(kv4_effective_scale(block_scale, sub_codes), sub, axis=-1)
+    return codes.astype(jnp.float32) * per_tok[..., None]

@@ -212,44 +212,42 @@ def _repeat_kv(q, k, v):
     return repeat_kv(k, group), repeat_kv(v, group)
 
 
-# --------------------------------------------------------- int8 KV blocks
+# ------------------------------------------------- quantized KV-pool codec
 
-# Symmetric int8 with per-(block, kv-head) scales: dequant is codes * scale
-# (DESIGN.md §6). A block's scale is fixed by its FIRST write — the margin
-# leaves headroom so later appends into the same block saturate rarely
-# instead of ever requantizing published rows (which would break the
-# prefix-hash byte-stability invariant, I2).
-KV_QMAX = 127.0
-KV_SCALE_MARGIN = 1.5
-
-
-def kv_write_scales(amax, old_scale):
-    """Scale update for an int8 KV scatter (DESIGN.md §6).
-
-    amax: per-(target-block, kv-head) max |value| of the rows being written;
-    old_scale: the blocks' current scales, 0.0 meaning "never written" (fresh
-    pool / host-reset on alloc). A set scale is immutable — appends quantize
-    against it (saturating); an unset one is seeded with
-    ``KV_SCALE_MARGIN * amax / KV_QMAX`` so the first write lands well inside
-    the int8 range and near-stationary later rows still fit.
-    """
-    return jnp.where(old_scale > 0.0, old_scale, KV_SCALE_MARGIN * amax / KV_QMAX)
-
-
-def kv_quantize(x, scale):
-    """fp values -> int8 codes at ``scale`` (dequant = codes * scale).
-
-    scale broadcasts against x; zero scale (only possible when x is all-zero,
-    since scales seed from amax) maps to code 0 rather than dividing by zero.
-    """
-    s = jnp.where(scale > 0.0, scale, 1.0)
-    return jnp.clip(jnp.round(x.astype(jnp.float32) / s), -KV_QMAX, KV_QMAX).astype(jnp.int8)
+# The int8 per-block-scale and packed-int4 sub-block-scale codecs live in
+# kernels/kv_codec.py (the fused kernels import from there directly — an
+# import of this module back would be circular) and are re-exported here as
+# the public API the engine, scatter paths, and tests use.
+from repro.kernels.kv_codec import (  # noqa: E402, F401
+    INT4_BIAS,
+    INT4_QMAX,
+    INT4_SUB_LEVELS,
+    INV_SUB_LEVELS,
+    KV_QMAX,
+    KV_SCALE_MARGIN,
+    KV_SUB_BLOCK,
+    kv4_dequantize_block,
+    kv4_effective_scale,
+    kv4_num_sub,
+    kv4_quantize,
+    kv4_sub_block,
+    kv4_write_block_scales,
+    kv4_write_sub_scales,
+    kv_cache_is_int4,
+    kv_cache_is_quantized,
+    kv_pack_int4,
+    kv_quantize,
+    kv_unpack_int4,
+    kv_write_scales,
+)
 
 
 def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.ndarray,
                     kv_lens: jnp.ndarray | None = None,
                     k_scale: jnp.ndarray | None = None,
-                    v_scale: jnp.ndarray | None = None):
+                    v_scale: jnp.ndarray | None = None,
+                    k_sub: jnp.ndarray | None = None,
+                    v_sub: jnp.ndarray | None = None):
     """Assemble per-slot contiguous KV from a paged block pool (DESIGN.md §3).
 
     pool_{k,v}: (N, KV, bs, Dh) global block pool; block_tables: (S, MB) int32
@@ -272,16 +270,30 @@ def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.
     ``k_scale``/``v_scale`` (N, KV) fp32, required for an int8 pool
     (DESIGN.md §6): each gathered block is dequantized ``codes * scale``
     before assembly, so callers always see fp values — this is the
-    *dequantizing oracle* the fused int8 kernel is tested against.
+    *dequantizing oracle* the fused int8 kernel is tested against. A packed
+    int4 pool (uint8 payload, DESIGN.md §10) additionally requires the
+    ``k_sub``/``v_sub`` (N, KV, n_sub) uint8 sub-block scale codes; blocks
+    are nibble-unpacked and dequantized at
+    ``block_scale * sub_code / 15`` per sub-block during assembly — the
+    dequantizing oracle of the fused int4 kernels.
 
     The gather still materializes each slot's window once per layer; the
     fused kernel (``kernels/exaq_paged_attention.py``) streams blocks
     through VMEM instead and is the serving hot path. This stays as the
     interpret-mode / oracle reference.
     """
-    want = pool_k.dtype == jnp.int8
-    if (k_scale is not None) != want or (v_scale is not None) != want:
-        raise ValueError("int8 pools require both k_scale and v_scale; fp pools forbid them")
+    int8_pool = pool_k.dtype == jnp.int8
+    int4_pool = pool_k.dtype == jnp.uint8
+    want_scales = int8_pool or int4_pool
+    if (k_scale is not None) != want_scales or (v_scale is not None) != want_scales:
+        raise ValueError(
+            "quantized (int8/int4) pools require both k_scale and v_scale; fp pools forbid them"
+        )
+    if (k_sub is not None) != int4_pool or (v_sub is not None) != int4_pool:
+        raise ValueError(
+            "packed int4 pools require both k_sub and v_sub sub-scale planes; "
+            "other pools forbid them"
+        )
     if kv_lens is not None:
         MB = block_tables.shape[1]
         bs = pool_k.shape[2]
@@ -290,15 +302,17 @@ def gather_block_kv(pool_k: jnp.ndarray, pool_v: jnp.ndarray, block_tables: jnp.
         live = jnp.arange(MB, dtype=jnp.int32)[None, :] * bs < kv_lens[:, None]
         block_tables = jnp.where(live, block_tables, 0)  # 0 == kv_pool.NULL_BLOCK
 
-    def g(pool, scale):
-        b = pool[block_tables]  # (S, MB, KV, bs, Dh)
-        if scale is not None:
+    def g(pool, scale, sub):
+        b = pool[block_tables]  # (S, MB, KV, bs, Dh) — or (…, bs, Dh//2) packed
+        if sub is not None:
+            b = kv4_dequantize_block(b, scale[block_tables], sub[block_tables])
+        elif scale is not None:
             b = b.astype(jnp.float32) * scale[block_tables][..., None, None]
         b = jnp.swapaxes(b, 1, 2)  # (S, KV, MB, bs, Dh)
         S, KV, MB, bs, Dh = b.shape
         return b.reshape(S, KV, MB * bs, Dh)
 
-    return g(pool_k, k_scale), g(pool_v, v_scale)
+    return g(pool_k, k_scale, k_sub), g(pool_v, v_scale, v_sub)
 
 
 # ------------------------------------------------ tensor-parallel dispatch
@@ -330,8 +344,10 @@ def _tp_paged_attention(mesh, local_fn, head_args, table_args, scales):
     ``head_args`` (q and the two pool planes) shard their head axis — axis 1
     on every one of them — so each shard DMAs only its local heads from a
     local pool partition; ``table_args`` (block tables, lens, start) stay
-    replicated scalar-prefetch inputs; int8 ``scales`` (N, KV) planes follow
-    the pool's head split. Because q heads and kv heads shard by the same
+    replicated scalar-prefetch inputs; quantized-pool ``scales`` follow the
+    pool's head split on *their* axis 1, whatever their rank — int8's
+    (N, KV) block-scale planes and int4's (N, KV, n_sub) sub-code planes
+    both shard kv-heads. Because q heads and kv heads shard by the same
     factor, a shard's query group h // group lands exactly on its local kv
     heads — the kernels' index maps need no global-head offsets, and each
     (slot, head) row is computed whole on exactly one shard, so the sharded
@@ -347,7 +363,10 @@ def _tp_paged_attention(mesh, local_fn, head_args, table_args, scales):
     in_specs = (
         tuple(heads for _ in head_args)
         + tuple(P(*(None,) * jnp.ndim(a)) for a in table_args)
-        + tuple(P(None, "model") for _ in scales)
+        + tuple(
+            P(*("model" if i == 1 else None for i in range(jnp.ndim(a))))
+            for a in scales
+        )
     )
     fn = shard_map(
         local_fn, mesh=mesh,
@@ -357,6 +376,15 @@ def _tp_paged_attention(mesh, local_fn, head_args, table_args, scales):
     )
     out = fn(*head_args, *table_args, *scales)
     return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, P()))
+
+
+def _pool_scale_args(k_scale, v_scale, k_sub, v_sub):
+    """Pool scale arrays as a positional tuple: () fp, 2 int8, 4 int4."""
+    if k_sub is not None:
+        return (k_scale, v_scale, k_sub, v_sub)
+    if k_scale is not None:
+        return (k_scale, v_scale)
+    return ()
 
 
 def paged_decode_attention(
@@ -370,6 +398,8 @@ def paged_decode_attention(
     *,
     k_scale: jnp.ndarray | None = None,
     v_scale: jnp.ndarray | None = None,
+    k_sub: jnp.ndarray | None = None,
+    v_sub: jnp.ndarray | None = None,
     block_kv: int = 512,
     use_kernel: bool = True,
 ) -> jnp.ndarray:
@@ -391,7 +421,9 @@ def paged_decode_attention(
     For an int8 pool (DESIGN.md §6) pass ``k_scale``/``v_scale`` (N, KV):
     the fused kernel scalar-prefetches them and dequantizes blocks in VMEM;
     the gather path dequantizes during assembly — either way dequant never
-    round-trips through HBM at fp width.
+    round-trips through HBM at fp width. For a packed int4 pool (DESIGN.md
+    §10) additionally pass ``k_sub``/``v_sub`` (N, KV, n_sub): the fused
+    kernel unpacks nibbles in VMEM right after each half-width block DMA.
 
     q: (S, H, 1, Dh); pool_{k,v}: (N, KV, bs, Dh); block_tables: (S, MB);
     kv_lens: (S,) live positions per slot -> (S, H, 1, Dh).
@@ -399,24 +431,25 @@ def paged_decode_attention(
     if use_kernel:
         mesh = _tp_mesh(pool_k.shape[1])
         if mesh is not None:
-            has_scales = k_scale is not None
-
             def local(q, pk, pv, bt, kl, *scales):
-                ks, vs = scales if has_scales else (None, None)
+                ks, vs, ksub, vsub = (tuple(scales) + (None,) * 4)[:4]
                 return exaq_paged_decode_attention(
                     q, pk, pv, bt, kl, params, scale,
-                    k_scale=ks, v_scale=vs, interpret=on_cpu()
+                    k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                    interpret=on_cpu()
                 )
 
             return _tp_paged_attention(
                 mesh, local, (q, pool_k, pool_v), (block_tables, kv_lens),
-                (k_scale, v_scale) if has_scales else (),
+                _pool_scale_args(k_scale, v_scale, k_sub, v_sub),
             )
         return exaq_paged_decode_attention(
             q, pool_k, pool_v, block_tables, kv_lens, params, scale,
-            k_scale=k_scale, v_scale=v_scale, interpret=on_cpu()
+            k_scale=k_scale, v_scale=v_scale, k_sub=k_sub, v_sub=v_sub,
+            interpret=on_cpu()
         )
-    k, v = gather_block_kv(pool_k, pool_v, block_tables, kv_lens, k_scale, v_scale)
+    k, v = gather_block_kv(pool_k, pool_v, block_tables, kv_lens,
+                           k_scale, v_scale, k_sub, v_sub)
     return decode_attention(q, k, v, kv_lens, params, scale, block_kv=block_kv, use_kernel=False)
 
 
@@ -431,6 +464,8 @@ def paged_prefill_attention(
     *,
     k_scale: jnp.ndarray | None = None,
     v_scale: jnp.ndarray | None = None,
+    k_sub: jnp.ndarray | None = None,
+    v_sub: jnp.ndarray | None = None,
     use_kernel: bool = True,
 ) -> jnp.ndarray:
     """One chunk of chunked-prefill attention over a block-paged KV cache.
@@ -455,7 +490,8 @@ def paged_prefill_attention(
 
     For an int8 pool (DESIGN.md §6) pass ``k_scale``/``v_scale`` (N, KV):
     the fused kernel scalar-prefetches them and dequantizes blocks in VMEM;
-    the gather path dequantizes during assembly.
+    the gather path dequantizes during assembly. For a packed int4 pool
+    (DESIGN.md §10) additionally pass ``k_sub``/``v_sub`` (N, KV, n_sub).
 
     q: (1, H, C, Dh); pool_{k,v}: (N, KV, bs, Dh); block_table: (MB,);
     start: scalar int32 tokens already cached -> (1, H, C, Dh) fp32.
@@ -463,27 +499,28 @@ def paged_prefill_attention(
     if use_kernel:
         mesh = _tp_mesh(pool_k.shape[1])
         if mesh is not None:
-            has_scales = k_scale is not None
             start_arr = jnp.asarray(start, jnp.int32)
 
             def local(q, pk, pv, bt, st, *scales):
-                ks, vs = scales if has_scales else (None, None)
+                ks, vs, ksub, vsub = (tuple(scales) + (None,) * 4)[:4]
                 return exaq_paged_prefill_attention(
                     q, pk, pv, bt, st, params, scale,
-                    k_scale=ks, v_scale=vs, interpret=on_cpu()
+                    k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                    interpret=on_cpu()
                 )
 
             return _tp_paged_attention(
                 mesh, local, (q, pool_k, pool_v), (block_table, start_arr),
-                (k_scale, v_scale) if has_scales else (),
+                _pool_scale_args(k_scale, v_scale, k_sub, v_sub),
             )
         return exaq_paged_prefill_attention(
             q, pool_k, pool_v, block_table, start, params, scale,
-            k_scale=k_scale, v_scale=v_scale, interpret=on_cpu()
+            k_scale=k_scale, v_scale=v_scale, k_sub=k_sub, v_sub=v_sub,
+            interpret=on_cpu()
         )
     C = q.shape[2]
     kg, vg = gather_block_kv(pool_k, pool_v, block_table[None], start + C,
-                             k_scale, v_scale)  # (1, KV, W, Dh)
+                             k_scale, v_scale, k_sub, v_sub)  # (1, KV, W, Dh)
     kk, vv = _repeat_kv(q, kg, vg)
     s = jnp.einsum("bhqd,bhkd->bhqk", q, kk).astype(jnp.float32) * scale
     rows = start + jnp.arange(C, dtype=jnp.int32)

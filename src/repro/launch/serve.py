@@ -13,7 +13,9 @@ a global KV block pool with shared-prefix reuse and chunked prefill
 paged-prefill kernels vs the gather-then-dispatch references for paged
 attention — DESIGN.md §3/§7; ``--kv-dtype int8`` stores the pool as int8
 codes with per-block scales, dequantized inside the fused kernels —
-DESIGN.md §6); with ``--shared-prefix N``
+DESIGN.md §6 — and ``--kv-dtype int4`` packs two values per byte with
+4-bit per-sub-block scale codes on top, nibble-unpacked in VMEM —
+DESIGN.md §10); with ``--shared-prefix N``
 every request opens with the same N-token system prompt, so the printed
 prefix-cache hit rate shows the reuse win. ``--tp N`` shards each block
 pool's kv-head axis over an N-way 'model' mesh axis and ``--dp M`` runs M
@@ -53,8 +55,10 @@ def validate_serve_args(args, device_count: int | None = None):
             f"--fused folds the EXAQ clip/LUT into the kernel and needs --impl exaq, "
             f"got --impl {args.impl}; drop --fused or switch --impl"
         )
-    if args.kv_dtype == "int8" and not args.paged:
-        raise SystemExit("--kv-dtype int8 needs the block pool's per-block scales; add --paged")
+    if args.kv_dtype in ("int8", "int4") and not args.paged:
+        raise SystemExit(
+            f"--kv-dtype {args.kv_dtype} needs the block pool's per-block scales; add --paged"
+        )
     if args.dp < 1 or args.tp < 1:
         raise SystemExit(f"--dp and --tp must be >= 1, got --dp {args.dp} --tp {args.tp}")
     if (args.dp > 1 or args.tp > 1) and not args.paged:
@@ -99,9 +103,11 @@ def main():
                          "per prefill chunk; needs --impl exaq)")
     ap.add_argument("--no-fused", dest="fused", action="store_false",
                     help="paged serving: force the gather-then-dispatch references")
-    ap.add_argument("--kv-dtype", default="bf16", choices=["fp32", "bf16", "int8"],
+    ap.add_argument("--kv-dtype", default="bf16", choices=["fp32", "bf16", "int8", "int4"],
                     help="KV cache storage dtype; int8 (paged only) stores the pool "
-                         "quantized with per-block scales (DESIGN.md §6)")
+                         "quantized with per-block scales (DESIGN.md §6); int4 (paged "
+                         "only) packs two values per byte with 4-bit sub-block scale "
+                         "codes (DESIGN.md §10)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend the same N-token system prompt to every request")
     ap.add_argument("--dp", type=int, default=1,

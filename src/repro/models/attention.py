@@ -379,7 +379,8 @@ def attention_decode_ragged(params, x, cfg, statics: AttnStatics, clip, cache_k,
 
 
 def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, pool_v,
-                           block_tables, lens, active, k_scale=None, v_scale=None):
+                           block_tables, lens, active, k_scale=None, v_scale=None,
+                           k_sub=None, v_sub=None):
     """Slot-batched one-token decode over a *block-paged* KV cache (DESIGN.md §3).
 
     The paged sibling of ``attention_decode_ragged``: per-slot raggedness still
@@ -395,6 +396,12 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
     (``ops.kv_write_scales``) when this is the block's first write — and the
     read paths dequantize, so fp values never reach HBM. ``k_scale``/
     ``v_scale`` are the per-layer (N, KV) scale planes; None means an fp pool.
+    A packed int4 pool (DESIGN.md §10) additionally carries the
+    ``k_sub``/``v_sub`` (N, KV, n_sub) sub-block scale-code planes: the token
+    seeds its target sub-block's code (immutable once set, like the block
+    scale) and its row lands as packed nibbles at the effective scale
+    ``block_scale * sub_code / 15``. Head-dim-adjacent packing keeps the
+    one-token scatter whole-byte, so no neighbour row is read-modify-written.
 
     Attention dispatch (DESIGN.md §3, fused paged decode): with
     ``use_fused_kernel`` + exaq the fused Pallas kernel reads K/V blocks
@@ -411,20 +418,47 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
     honored by the gather path only.
 
     x: (S, 1, D); pool_{k,v}: (N, KV, bs, Dh); block_tables: (S, MB) int32;
-    lens: (S,) int32; active: (S,) bool; k_scale/v_scale: (N, KV) fp32 or None.
+    lens: (S,) int32; active: (S,) bool; k_scale/v_scale: (N, KV) fp32 or
+    None; k_sub/v_sub: (N, KV, n_sub) uint8 or None.
     Returns (out (S, 1, D), new_kv) where new_kv is (pool_k, pool_v) for fp
-    pools and (pool_k, pool_v, k_scale, v_scale) for int8 pools.
+    pools, (pool_k, pool_v, k_scale, v_scale) for int8 pools, and
+    (pool_k, pool_v, k_scale, v_scale, k_sub, v_sub) for int4 pools.
     """
     B = x.shape[0]
     bs = pool_k.shape[2]
     quantized = k_scale is not None
+    int4 = k_sub is not None
     positions = lens.astype(jnp.int32)[:, None]  # (S, 1) per-slot rope position
     q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
     kn, vn = k[:, 0], v[:, 0]  # (S, KV, Dh)
     blk = jnp.take_along_axis(block_tables, (lens // bs)[:, None], axis=1)[:, 0]
     blk = jnp.where(active, blk, 0)  # gate writes of inactive slots to the null block
     off = lens % bs
-    if quantized:
+    if int4:
+        # §6's immutable-scale scatter at the int4 range (DESIGN.md §10): the
+        # block scale seeds at margin*amax/7 iff unset, the token's sub-block
+        # code seeds iff unset, and the row quantizes at the effective scale
+        # block * code / 15 into packed nibbles. Advanced index [blk, :, sub]
+        # selects each slot's one touched sub-block as an (S, KV) plane.
+        sub_bs = bs // k_sub.shape[-1]
+        sub = off // sub_bs  # (S,) the one sub-block this token lands in
+        amax_k = jnp.max(jnp.abs(kn), axis=-1)  # (S, KV)
+        amax_v = jnp.max(jnp.abs(vn), axis=-1)
+        ks_new = ops.kv4_write_block_scales(amax_k, k_scale[blk])
+        vs_new = ops.kv4_write_block_scales(amax_v, v_scale[blk])
+        kc_new = ops.kv4_write_sub_scales(amax_k[..., None], ks_new,
+                                          k_sub[blk, :, sub][..., None])[..., 0]  # (S, KV)
+        vc_new = ops.kv4_write_sub_scales(amax_v[..., None], vs_new,
+                                          v_sub[blk, :, sub][..., None])[..., 0]
+        se_k = ops.kv4_effective_scale(ks_new, kc_new[..., None])[..., 0]
+        se_v = ops.kv4_effective_scale(vs_new, vc_new[..., None])[..., 0]
+        new_pool_k = pool_k.at[blk, :, off].set(ops.kv4_quantize(kn, se_k))
+        new_pool_v = pool_v.at[blk, :, off].set(ops.kv4_quantize(vn, se_v))
+        k_scale = k_scale.at[blk].set(ks_new)
+        v_scale = v_scale.at[blk].set(vs_new)
+        k_sub = k_sub.at[blk, :, sub].set(kc_new)
+        v_sub = v_sub.at[blk, :, sub].set(vc_new)
+    elif quantized:
         # per-slot per-kv-head amax seeds the target block's scale iff unset;
         # a set scale is immutable (saturating append) so published prefix
         # bytes never change (DESIGN.md §6). Inactive slots land on the null
@@ -450,10 +484,11 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
 
         p = exaq_params(cfg.quant.sigma_default, statics.bits, rule=cfg.quant.clip_rule)
         o = ops.paged_decode_attention(qh, new_pool_k, new_pool_v, block_tables, kv_lens,
-                                       p, dh**-0.5, k_scale=k_scale, v_scale=v_scale)
+                                       p, dh**-0.5, k_scale=k_scale, v_scale=v_scale,
+                                       k_sub=k_sub, v_sub=v_sub)
     else:
         kg, vg = ops.gather_block_kv(new_pool_k, new_pool_v, block_tables, kv_lens,
-                                     k_scale, v_scale)  # (S, KV, W, Dh)
+                                     k_scale, v_scale, k_sub, v_sub)  # (S, KV, W, Dh)
         group = cfg.num_heads // cfg.num_kv_heads
         kk = _repeat_kv(kg, group)
         vv = _repeat_kv(vg, group)
@@ -463,12 +498,15 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
         o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
     o = jnp.swapaxes(o, 1, 2).reshape(B, 1, -1).astype(x.dtype)
     out = jnp.einsum("bse,ed->bsd", o, params["wo"].astype(x.dtype))
-    new_kv = (new_pool_k, new_pool_v) + ((k_scale, v_scale) if quantized else ())
+    new_kv = ((new_pool_k, new_pool_v)
+              + ((k_scale, v_scale) if quantized else ())
+              + ((k_sub, v_sub) if int4 else ()))
     return out, new_kv
 
 
 def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, pool_v,
-                            block_table, start, blk_t, off_t, k_scale=None, v_scale=None):
+                            block_table, start, blk_t, off_t, k_scale=None, v_scale=None,
+                            k_sub=None, v_sub=None):
     """One chunk of chunked prefill against a paged cache (DESIGN.md §3).
 
     Processes ``C`` prompt tokens at global positions ``start + i`` for one
@@ -499,17 +537,43 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
     (the fused kernel in VMEM, the gather during assembly), so
     chunked-prefill attention still runs in fp.
 
+    A packed int4 pool (DESIGN.md §10) extends the same shape to two scale
+    tiers: a scatter-max per *target sub-block* seeds still-unset sub codes
+    against the (just-seeded) block scales, then each row packs to nibbles
+    at its sub-block's effective scale ``block_scale * sub_code / 15``.
+
     x: (1, C, D) chunk embeddings (right-padded); block_table: (MB,) int32;
     start: scalar int32 (tokens already cached); blk_t/off_t: (C,) int32;
-    k_scale/v_scale: (N, KV) fp32 or None.
+    k_scale/v_scale: (N, KV) fp32 or None; k_sub/v_sub: (N, KV, n_sub)
+    uint8 or None.
     Returns (out (1, C, D), new_kv) where new_kv is (pool_k, pool_v) for fp
-    pools and (pool_k, pool_v, k_scale, v_scale) for int8 pools.
+    pools, (pool_k, pool_v, k_scale, v_scale) for int8 pools, and
+    (pool_k, pool_v, k_scale, v_scale, k_sub, v_sub) for int4 pools.
     """
     B, C, _ = x.shape
     quantized = k_scale is not None
+    int4 = k_sub is not None
     positions = (start + jnp.arange(C, dtype=jnp.int32))[None, :]  # (1, C)
     q, k, v = _project_qkv(params, x, cfg, positions, rope=True)
-    if quantized:
+    if int4:
+        bs_pool = pool_k.shape[2]
+        sub_bs = bs_pool // k_sub.shape[-1]
+        sub_t = off_t // sub_bs  # (C,) each row's target sub-block
+        tok_amax_k = jnp.max(jnp.abs(k[0]), axis=-1)  # (C, KV)
+        tok_amax_v = jnp.max(jnp.abs(v[0]), axis=-1)
+        amax_k = jnp.zeros_like(k_scale).at[blk_t].max(tok_amax_k)
+        amax_v = jnp.zeros_like(v_scale).at[blk_t].max(tok_amax_v)
+        k_scale = ops.kv4_write_block_scales(amax_k, k_scale)
+        v_scale = ops.kv4_write_block_scales(amax_v, v_scale)
+        amax_sub_k = jnp.zeros(k_sub.shape, jnp.float32).at[blk_t, :, sub_t].max(tok_amax_k)
+        amax_sub_v = jnp.zeros(v_sub.shape, jnp.float32).at[blk_t, :, sub_t].max(tok_amax_v)
+        k_sub = ops.kv4_write_sub_scales(amax_sub_k, k_scale, k_sub)
+        v_sub = ops.kv4_write_sub_scales(amax_sub_v, v_scale, v_sub)
+        se_k = ops.kv4_effective_scale(k_scale, k_sub)[blk_t, :, sub_t]  # (C, KV)
+        se_v = ops.kv4_effective_scale(v_scale, v_sub)[blk_t, :, sub_t]
+        new_pool_k = pool_k.at[blk_t, :, off_t].set(ops.kv4_quantize(k[0], se_k))
+        new_pool_v = pool_v.at[blk_t, :, off_t].set(ops.kv4_quantize(v[0], se_v))
+    elif quantized:
         # group the chunk's rows by target block: scatter-max their per-head
         # amax onto the (N, KV) scale plane, seed unset scales, then quantize
         # each row at its block's scale. Padded rows target the null block.
@@ -533,12 +597,14 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
 
         p = exaq_params(cfg.quant.sigma_default, statics.bits, rule=cfg.quant.clip_rule)
         o = ops.paged_prefill_attention(qh, new_pool_k, new_pool_v, block_table, start,
-                                        p, dh**-0.5, k_scale=k_scale, v_scale=v_scale)
+                                        p, dh**-0.5, k_scale=k_scale, v_scale=v_scale,
+                                        k_sub=k_sub, v_sub=v_sub)
     else:
         # window live length: everything cached before this chunk plus the
         # chunk itself — entries past ceil((start+C)/bs) clamp to null
         kg, vg = ops.gather_block_kv(new_pool_k, new_pool_v, block_table[None],
-                                     start + C, k_scale, v_scale)  # (1, KV, W, Dh)
+                                     start + C, k_scale, v_scale,
+                                     k_sub, v_sub)  # (1, KV, W, Dh)
         group = cfg.num_heads // cfg.num_kv_heads
         kk = _repeat_kv(kg, group)
         vv = _repeat_kv(vg, group)
@@ -549,7 +615,9 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
         o = jnp.einsum("bhqk,bhkd->bhqd", w.astype(vv.dtype), vv)
     o = jnp.swapaxes(o, 1, 2).reshape(B, C, -1).astype(x.dtype)
     out = jnp.einsum("bse,ed->bsd", o, params["wo"].astype(x.dtype))
-    new_kv = (new_pool_k, new_pool_v) + ((k_scale, v_scale) if quantized else ())
+    new_kv = ((new_pool_k, new_pool_v)
+              + ((k_scale, v_scale) if quantized else ())
+              + ((k_sub, v_sub) if int4 else ()))
     return out, new_kv
 
 

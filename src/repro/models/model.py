@@ -405,25 +405,45 @@ class Model:
         per-block per-kv-head dequant scales, zero-initialized (0 = "scale
         not yet seeded by a first write").
 
+        ``dtype="int4"`` (string sentinel — there is no jnp int4) builds the
+        packed pool (DESIGN.md §10): uint8 payloads of (L, num_blocks, KV,
+        bs, Dh//2) holding two head-dim-adjacent nibbles per byte, the fp32
+        block-scale planes above, plus "k_sub"/"v_sub" uint8 planes of
+        (L, num_blocks, KV, n_sub) 4-bit sub-block scale codes (0 = unset).
+
         ``mesh`` places the pool sharded at construction (DESIGN.md §9):
         payloads per ``sharding.block_pool_spec`` (kv-heads over 'model'
         when divisible, else replicated), scale planes per
-        ``sharding.block_scale_spec`` — so each tensor-parallel shard
-        allocates only its local head partition.
+        ``sharding.block_scale_spec`` / ``sharding.block_sub_scale_spec`` —
+        so each tensor-parallel shard allocates only its local head
+        partition.
         """
+        from repro.kernels import ops
+
         cfg = self.cfg
         assert cfg.family in ("dense", "vlm", "moe"), (
             f"paged KV pool requires an attention KV cache, got family={cfg.family!r}"
         )
         dh = cfg.resolved_head_dim
-        k = jnp.zeros((cfg.num_layers, num_blocks, cfg.num_kv_heads, block_size, dh), dtype)
+        int4 = ops.kv_cache_is_int4(dtype)
+        if int4:
+            if dh % 2 != 0:
+                raise ValueError(f"packed int4 pool needs an even head_dim, got {dh}")
+            k = jnp.zeros((cfg.num_layers, num_blocks, cfg.num_kv_heads, block_size, dh // 2),
+                          jnp.uint8)
+        else:
+            k = jnp.zeros((cfg.num_layers, num_blocks, cfg.num_kv_heads, block_size, dh), dtype)
         pool = {"k": k, "v": jnp.zeros_like(k)}
-        if jnp.dtype(dtype) == jnp.int8:
+        if int4 or jnp.dtype(dtype) == jnp.int8:
             # two distinct buffers: the engine donates the pool pytree into
             # its jitted steps, and aliased leaves can't be donated twice
             shape = (cfg.num_layers, num_blocks, cfg.num_kv_heads)
             pool["k_scale"] = jnp.zeros(shape, jnp.float32)
             pool["v_scale"] = jnp.zeros(shape, jnp.float32)
+        if int4:
+            sub_shape = (cfg.num_layers, num_blocks, cfg.num_kv_heads, ops.kv4_num_sub(block_size))
+            pool["k_sub"] = jnp.zeros(sub_shape, jnp.uint8)
+            pool["v_sub"] = jnp.zeros(sub_shape, jnp.uint8)
         if mesh is not None:
             from jax.sharding import NamedSharding
 
@@ -436,6 +456,10 @@ class Model:
                 ssh = NamedSharding(mesh, shd.block_scale_spec(cfg, mesh))
                 pool["k_scale"] = jax.device_put(pool["k_scale"], ssh)
                 pool["v_scale"] = jax.device_put(pool["v_scale"], ssh)
+            if "k_sub" in pool:
+                sub_sh = NamedSharding(mesh, shd.block_sub_scale_spec(cfg, mesh))
+                pool["k_sub"] = jax.device_put(pool["k_sub"], sub_sh)
+                pool["v_sub"] = jax.device_put(pool["v_sub"], sub_sh)
         return pool
 
     def _ssm_cache(self, n_layers, batch, dtype):
@@ -598,7 +622,9 @@ class Model:
 
         The paged sibling of ``decode_step_ragged``: tokens (S, 1); pool k/v
         (L, N, KV, bs, Dh) (+ "k_scale"/"v_scale" planes when the pool is
-        int8 — DESIGN.md §6); block_tables (S, MB); lens (S,) live length per
+        int8 — DESIGN.md §6 — and additionally "k_sub"/"v_sub" sub-block
+        scale-code planes when it is packed int4, payload dtype uint8 —
+        DESIGN.md §10); block_tables (S, MB); lens (S,) live length per
         slot; active (S,) bool — inactive slots' KV writes are gated to the
         null block so recycled blocks can't be corrupted mid-chunk. With
         ``cfg.quant.use_fused_kernel`` + exaq, every layer's attention runs
@@ -612,7 +638,8 @@ class Model:
         )
         qstate = qstate or default_qstate(cfg)
         statics = _statics(cfg)
-        quantized = pool["k"].dtype == jnp.int8
+        int4 = pool["k"].dtype == jnp.uint8
+        quantized = int4 or pool["k"].dtype == jnp.int8
         h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
 
         def body(h, xs):
@@ -628,7 +655,8 @@ class Model:
                 f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
             return h + f, nkv
 
-        keys = ("k", "v") + (("k_scale", "v_scale") if quantized else ())
+        keys = ("k", "v") + (("k_scale", "v_scale") if quantized else ()) \
+            + (("k_sub", "v_sub") if int4 else ())
         xs = (params["layers"], qstate["attn_clip"]) + tuple(pool[k] for k in keys)
         h, nkv = jax.lax.scan(body, h, xs)
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
@@ -651,7 +679,9 @@ class Model:
         (block-table-indexed pool reads, no dense window gather —
         DESIGN.md §7); otherwise the gather-then-attend reference. int8
         pools carry "k_scale"/"v_scale" planes that the scatter seeds and
-        the read paths dequantize against (DESIGN.md §6).
+        the read paths dequantize against (DESIGN.md §6); packed int4
+        pools add "k_sub"/"v_sub" sub-block scale-code planes
+        (DESIGN.md §10).
         Returns (logits (1, V) at the chunk's last live row, new_pool) —
         only the final chunk's logits seed sampling.
         """
@@ -661,7 +691,8 @@ class Model:
         )
         qstate = qstate or default_qstate(cfg)
         statics = _statics(cfg)
-        quantized = pool["k"].dtype == jnp.int8
+        int4 = pool["k"].dtype == jnp.uint8
+        quantized = int4 or pool["k"].dtype == jnp.int8
         h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
 
         def body(h, xs):
@@ -677,7 +708,8 @@ class Model:
                 f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
             return h + f, nkv
 
-        keys = ("k", "v") + (("k_scale", "v_scale") if quantized else ())
+        keys = ("k", "v") + (("k_scale", "v_scale") if quantized else ()) \
+            + (("k_sub", "v_sub") if int4 else ())
         xs = (params["layers"], qstate["attn_clip"]) + tuple(pool[k] for k in keys)
         h, nkv = jax.lax.scan(body, h, xs)
         h = rmsnorm(h, params["final_norm"], cfg.norm_eps)

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.kernels.kv_codec import kv_cache_is_int4
 from repro.models import build_model, default_qstate
 from repro.runtime import sampling as smp
 from repro.runtime import sharding as shd
@@ -214,7 +215,8 @@ class PagedDeviceStep(_DeviceStep):
                          eos_id=eos_id, cache_dtype=cache_dtype, mesh=mesh)
         self.num_blocks = num_blocks
         self.block_size = block_size
-        self.quantized = jnp.dtype(cache_dtype) == jnp.int8
+        self.int4 = kv_cache_is_int4(cache_dtype)
+        self.quantized = self.int4 or jnp.dtype(cache_dtype) == jnp.int8
         self._jit_prefill_chunk = jax.jit(self._prefill_chunk_fn, donate_argnums=(1,))
         # raw jitted (pool, src, dst) -> pool; the engine exposes this as
         # ``_jit_copy_block`` (tests drive it directly on a loose pool dict)
@@ -225,8 +227,9 @@ class PagedDeviceStep(_DeviceStep):
 
     def init_pool(self) -> dict:
         """Build the block pool, sharded over the mesh: payloads per
-        ``block_pool_spec`` (kv-heads over 'model' when divisible), int8
-        scale planes per ``block_scale_spec``."""
+        ``block_pool_spec`` (kv-heads over 'model' when divisible), scale
+        planes per ``block_scale_spec``, int4 sub-code planes per
+        ``block_sub_scale_spec``."""
         return self.model.init_block_pool(self.num_blocks, self.block_size,
                                           self.cache_dtype, mesh=self.mesh)
 
@@ -246,10 +249,16 @@ class PagedDeviceStep(_DeviceStep):
 
     def _reset_scales_fn(self, pool, ids):
         """Zero the scale planes of freshly allocated blocks: 0 is the
-        "unset" sentinel the next scatter seeds from (DESIGN.md §6)."""
+        "unset" sentinel the next scatter seeds from (DESIGN.md §6). Packed
+        int4 pools also zero the sub-block scale-code planes (DESIGN.md §10)
+        — a stale nonzero sub code would be immutable under first-write-wins
+        and dequantize the new tenant's rows at the old tenant's scale."""
         pool = dict(pool)
         pool["k_scale"] = pool["k_scale"].at[:, ids].set(0.0)
         pool["v_scale"] = pool["v_scale"].at[:, ids].set(0.0)
+        if "k_sub" in pool:
+            pool["k_sub"] = pool["k_sub"].at[:, ids].set(0)
+            pool["v_sub"] = pool["v_sub"].at[:, ids].set(0)
         return pool
 
     def _chunk_fn(self, params, pool, tables, tokens, lens, active, budget,

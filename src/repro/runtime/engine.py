@@ -70,6 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.kv_codec import kv_cache_is_quantized
 from repro.runtime import sampling as smp
 from repro.runtime.device_step import PagedDeviceStep, SlotDeviceStep
 from repro.runtime.engine_core import (
@@ -108,10 +109,11 @@ def _validate_engine_cfg(cfg, cache_dtype, *, paged: bool) -> None:
             f"family={cfg.family!r} frontend={cfg.frontend!r} (frontend models need "
             "per-request embeds at prefill; ssm/hybrid/audio caches aren't slot-ragged)"
         )
-    if jnp.dtype(cache_dtype) == jnp.int8 and not paged:
+    quantized = kv_cache_is_quantized(cache_dtype)
+    if quantized and not paged:
         raise ValueError(
-            "int8 KV is a paged-pool storage format (per-block scales — DESIGN.md §6); "
-            "the slot engine's rectangular cache supports fp dtypes only"
+            "int8/int4 KV are paged-pool storage formats (per-block scales — DESIGN.md "
+            "§6/§10); the slot engine's rectangular cache supports fp dtypes only"
         )
 
 
@@ -258,6 +260,13 @@ class PagedEngine(EngineCore, Engine):
     scales host-reset to the "unset" sentinel before the next device write
     so recycled blocks can't inherit a stale quantization grid.
 
+    ``cache_dtype="int4"`` (string sentinel — int4 has no jnp dtype) packs
+    the pool two values per uint8 byte (DESIGN.md §10): the int8 machinery
+    above plus per-(layer, block, kv-head, sub-block) 4-bit scale codes in
+    "k_sub"/"v_sub" planes, reset alongside the block scales on recycle.
+    Both fused kernels unpack the nibbles in VMEM after the block-table DMA
+    — no dense dequantized copy in HBM.
+
     ``fused`` selects the paged attention path for BOTH halves of the
     serving loop (DESIGN.md §3 fused paged decode, §7 fused paged prefill):
     ``True`` dispatches the fused Pallas kernels — block-table-indexed K/V
@@ -306,7 +315,7 @@ class PagedEngine(EngineCore, Engine):
                 )
             cfg = cfg.with_quant(use_fused_kernel=fused)
         _validate_engine_cfg(cfg, cache_dtype, paged=True)
-        self._quantized = jnp.dtype(cache_dtype) == jnp.int8
+        self._quantized = kv_cache_is_quantized(cache_dtype)
         EngineCore.__init__(
             self, max_slots=max_slots, max_seq=max_seq, block_size=block_size,
             prefill_chunk=prefill_chunk, num_blocks=num_blocks, eos_id=eos_id,

@@ -32,15 +32,17 @@ Three cooperating pieces:
                       count, so the cached prefix stays intact (DESIGN.md §3,
                       copy-on-write rules).
 
-Quantized pools (DESIGN.md §6) change the *payload encoding only*: a block
-may hold int8 codes plus a per-(block, kv-head) scale, but ids, refcounts,
+Quantized pools (DESIGN.md §6/§10) change the *payload encoding only*: a
+block may hold int8 codes plus a per-(block, kv-head) scale, or packed int4
+nibbles with 4-bit per-sub-block scale codes on top, but ids, refcounts,
 hashing and CoW adjudication are encoding-blind, so nothing here changes.
 The two encoding-specific duties live with the engine, which owns device
-memory: CoW copies must carry the scale planes with the payload, and a
-block re-issued by ``alloc`` must have its scales reset before first write
-(``PagedEngine._copy_block_fn`` / ``_flush_fresh_scales``). The published-
-bytes invariant I2 is what forces a block's scale to be immutable once
-seeded — requantizing on append would rewrite hashed prefix bytes.
+memory: CoW copies must carry the scale (and sub-code) planes with the
+payload, and a block re-issued by ``alloc`` must have all its scale planes
+reset before first write (``PagedEngine._copy_block_fn`` /
+``_flush_fresh_scales``). The published-bytes invariant I2 is what forces a
+block's scales to be immutable once seeded — requantizing on append would
+rewrite hashed prefix bytes.
 """
 
 from __future__ import annotations

@@ -70,7 +70,9 @@ def cache_shardings(cfg, mesh, cache_struct):
     return jax.tree_util.tree_map_with_path(to_sh, cache_struct)
 
 
-KV_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+# "int4" has no jnp dtype: the string sentinel travels down to the pool
+# builder as-is (payload dtype uint8 — DESIGN.md §10)
+KV_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8, "int4": "int4"}
 
 
 def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
@@ -90,9 +92,11 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
     ``fused`` picks the paged attention path for decode steps AND prefill
     chunks (True = fused Pallas paged-decode + paged-prefill kernels,
     False = gather references, None = per cfg — DESIGN.md §3/§7);
-    ``kv_dtype`` ("fp32" | "bf16" | "int8") picks the KV storage format —
-    "int8" (paged only) stores the pool as int8 codes with per-block
-    per-kv-head scales, dequantized inside the read paths (DESIGN.md §6).
+    ``kv_dtype`` ("fp32" | "bf16" | "int8" | "int4") picks the KV storage
+    format — "int8" (paged only) stores the pool as int8 codes with
+    per-block per-kv-head scales, dequantized inside the read paths
+    (DESIGN.md §6); "int4" (paged only) packs two values per byte with
+    4-bit per-sub-block scale codes on top (DESIGN.md §10).
     Other families keep the rectangular greedy loop — ssm/hybrid/audio caches
     have no ragged sequence axis for slots to share, and vlm needs per-request
     vision_embeds plumbing the engine's prefill doesn't have yet.
@@ -114,10 +118,10 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
             )
         if kv_dtype not in KV_DTYPES:
             raise ValueError(f"kv_dtype must be one of {sorted(KV_DTYPES)}, got {kv_dtype!r}")
-        if kv_dtype == "int8" and not paged:
+        if kv_dtype in ("int8", "int4") and not paged:
             raise ValueError(
-                "kv_dtype='int8' is a paged-pool storage format (per-block scales — "
-                "DESIGN.md §6); pass paged=True"
+                f"kv_dtype={kv_dtype!r} is a paged-pool storage format (per-block "
+                "scales — DESIGN.md §6/§10); pass paged=True"
             )
         if sampling is None:
             sampling = GREEDY

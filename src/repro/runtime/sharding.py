@@ -243,6 +243,18 @@ def block_scale_spec(cfg, mesh: Mesh) -> P:
     return P(None, None, None)
 
 
+def block_sub_scale_spec(cfg, mesh: Mesh) -> P:
+    """Sub-block scale-code planes of a packed int4 pool,
+    (L, num_blocks, KV, n_sub) (DESIGN.md §10): ``block_scale_spec`` with a
+    trailing unsharded sub-block axis — the kv-head axis follows the
+    payload's 'model' sharding when divisible so each TP shard holds exactly
+    the sub codes of the heads it owns."""
+    tp = model_axis_size(mesh)
+    if cfg.num_kv_heads and _div(cfg.num_kv_heads, tp):
+        return P(None, None, "model", None)
+    return P(None, None, None, None)
+
+
 def ssm_cache_specs(cfg, mesh: Mesh) -> dict[str, P]:
     dp = data_axes(mesh)
     tp = model_axis_size(mesh)

@@ -1,8 +1,9 @@
 """Fused Pallas paged-decode EXAQ attention vs the gather reference
 (DESIGN.md §3, fused paged decode): ragged/GQA parity matrix, dead-tail
 clamping in ``gather_block_kv``, the bytes-moved model, and bit-exact greedy
-parity through ``PagedEngine`` — at fp32/bf16 and on the int8 per-block-scaled
-pool (DESIGN.md §6), whose fused path must match the *dequantizing* gather
+parity through ``PagedEngine`` — at fp32/bf16, on the int8 per-block-scaled
+pool (DESIGN.md §6), and on the packed-int4 sub-block-scaled pool
+(DESIGN.md §10), whose fused paths must match the *dequantizing* gather
 oracle and whose engine-level greedy tokens must track the fp32 pool's.
 All kernels run in interpret mode on CPU."""
 
@@ -176,6 +177,109 @@ def test_gather_requires_scales_iff_int8(quantize_pool):
                                    k_scale=ks, use_kernel=True)  # fused missing v_scale
 
 
+# ------------------------------------------------------- packed int4 KV pool
+
+@pytest.mark.parametrize("group", [1, 4, 8])
+def test_fused_int4_matches_dequantizing_gather_gqa(group, quantize_pool_int4):
+    """GQA 1/4/8 at packed int4: the fused kernel (in-VMEM nibble unpack,
+    scalar-prefetched block scales + sub codes) matches the dequantizing
+    gather oracle to <= 1e-5 — both decode the same bytes through
+    ``kv4_effective_scale``'s exact multiply order (DESIGN.md §10)."""
+    KV, bs, MB, D = 2, 8, 4, 64
+    H, S = KV * group, 3
+    p = exaq_params(1.5, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
+    pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=20 + group)
+    qk, qv, ks, vs, ksub, vsub = quantize_pool_int4(pk, pv)
+    assert qk.dtype == jnp.uint8 and qk.shape[-1] == D // 2
+    lens = jnp.asarray([5, 17, MB * bs], jnp.int32)
+    got = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
+                                     k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                                     use_kernel=True)
+    want = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
+                                      k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                                      use_kernel=False)
+    assert got.shape == (S, H, 1, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fused_int4_narrow_head_dim_padding(quantize_pool_int4):
+    """D // 2 below the 128-lane tile: the packed pool pads to a full lane
+    tile and the q/out planes pad to twice that — garbage K padding lanes
+    must be zero-killed (a bug here poisons every score), V garbage must be
+    sliced away. D=6 makes the padding dominate the payload."""
+    S, H, KV, bs, MB, D = 2, 2, 2, 4, 2, 6
+    p = exaq_params(1.0, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
+    pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=24)
+    qk, qv, ks, vs, ksub, vsub = quantize_pool_int4(pk, pv)
+    lens = jnp.asarray([3, MB * bs], jnp.int32)
+    got = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
+                                     k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                                     use_kernel=True)
+    want = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
+                                      k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                                      use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_fused_int4_dead_tail_and_null_block_zero(quantize_pool_int4):
+    """Ragged lens at int4: the empty slot reads only the null block (scale
+    0, sub codes 0, payload 0) and outputs exactly zero; block-boundary lens
+    match the oracle. Sub-code-0 tails decoding to exact zero is the codec
+    property test_kv_packing pins; this asserts the kernel honors it."""
+    S, H, KV, bs, MB, D = 5, 4, 2, 8, 3, 32
+    p = exaq_params(1.0, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
+    pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=25)
+    qk, qv, ks, vs, ksub, vsub = quantize_pool_int4(pk, pv)
+    lens = jnp.asarray([0, bs, 2 * bs, 2 * bs + 1, MB * bs], jnp.int32)
+    got = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
+                                     k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                                     use_kernel=True)
+    want = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
+                                      k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                                      use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    assert float(jnp.abs(got[0]).max()) == 0.0
+
+
+def test_fused_int4_close_to_fp_oracle(quantize_pool_int4):
+    """int4 error tracks the sub-block grid: outputs stay within small
+    multiples of the effective scale step of the fp32-pool result."""
+    S, H, KV, bs, MB, D = 2, 4, 2, 8, 3, 32
+    p = exaq_params(1.0, 2)
+    q = jnp.asarray(RNG.normal(0, 1, (S, H, 1, D)), jnp.float32)
+    pk, pv, tbl = _pool_setup(S, KV, bs, MB, D, seed=26)
+    qk, qv, ks, vs, ksub, vsub = quantize_pool_int4(pk, pv)
+    lens = jnp.asarray([7, 2 * bs], jnp.int32)
+    got = ops.paged_decode_attention(q, qk, qv, tbl, lens, p, D**-0.5,
+                                     k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                                     use_kernel=True)
+    want = ops.paged_decode_attention(q, pk, pv, tbl, lens, p, D**-0.5, use_kernel=False)
+    # V's dequant step is at most the block scale (code 15/15); K noise
+    # perturbs convex weights — small multiples of the grid bound it
+    tol = 10 * float(jnp.max(vs)) / 2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol)
+
+
+def test_int4_requires_sub_planes_and_fp_forbids_them(quantize_pool_int4):
+    pk, pv, tbl = _pool_setup(1, 2, 8, 2, 16, seed=27)
+    qk, qv, ks, vs, ksub, vsub = quantize_pool_int4(pk, pv)
+    with pytest.raises(ValueError):
+        ops.gather_block_kv(qk, qv, tbl, None, ks, vs)  # packed without subs
+    with pytest.raises(ValueError):
+        ops.gather_block_kv(qk, qv, tbl, None, ks, vs, ksub, None)  # missing v_sub
+    with pytest.raises(ValueError):
+        ops.gather_block_kv(pk, pv, tbl, None, None, None, ksub, vsub)  # fp with subs
+    p = exaq_params(1.0, 2)
+    lens = jnp.asarray([8], jnp.int32)
+    with pytest.raises(ValueError):
+        ops.paged_decode_attention(jnp.zeros((1, 2, 1, 16)), qk, qv, tbl, lens, p, 0.25,
+                                   k_scale=ks, v_scale=vs, k_sub=ksub,
+                                   use_kernel=True)  # fused missing v_sub
+
+
 # --------------------------------------------------------- gather dead tails
 
 def test_gather_block_kv_clamps_dead_tail_to_null_block():
@@ -250,6 +354,27 @@ def test_bytes_model_kv_dtype_element_sizes():
         m8["live_blocks"] * m8["block_bytes"] + 2 * S * MB * KVH * bs * D * 4) * 2
 
 
+def test_bytes_model_int4_block_bytes_and_reductions():
+    """Packed int4 block pricing (DESIGN.md §10): half-byte payload plus the
+    fp32 block scale and one sub code per sub-block, per kv head. Acceptance
+    floors: >= 1.8x fewer fused pool bytes than int8, >= 3.5x than bf16."""
+    from repro.kernels.ops import kv4_num_sub
+
+    S, MB, bs, KVH, D = 8, 32, 16, 8, 128
+    lens = np.full((S,), MB * bs // 2, np.int64)
+    kw = dict(slots=S, kv_heads=KVH, max_blocks=MB, block_size=bs, head_dim=D, kv_lens=lens)
+    m16 = paged_decode_bytes_model(kv_dtype="bf16", **kw)
+    m8 = paged_decode_bytes_model(kv_dtype="int8", **kw)
+    m4 = paged_decode_bytes_model(kv_dtype="int4", **kw)
+    n_sub = kv4_num_sub(bs)
+    assert m4["block_bytes"] == KVH * (bs * D // 2 + 4 + n_sub)
+    assert m8["fused_pool_read_bytes"] / m4["fused_pool_read_bytes"] >= 1.8
+    assert m16["fused_pool_read_bytes"] / m4["fused_pool_read_bytes"] >= 3.5
+    # the gather path's dense intermediate is dequantized fp32 for int4 too
+    assert m4["gather_then_read_bytes"] == (
+        m4["live_blocks"] * m4["block_bytes"] + 2 * S * MB * KVH * bs * D * 4) * 2
+
+
 # ------------------------------------------------------- engine greedy parity
 
 def test_paged_engine_fused_matches_gather_greedy():
@@ -276,10 +401,12 @@ def test_paged_engine_fused_matches_gather_greedy():
     assert outs[True] == outs[False]
 
 
-def test_paged_engine_int8_fused_matches_gather_greedy():
-    """Engine-level greedy parity at int8: the fused kernel and the gather
-    reference dequantize the same codes with the same scales, so paged decode
-    over an int8 pool emits identical tokens either way (DESIGN.md §6)."""
+@pytest.mark.parametrize("cache_dtype", [jnp.int8, "int4"], ids=["int8", "int4"])
+def test_paged_engine_quantized_fused_matches_gather_greedy(cache_dtype):
+    """Engine-level greedy parity on quantized pools: the fused kernel and
+    the gather reference dequantize the same codes with the same scales
+    (int8: per-block, DESIGN.md §6; int4: block x sub-block grid, §10), so
+    paged decode emits identical tokens either way."""
     from repro.configs import get_config
     from repro.models import build_model
     from repro.runtime.engine import PagedEngine
@@ -294,23 +421,22 @@ def test_paged_engine_int8_fused_matches_gather_greedy():
     for fused in (False, True):
         eng = PagedEngine(cfg, params, max_slots=2, max_seq=48, steps_per_sync=4,
                           block_size=8, prefill_chunk=8, seed=0, fused=fused,
-                          cache_dtype=jnp.int8)
+                          cache_dtype=cache_dtype)
         uids = [eng.submit(p, g) for p, (_, g) in zip(prompts, spec)]
         res = eng.run()
         outs[fused] = [res[u].tokens for u in uids]
     assert outs[True] == outs[False]
 
 
-def test_paged_engine_int8_matches_fp32_pool_greedy():
-    """fp32 pool vs int8 pool through the same PagedEngine trace: the
-    per-block-scaled quantization error sits far below greedy argmax margins,
-    so the token-match rate is asserted >= 99%. A *trained* head is required
-    for the claim to be meaningful — random-init argmax margins sit below any
-    quantizer's noise floor (same reason bench_serving overfits its smoke
-    model), so this briefly overfits a periodic sequence (~10 s)."""
+@pytest.fixture(scope="module")
+def trained_periodic_model():
+    """2-layer model briefly overfit on a periodic token stream (~10 s). A
+    *trained* head is required for quantization-agreement claims — random-init
+    argmax margins sit below any quantizer's noise floor (same reason
+    bench_serving overfits its smoke model). Returns (cfg, params, prompts):
+    EXAQ-configured inference cfg and in-distribution prompt prefixes."""
     from repro.configs import get_config
     from repro.optim.adamw import AdamW
-    from repro.runtime.engine import PagedEngine
     from repro.runtime.train import init_train_state, make_train_step
 
     base = get_config("yi-6b").reduced(num_layers=2)
@@ -326,32 +452,58 @@ def test_paged_engine_int8_matches_fp32_pool_greedy():
     for _ in range(40):
         state, _ = step(state, batch)
     params = jax.tree.map(lambda x: x.astype(jnp.float32), state["params"])
-
     cfg = base.with_quant(softmax_impl="exaq", bits=2)
     pattern = np.arange(40) % period + tok0
     prompts = [pattern[:n] for n in (9, 14, 6)]
-    outs, pool_bytes = {}, {}
-    for label, dt in (("fp32", jnp.float32), ("int8", jnp.int8)):
-        eng = PagedEngine(cfg, params, max_slots=2, max_seq=48, steps_per_sync=4,
-                          block_size=8, prefill_chunk=8, seed=0, cache_dtype=dt)
-        uids = [eng.submit(p, 8) for p in prompts]
-        res = eng.run()
-        outs[label] = [res[u].tokens for u in uids]
-        pool_bytes[label] = eng.kv_pool_bytes
-    agree = np.concatenate([np.asarray(a) == np.asarray(b)
-                            for a, b in zip(outs["fp32"], outs["int8"])])
+    return cfg, params, prompts
+
+
+def _greedy_pool_run(cfg, params, prompts, cache_dtype):
+    from repro.runtime.engine import PagedEngine
+
+    eng = PagedEngine(cfg, params, max_slots=2, max_seq=48, steps_per_sync=4,
+                      block_size=8, prefill_chunk=8, seed=0, cache_dtype=cache_dtype)
+    uids = [eng.submit(p, 8) for p in prompts]
+    res = eng.run()
+    return [res[u].tokens for u in uids], eng.kv_pool_bytes
+
+
+def test_paged_engine_int8_matches_fp32_pool_greedy(trained_periodic_model):
+    """fp32 pool vs int8 pool through the same PagedEngine trace: the
+    per-block-scaled quantization error sits far below greedy argmax margins,
+    so the token-match rate is asserted >= 99% (DESIGN.md §6)."""
+    cfg, params, prompts = trained_periodic_model
+    ref, fp32_bytes = _greedy_pool_run(cfg, params, prompts, jnp.float32)
+    got, int8_bytes = _greedy_pool_run(cfg, params, prompts, jnp.int8)
+    agree = np.concatenate([np.asarray(a) == np.asarray(b) for a, b in zip(ref, got)])
     assert agree.mean() >= 0.99
     # int8 payload + fp32 scales: ~4x smaller than the fp32 pool
-    assert pool_bytes["fp32"] > 3.5 * pool_bytes["int8"]
+    assert fp32_bytes > 3.5 * int8_bytes
 
 
-def test_slot_engine_rejects_int8():
+def test_paged_engine_int4_matches_fp32_pool_greedy(trained_periodic_model):
+    """fp32 pool vs packed-int4 pool on the same trace: the block x sub-block
+    scale grid (DESIGN.md §10) keeps 4-bit noise below trained greedy margins
+    (acceptance: >= 99% token agreement), at a pool footprint >= 1.8x smaller
+    than int8 and >= 7x smaller than fp32."""
+    cfg, params, prompts = trained_periodic_model
+    ref, fp32_bytes = _greedy_pool_run(cfg, params, prompts, jnp.float32)
+    got, int4_bytes = _greedy_pool_run(cfg, params, prompts, "int4")
+    agree = np.concatenate([np.asarray(a) == np.asarray(b) for a, b in zip(ref, got)])
+    assert agree.mean() >= 0.99
+    _, int8_bytes = _greedy_pool_run(cfg, params, prompts, jnp.int8)
+    assert int8_bytes > 1.8 * int4_bytes
+    assert fp32_bytes > 7.0 * int4_bytes
+
+
+@pytest.mark.parametrize("cache_dtype", [jnp.int8, "int4"], ids=["int8", "int4"])
+def test_slot_engine_rejects_quantized(cache_dtype):
     from repro.configs import get_config
     from repro.runtime.engine import Engine
 
     cfg = get_config("yi-6b").reduced(num_layers=2)
     with pytest.raises(ValueError):
-        Engine(cfg, params=None, max_slots=1, max_seq=16, cache_dtype=jnp.int8)
+        Engine(cfg, params=None, max_slots=1, max_seq=16, cache_dtype=cache_dtype)
 
 
 def test_paged_engine_fused_requires_exaq():

@@ -199,6 +199,102 @@ def test_prefill_requires_scales_iff_int8(quantize_pool):
                                     k_scale=ks, v_scale=vs, use_kernel=True)  # fp + scales
 
 
+# ------------------------------------------------------- packed int4 KV pool
+
+@pytest.mark.parametrize("group", [1, 4, 8])
+@pytest.mark.parametrize("start,C", BOUNDARY_CASES)
+def test_fused_int4_matches_dequantizing_oracle_matrix(group, start, C, quantize_pool_int4):
+    """Acceptance matrix — GQA 1/4/8 x chunk-boundary cases at packed int4:
+    the fused kernel (in-VMEM nibble unpack, scalar-prefetched block scales +
+    sub codes) matches the dequantizing gather oracle to <= 1e-5
+    (DESIGN.md §10)."""
+    KV, bs, MB, D = 2, 8, 4, 32
+    H = KV * group
+    p = exaq_params(1.5, 2)
+    pk, pv, tbl = _window_setup(KV, bs, MB, D, seed=start * 37 + C + group)
+    qk, qv, ks, vs, ksub, vsub = quantize_pool_int4(pk, pv)
+    q = jnp.asarray(RNG.normal(0, 1, (1, H, C, D)), jnp.float32)
+    got = ops.paged_prefill_attention(q, qk, qv, tbl, jnp.int32(start), p, D**-0.5,
+                                      k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                                      use_kernel=True)
+    want = ops.paged_prefill_attention(q, qk, qv, tbl, jnp.int32(start), p, D**-0.5,
+                                       k_scale=ks, v_scale=vs, k_sub=ksub, v_sub=vsub,
+                                       use_kernel=False)
+    assert got.shape == (1, H, C, D)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_int4_fresh_block_seeding_through_chunk_scatter():
+    """attention_prefill_chunk on a packed-int4 pool seeds still-unset block
+    scales AND sub codes from the chunk's amax grid; set planes are immutable
+    (first-write rule, DESIGN.md §10). Both read paths dequantize against the
+    same seeded grid, so scattered nibbles, scale planes, sub codes and
+    attention outputs agree."""
+    from repro.configs import get_config
+    from repro.kernels.ops import kv4_num_sub
+    from repro.models import attention as attn
+    from repro.models.attention import AttnStatics
+    from repro.models.model import default_qstate
+
+    cfg = get_config("yi-6b").reduced(num_layers=2).with_quant(softmax_impl="exaq", bits=2)
+    key = jax.random.PRNGKey(3)
+    params = attn.init_attention(key, cfg, dtype=jnp.float32)
+    bs, MB, C, start = 8, 4, 8, 4
+    N = 1 + MB
+    KV, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    n_sub = kv4_num_sub(bs)
+    x = jnp.asarray(RNG.normal(0, 0.1, (1, C, cfg.d_model)), jnp.float32)
+    pool_k = jnp.zeros((N, KV, bs, dh // 2), jnp.uint8)
+    pool_v = jnp.zeros_like(pool_k)
+    # block 1 was written by an earlier chunk (scale + sub codes set and
+    # immutable); blocks 2-3 are fresh — their whole grid seeds from this chunk
+    k_scale = jnp.zeros((N, KV), jnp.float32).at[1].set(0.05)
+    v_scale = jnp.zeros((N, KV), jnp.float32).at[1].set(0.07)
+    k_sub = jnp.zeros((N, KV, n_sub), jnp.uint8).at[1].set(9)
+    v_sub = jnp.zeros((N, KV, n_sub), jnp.uint8).at[1].set(11)
+    tbl = jnp.asarray([1, 2, 3, 0], jnp.int32)
+    blk_t = jnp.asarray([tbl[(start + i) // bs] for i in range(C)], jnp.int32)
+    off_t = jnp.asarray([(start + i) % bs for i in range(C)], jnp.int32)
+    clip = default_qstate(cfg)["attn_clip"][0]
+
+    outs, pools = {}, {}
+    for fused in (False, True):
+        statics = AttnStatics("exaq", 2, fused)
+        o, new_kv = attn.attention_prefill_chunk(
+            params, x, cfg, statics, clip, pool_k, pool_v, tbl,
+            jnp.int32(start), blk_t, off_t, k_scale, v_scale, k_sub, v_sub)
+        outs[fused], pools[fused] = o, new_kv
+    # scatter is shared: nibbles, scale planes and sub codes are identical
+    for a, b in zip(pools[False], pools[True]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _, _, ks_new, _, ksub_new, vsub_new = pools[True]
+    assert float(ks_new[1, 0]) == pytest.approx(0.05)        # scale immutable
+    assert int(jnp.min(ksub_new[1])) == 9                    # sub codes immutable
+    assert int(jnp.min(vsub_new[1])) == 11
+    assert float(jnp.min(ks_new[2])) > 0.0                   # fresh block seeded
+    # this chunk wrote rows 4..7 of block 2 -> its written sub-blocks carry
+    # live codes in [1, 15]; block 3 stays fully unset (never targeted)
+    assert int(jnp.max(ksub_new[2])) >= 1
+    assert int(jnp.max(ksub_new[3])) == 0 and float(ks_new[3, 0]) == 0.0
+    np.testing.assert_allclose(np.asarray(outs[True]), np.asarray(outs[False]), atol=1e-5)
+
+
+def test_prefill_requires_sub_planes_iff_int4(quantize_pool_int4):
+    KV, bs, MB, D = 2, 8, 2, 16
+    pk, pv, tbl = _window_setup(KV, bs, MB, D, seed=31)
+    qk, qv, ks, vs, ksub, vsub = quantize_pool_int4(pk, pv)
+    p = exaq_params(1.0, 2)
+    q = jnp.zeros((1, 2, 4, D))
+    with pytest.raises(ValueError):
+        ops.paged_prefill_attention(q, qk, qv, tbl, jnp.int32(0), p, 0.25,
+                                    k_scale=ks, v_scale=vs, k_sub=ksub,
+                                    use_kernel=True)  # packed missing v_sub
+    with pytest.raises(ValueError):
+        ops.paged_prefill_attention(q, pk, pv, tbl, jnp.int32(0), p, 0.25,
+                                    k_sub=ksub, v_sub=vsub,
+                                    use_kernel=True)  # fp pool with sub codes
+
+
 # ------------------------------------------------------------- bytes model
 
 def test_prefill_bytes_model_2x_at_half_occupancy():
@@ -231,6 +327,14 @@ def test_prefill_bytes_model_prefix_hits_and_dtype():
     assert m8["gather_then_attend_bytes"] == (
         m8["live_block_reads"] * m8["block_bytes"]
         + 2 * m8["chunks"] * 16 * 4 * 16 * 64 * 4) * 2
+    # packed int4: half-byte payload + fp32 scale + per-sub-block code per head
+    from repro.kernels.ops import kv4_num_sub
+
+    m4 = paged_prefill_bytes_model(kv_dtype="int4", **kw)
+    assert m4["block_bytes"] == 4 * (16 * 64 // 2 + 4 + kv4_num_sub(16))
+    assert m8["fused_pool_read_bytes"] / m4["fused_pool_read_bytes"] >= 1.8
+    m16 = paged_prefill_bytes_model(kv_dtype="bf16", **kw)
+    assert m16["fused_pool_read_bytes"] / m4["fused_pool_read_bytes"] >= 3.5
 
 
 # ------------------------------------------------------- engine greedy parity
@@ -266,14 +370,16 @@ def test_paged_engine_fused_prefill_matches_gather_greedy():
     assert _engine_trace(cfg, params, fused=True) == _engine_trace(cfg, params, fused=False)
 
 
-def test_paged_engine_fused_prefill_int8_matches_gather_greedy():
-    """Engine-level parity at int8: quantize-on-scatter with scale seeding is
-    shared by both paths, so fused and gather dequantize identical codes and
-    emit identical greedy tokens (DESIGN.md §6/§7)."""
+@pytest.mark.parametrize("cache_dtype", [jnp.int8, "int4"], ids=["int8", "int4"])
+def test_paged_engine_fused_prefill_quantized_matches_gather_greedy(cache_dtype):
+    """Engine-level parity on quantized pools: quantize-on-scatter with
+    first-write scale (+ int4 sub-code) seeding is shared by both paths, so
+    fused and gather dequantize identical codes and emit identical greedy
+    tokens through multi-chunk shared-prefix prefills (DESIGN.md §6/§7/§10)."""
     from repro.configs import get_config
     from repro.models import build_model
 
     cfg = get_config("yi-6b").reduced(num_layers=2).with_quant(softmax_impl="exaq", bits=2)
     params = build_model(cfg).init(jax.random.PRNGKey(0), jnp.float32)
-    assert (_engine_trace(cfg, params, fused=True, cache_dtype=jnp.int8)
-            == _engine_trace(cfg, params, fused=False, cache_dtype=jnp.int8))
+    assert (_engine_trace(cfg, params, fused=True, cache_dtype=cache_dtype)
+            == _engine_trace(cfg, params, fused=False, cache_dtype=cache_dtype))

@@ -63,10 +63,13 @@ DERIVED = [
      "serving.impls.exaq-int3.tok_per_s", "serving.impls.exact.tok_per_s"),
     ("micro.fused_over_gather_step_ms", "micro.fused_step_ms", "micro.gather_step_ms"),
     ("micro.fused_int8_over_gather_step_ms", "micro.fused_int8_step_ms", "micro.gather_step_ms"),
+    ("micro.fused_int4_over_gather_step_ms", "micro.fused_int4_step_ms", "micro.gather_step_ms"),
     ("micro.prefill.fused_over_gather_chunk_ms",
      "micro.prefill.fused_chunk_ms", "micro.prefill.gather_chunk_ms"),
     ("micro.prefill.fused_int8_over_gather_chunk_ms",
      "micro.prefill.fused_int8_chunk_ms", "micro.prefill.gather_chunk_ms"),
+    ("micro.prefill.fused_int4_over_gather_chunk_ms",
+     "micro.prefill.fused_int4_chunk_ms", "micro.prefill.gather_chunk_ms"),
 ]
 
 # (dotted-path pattern, rule). Rules: "higher" / "lower" are ratio-tolerant
@@ -77,11 +80,18 @@ SPEC = [
     ("serving.paged.*.prefix_hit_rate", "floor"),
     ("serving.paged.*.greedy_parity_vs_slot", "bool"),
     ("serving.kv_dtype.agreement_int8_vs_fp32", "floor"),
+    ("serving.kv_dtype.agreement_int4_vs_fp32", "floor"),
     ("serving.kv_dtype.pool_shrink_x", "floor"),
+    ("serving.kv_dtype.pool_shrink_int4_x", "floor"),
+    ("serving.kv_dtype.int4_vs_int8_pool_x", "floor"),
     ("micro.bytes_reduction_x", "floor"),
     ("micro.int8_vs_bf16_bytes_reduction_x", "floor"),
+    ("micro.int4_vs_int8_bytes_reduction_x", "floor"),
+    ("micro.int4_vs_bf16_bytes_reduction_x", "floor"),
     ("micro.prefill.bytes_reduction_x", "floor"),
     ("micro.prefill.int8_vs_bf16_bytes_reduction_x", "floor"),
+    ("micro.prefill.int4_vs_int8_bytes_reduction_x", "floor"),
+    ("micro.prefill.int4_vs_bf16_bytes_reduction_x", "floor"),
     ("serving.dp.greedy_parity_vs_single", "bool"),
     ("serving.dp.aggregate.prefix_hit_rate", "floor"),
     ("serving.dp.aggregate.mean_occupancy", "floor"),
