@@ -58,6 +58,17 @@ greedy parity with the single paged engine, that the deterministic
 least-loaded dispatch fed both replicas, and reports per-replica stats
 plus aggregated hit rate / occupancy under ``"dp"`` in the JSON.
 
+Part 6 drives the SLA scheduler (DESIGN.md §11) with a bursty, heavy-tail
+arrival trace (Pareto gaps between clusters of simultaneous requests — the
+adversarial shape for TTFT tails, where a burst lands on a full batch) at
+one decode step per chunk and two priority classes, and reports per-request
+TTFT and inter-token-latency percentiles in *deterministic scheduler ticks*
+(gated exact-or-lower — any rise is a real scheduling regression, runner
+hardware can't move them). An overload arm re-runs the trace behind a
+``max_inflight`` admission cap and asserts every rejection is a structured
+*retryable* ``Rejected`` with a backoff hint while the admitted subset
+still completes. All of it rides under ``"bursty"`` in the JSON.
+
 The smoke model is a 2-layer reduced config briefly overfit on a periodic
 token sequence: a random-init model has near-tied logits (argmax margins
 below any quantizer's noise floor, so agreement would measure tie-breaking,
@@ -367,6 +378,116 @@ def bench_dp(base, params, calib_stats, args, rng, report):
     }
 
 
+def make_bursty_trace(rng, n_requests: int, *, burst: int = 4, tail: float = 1.5,
+                      scale: float = 6.0):
+    """Heavy-tail bursty arrivals: clusters of up to ``burst`` simultaneous
+    requests separated by Pareto gaps (in decode steps). Returns
+    (arrival_step, tail_len) pairs like ``make_trace``."""
+    arrivals, t, i = [], 0, 0
+    while i < n_requests:
+        k = min(int(rng.integers(1, burst + 1)), n_requests - i)
+        arrivals += [t] * k
+        i += k
+        t += 1 + int(min(rng.pareto(tail) * scale, 64.0))
+    lens = rng.integers(1, 9, n_requests)
+    return list(zip(arrivals, lens.tolist()))
+
+
+def _replay_streaming(eng, trace, prompts, gen):
+    """Replay ``trace`` one decode step per chunk, recording the engine tick
+    at which every token became visible (``tokens_so_far`` — the same
+    streaming source the async frontend flushes from). Returns
+    (uid_of, rejections, token_ticks, results)."""
+    from repro.runtime.engine_core import Rejected
+
+    pending = list(range(len(trace)))
+    uid_of, rejections, token_ticks = {}, {}, {}
+    step_clock, last_decode = 0, 0
+    while pending or eng.has_work():
+        while pending and trace[pending[0]][0] <= step_clock:
+            i = pending.pop(0)
+            r = eng.try_submit(prompts[i], gen, priority=i % 2)
+            if isinstance(r, Rejected):
+                rejections[i] = r
+            else:
+                uid_of[i] = r
+                token_ticks[r] = []
+        if eng.has_work():
+            eng.step_chunk(1)
+            now = eng.now()
+            for uid, ticks in token_ticks.items():
+                n = len(eng.tokens_so_far(uid))
+                ticks.extend([now] * (n - len(ticks)))
+            step_clock += eng.stats["decode_steps"] - last_decode
+            last_decode = eng.stats["decode_steps"]
+        elif pending:
+            step_clock = trace[pending[0]][0]  # idle-skip to the next arrival
+    return uid_of, rejections, token_ticks, eng.run()
+
+
+def bench_bursty(base, params, calib_stats, args, rng, report):
+    """Part 6: bursty heavy-tail trace through the SLA scheduler
+    (DESIGN.md §11) — deterministic tick-clocked TTFT / inter-token-latency
+    percentiles, plus an overload arm behind admission control."""
+    sys_len, tail_hi = args.shared_prefix, 8
+    trace = make_bursty_trace(rng, args.requests)
+    pattern = np.arange(sys_len + tail_hi + PERIOD) % PERIOD + TOK0
+    prompts = [pattern[: sys_len + n] for _, n in trace]
+    max_seq = sys_len + tail_hi + args.gen
+
+    cfg = base.with_quant(softmax_impl="exaq", bits=2)
+    qstate = build_model(cfg).qstate_from_stats(calib_stats)
+    kw = dict(qstate=qstate, max_slots=args.slots, max_seq=max_seq, seed=0,
+              steps_per_sync=1, block_size=args.block_size,
+              prefill_chunk=args.prefill_chunk)
+
+    eng = PagedEngine(cfg, params, **kw)
+    uid_of, rejections, token_ticks, results = _replay_streaming(
+        eng, trace, prompts, args.gen)
+    assert not rejections, "no admission limits were set; nothing may be rejected"
+    assert all(len(results[u].tokens) == args.gen for u in uid_of.values())
+    ttfts = np.array([eng.ttft[u] for u in uid_of.values()])
+    itls = np.concatenate([np.diff(t) for t in token_ticks.values()])
+    bursty = {
+        "requests": len(trace),
+        "bursts": len(set(a for a, _ in trace)),
+        "p50_ttft_steps": float(np.percentile(ttfts, 50)),
+        "p99_ttft_steps": float(np.percentile(ttfts, 99)),
+        "p50_itl_steps": float(np.percentile(itls, 50)),
+        "p99_itl_steps": float(np.percentile(itls, 99)),
+        "preemptions": eng.stats["preemptions"],
+    }
+    print(f"bursty trace: {bursty['requests']} requests in {bursty['bursts']} bursts, "
+          f"2 priority classes, chunk=1; TTFT p50/p99 "
+          f"{bursty['p50_ttft_steps']:.0f}/{bursty['p99_ttft_steps']:.0f} ticks, "
+          f"inter-token p50/p99 {bursty['p50_itl_steps']:.0f}/"
+          f"{bursty['p99_itl_steps']:.0f} ticks "
+          f"(deterministic scheduler ticks: decode steps + prefill chunks)")
+
+    # overload arm: the same trace behind a max_inflight admission cap — the
+    # cap must shed as structured retryable rejections, never grow the queue,
+    # and everything it admits must still complete
+    cap = args.slots
+    eng2 = PagedEngine(cfg, params, max_inflight=cap, **kw)
+    uid2, rej2, _, res2 = _replay_streaming(eng2, trace, prompts, args.gen)
+    assert rej2, f"bursts of 4 behind max_inflight={cap} must shed something"
+    assert all(len(res2[u].tokens) == args.gen for u in uid2.values())
+    all_retryable = all(
+        r.reason == "max_inflight" and r.retryable and r.backoff_hint > 0
+        for r in rej2.values()
+    )
+    assert all_retryable, "admission-control sheds must be retryable with a backoff hint"
+    bursty["overload"] = {
+        "max_inflight": cap,
+        "completed": len(uid2),
+        "shed": len(rej2),
+        "all_shed_retryable": all_retryable,
+    }
+    print(f"overload arm (max_inflight={cap}): {len(uid2)} completed, "
+          f"{len(rej2)} shed — all structured retryable with backoff hints")
+    report["bursty"] = bursty
+
+
 def bench_paged_decode_micro(base, params, args, report):
     """Part 3: fused paged-decode kernel vs HBM gather, one jitted step.
 
@@ -609,6 +730,9 @@ def main():
     print("--- data-parallel fleet: 2 replicas vs single engine (DESIGN.md §9) ---")
     bench_dp(base, params, calib_stats, args, rng, report)
 
+    print("--- bursty arrivals: tick-clocked TTFT/ITL + admission control (DESIGN.md §11) ---")
+    bench_bursty(base, params, calib_stats, args, rng, report)
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
@@ -622,7 +746,8 @@ def main():
           ">=2x modeled KV bytes cut by the fused paged-decode AND paged-prefill kernels; "
           ">=1.8x further cut and >=99% greedy agreement on the int8 pool; "
           ">=1.8x beyond int8 (>=3.5x vs bf16) and >=99% agreement on the packed-int4 pool; "
-          "bit-exact dp=2 fleet parity with both replicas served")
+          "bit-exact dp=2 fleet parity with both replicas served; "
+          "bursty trace served with every admission-control shed structured + retryable")
 
 
 if __name__ == "__main__":

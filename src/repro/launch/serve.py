@@ -72,6 +72,73 @@ def validate_serve_args(args, device_count: int | None = None):
             f"only {device_count} visible (try XLA_FLAGS="
             f"--xla_force_host_platform_device_count=N on CPU)"
         )
+    if args.online and not args.paged:
+        raise SystemExit(
+            "--online drives the paged engine's streaming/cancellation surface "
+            "(DESIGN.md §11); add --paged"
+        )
+    if args.online and args.dp > 1:
+        raise SystemExit("--online serves a single engine; drop --dp or --online")
+    if args.priority_classes < 1:
+        raise SystemExit(f"--priority-classes must be >= 1, got {args.priority_classes}")
+    if args.deadline_ms < 0 or args.max_inflight < 0:
+        raise SystemExit(
+            f"--deadline-ms and --max-inflight must be >= 0 (0 = off), got "
+            f"--deadline-ms {args.deadline_ms} --max-inflight {args.max_inflight}"
+        )
+    if not args.online and (args.priority_classes != 1 or args.deadline_ms
+                            or args.max_inflight):
+        raise SystemExit(
+            "--priority-classes/--deadline-ms/--max-inflight shape online "
+            "admission; add --online"
+        )
+
+
+def _serve_online(eng, prompts, args, sp):
+    """Drive the asyncio serving front (runtime/frontend.py) over the built
+    paged engine: submissions cycle through the priority classes, every
+    stream is collected concurrently, and shed load is reported with its
+    structured rejection instead of failing the run."""
+    import asyncio
+
+    from repro.runtime.engine_core import Rejected
+    from repro.runtime.frontend import AsyncFrontend
+
+    deadline = args.deadline_ms / 1e3 if args.deadline_ms else None
+
+    async def go():
+        handles, shed = [], []
+        async with AsyncFrontend(eng) as fe:
+            for i, p in enumerate(prompts):
+                h = await fe.submit(p, args.gen, sp,
+                                    priority=i % args.priority_classes,
+                                    deadline=deadline)
+                (shed if isinstance(h, Rejected) else handles).append(h)
+            for h in handles:
+                await h.collect()
+        return handles, shed
+
+    t0 = time.time()
+    handles, shed = asyncio.run(go())
+    wall = time.time() - t0
+    # post-admission deadline sheds resolve as closed "shed" streams
+    shed += [h.rejected for h in handles if h.finish_reason == "shed"]
+    done = [h for h in handles if h.finish_reason != "shed"]
+    n_out = sum(len(h.tokens) for h in done)
+    unit = "s" if args.deadline_ms else " ticks"  # engine-clock units (see above)
+    print(f"online front: {len(done)} served / {len(shed)} shed of "
+          f"{len(prompts)} requests ({args.priority_classes} priority classes, "
+          f"deadline {args.deadline_ms or 'off'} ms, "
+          f"max-inflight {args.max_inflight or 'off'})")
+    print(f"streamed {n_out} tokens in {wall*1e3:.1f} ms "
+          f"({n_out/max(wall, 1e-9):.0f} tok/s incl. compile)")
+    for h in done[:2]:
+        ttft = eng.ttft.get(h.uid)
+        ttft_s = "?" if ttft is None else f"{ttft:.3f}{unit}"
+        print(f"  req {h.uid} [{h.finish_reason}] ttft={ttft_s}:", h.tokens[:16])
+    for r in shed[:2]:
+        print(f"  shed [{r.reason}] retryable={r.retryable} "
+              f"backoff_hint={r.backoff_hint:.2f}")
 
 
 def main():
@@ -117,6 +184,21 @@ def main():
                     help="tensor-parallel shards per replica: block pool split on "
                          "the kv-head axis over the 'model' mesh axis (paged; "
                          "DESIGN.md §9)")
+    ap.add_argument("--online", action="store_true",
+                    help="asyncio serving front: streaming admission with "
+                         "per-request cancellation, priority classes, and TTFT "
+                         "deadlines over the paged engine (DESIGN.md §11)")
+    ap.add_argument("--priority-classes", type=int, default=1,
+                    help="online: cycle submissions through N priority classes "
+                         "(0 = most urgent; the scheduler preempts across classes)")
+    ap.add_argument("--deadline-ms", type=int, default=0,
+                    help="online: per-request TTFT deadline in wall-clock ms "
+                         "(0 = off); expired queued requests shed with a "
+                         "structured retryable rejection + backoff hint")
+    ap.add_argument("--max-inflight", type=int, default=0,
+                    help="online: admission cap on requests in the system "
+                         "(0 = off); overflow is shed at submit with a backoff "
+                         "hint instead of growing the queue")
     args = ap.parse_args()
     validate_serve_args(args, device_count=jax.device_count())
 
@@ -150,6 +232,11 @@ def main():
                              prefill_chunk=args.prefill_chunk,
                              num_blocks=args.num_blocks or None, fused=args.fused,
                              cache_dtype=KV_DTYPES[args.kv_dtype])
+            if args.online:
+                # deadlines compare against the engine clock: wall seconds when
+                # deadlines are live, deterministic scheduler ticks otherwise
+                engine_kw.update(max_inflight=args.max_inflight or None,
+                                 clock=time.monotonic if args.deadline_ms else None)
             if args.dp > 1 or args.tp > 1:
                 from repro.launch.mesh import make_replica_meshes
 
@@ -166,6 +253,9 @@ def main():
         else:
             eng = Engine(cfg, params, max_slots=args.slots, max_seq=max_seq,
                          eos_id=eos, seed=args.seed, cache_dtype=KV_DTYPES[args.kv_dtype])
+        if args.online:
+            _serve_online(eng, prompts, args, sp)
+            return
         t0 = time.time()
         uids = [eng.submit(p, args.gen, sp) for p in prompts]
         results = eng.run()

@@ -165,8 +165,9 @@ class Engine(HostCore):
         self.qstate = self._dev.qstate
         self.cache_dtype = self._dev.cache_dtype
 
-    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY) -> int:
-        return super().submit(prompt, max_new, sampling)
+    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY, *,
+               priority: int = 0, deadline: float | None = None) -> int:
+        return super().submit(prompt, max_new, sampling, priority=priority, deadline=deadline)
 
     def _sample_first(self, slot: int, req: Request, logits) -> None:
         """Sample the first generated token from prefill logits (device) and
@@ -306,6 +307,9 @@ class PagedEngine(EngineCore, Engine):
         seed: int = 0,
         mesh=None,
         fused: bool | None = None,
+        clock=None,
+        max_inflight: int | None = None,
+        admit_watermark: float | None = None,
     ):
         if fused is not None:
             if fused and cfg.quant.softmax_impl != "exaq":
@@ -320,6 +324,7 @@ class PagedEngine(EngineCore, Engine):
             self, max_slots=max_slots, max_seq=max_seq, block_size=block_size,
             prefill_chunk=prefill_chunk, num_blocks=num_blocks, eos_id=eos_id,
             steps_per_sync=steps_per_sync, quantized=self._quantized,
+            clock=clock, max_inflight=max_inflight, admit_watermark=admit_watermark,
         )
         self._dev = PagedDeviceStep(
             cfg, params, qstate=qstate, num_blocks=self.num_blocks,
@@ -457,13 +462,14 @@ class DataParallelEngine:
         self._next_uid = 0
         self._results: dict[int, Generation] = {}
 
-    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY) -> int:
+    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY, *,
+               priority: int = 0, deadline: float | None = None) -> int:
         prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
         # validate against replica 0 (all replicas are configured identically)
         self.engines[0]._validate_request(prompt, max_new)
         uid = self._next_uid
         self._next_uid += 1
-        self._pending.append(Request(uid, prompt, max_new, sampling))
+        self._pending.append(Request(uid, prompt, max_new, sampling, int(priority), deadline))
         return uid
 
     def _dispatch(self) -> None:
@@ -478,7 +484,8 @@ class DataParallelEngine:
             if load >= self.engines[i].max_slots:
                 break  # every replica is saturated; keep the shared backlog
             req = self._pending.pop(0)
-            local = self.engines[i].submit(req.prompt, req.max_new, req.sampling)
+            local = self.engines[i].submit(req.prompt, req.max_new, req.sampling,
+                                           priority=req.priority, deadline=req.deadline)
             self._route[req.uid] = (i, local)
 
     def has_work(self) -> bool:

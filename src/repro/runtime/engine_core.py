@@ -31,13 +31,19 @@ Two classes:
 
 from __future__ import annotations
 
-from collections import deque
+import bisect
 from dataclasses import dataclass, field
 from typing import Any
 
 import numpy as np
 
-from repro.runtime.kv_pool import NULL_BLOCK, BlockPool, PoolExhausted, chain_hashes
+from repro.runtime.kv_pool import (
+    NULL_BLOCK,
+    BlockPool,
+    PoolExhausted,
+    PoolOccupancy,
+    chain_hashes,
+)
 
 
 @dataclass(frozen=True)
@@ -59,6 +65,39 @@ class Request:
     prompt: tuple[int, ...]
     max_new: int
     sampling: Any = GREEDY
+    # SLA annotations (DESIGN.md §11): lower priority value = more urgent
+    # class; deadline is an *absolute* TTFT deadline on the core clock
+    # (``HostCore.now()``) — None means no SLA.
+    priority: int = 0
+    deadline: float | None = None
+
+
+@dataclass(frozen=True)
+class Rejected:
+    """Structured shed-load response (DESIGN.md §11): the admission layer's
+    alternative to silently queueing into an eviction storm. ``retryable``
+    distinguishes transient overload (back off ``backoff_hint`` clock units
+    and resubmit) from requests that can never be served (malformed, larger
+    than the pool). ``occupancy`` is the pool census at decision time when a
+    paged pool was consulted; ``uid`` is set only for post-admission sheds
+    (a queued request whose TTFT deadline expired), -1 otherwise."""
+
+    reason: str  # "invalid" | "max_inflight" | "pool_pressure" | "deadline"
+    detail: str = ""
+    retryable: bool = True
+    backoff_hint: float = 0.0
+    occupancy: PoolOccupancy | None = None
+    uid: int = -1
+
+
+class AdmissionRejected(RuntimeError):
+    """Raised by ``submit`` when admission control sheds the request; the
+    structured ``Rejected`` rides in ``.rejected`` (``try_submit`` returns
+    it instead of raising — the frontend path)."""
+
+    def __init__(self, rejected: Rejected):
+        super().__init__(f"request shed: {rejected.reason} {rejected.detail}".strip())
+        self.rejected = rejected
 
 
 @dataclass
@@ -67,7 +106,48 @@ class Generation:
 
     uid: int
     tokens: list[int]
-    finish_reason: str  # "eos" | "length"
+    finish_reason: str  # "eos" | "length" | "cancelled"
+
+
+class _ReqQueue:
+    """Priority request queue with the deque surface the cores grew up with.
+
+    Entries order by ``(priority, seq)``: equal priorities stay FIFO on the
+    admission sequence number, and a preempted continuation — which reuses
+    its original uid as ``seq`` — re-enters *ahead* of later arrivals of its
+    class, preserving the pre-priority engines' appendleft semantics (and
+    their bit-exact admission order when every request is class 0)."""
+
+    def __init__(self):
+        self._items: list[tuple[int, int, Request]] = []
+
+    def append(self, req: Request) -> None:
+        # uid is monotone per core, so it doubles as the admission seq;
+        # ties in (priority, seq) are impossible and Request never compares
+        bisect.insort(self._items, (req.priority, req.uid, req))
+
+    appendleft = append  # continuations re-sort by their (old, small) uid
+
+    def popleft(self) -> Request:
+        return self._items.pop(0)[2]
+
+    def remove_uid(self, uid: int) -> Request | None:
+        for i, (_, _, req) in enumerate(self._items):
+            if req.uid == uid:
+                return self._items.pop(i)[2]
+        return None
+
+    def __bool__(self) -> bool:
+        return bool(self._items)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __getitem__(self, i: int) -> Request:
+        return self._items[i][2]
+
+    def __iter__(self):
+        return (req for _, _, req in self._items)
 
 
 @dataclass
@@ -128,11 +208,18 @@ class HostCore:
     """Slot-level host scheduler state shared by both engines (no jax)."""
 
     def __init__(self, *, max_slots: int, max_seq: int, eos_id: int | None = None,
-                 steps_per_sync: int = 8):
+                 steps_per_sync: int = 8, clock=None, max_inflight: int | None = None):
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.steps_per_sync = steps_per_sync
+        # SLA clock (DESIGN.md §11): deadlines are absolute values of now().
+        # Default clock is the deterministic core tick counter (one tick per
+        # decode step or prefill chunk) so scheduler tests and bench traces
+        # are machine-portable; an online frontend passes time.monotonic.
+        self._clock = clock
+        self._ticks = 0
+        self.max_inflight = max_inflight
 
         # host-side slot state (small; shipped to device each chunk)
         self._slots = [self._new_slot() for _ in range(max_slots)]
@@ -144,16 +231,28 @@ class HostCore:
         self._top_k = np.zeros((max_slots,), np.int32)
         self._top_p = np.ones((max_slots,), np.float32)
 
-        self._queue: deque[Request] = deque()
+        self._queue = _ReqQueue()
         self._results: dict[int, Generation] = {}
+        self.sheds: dict[int, Rejected] = {}  # post-admission deadline sheds
         self._next_uid = 0
+        # tokens emitted before a preemption, merged back at finish (paged
+        # engines populate it; the slot engine never preempts)
+        self._preempt_carry: dict[int, list[int]] = {}
+        self._submit_time: dict[int, float] = {}
+        self.ttft: dict[int, float] = {}  # uid -> first-token latency in now() units
 
         # telemetry for bench_serving
         self.stats = {"decode_steps": 0, "tokens_out": 0, "occupancy_sum": 0.0,
-                      "max_active": 0, "prefills": 0, "decode_time": 0.0}
+                      "max_active": 0, "prefills": 0, "decode_time": 0.0,
+                      "cancelled": 0, "shed": 0}
 
     def _new_slot(self):
         return _Slot()
+
+    def now(self) -> float:
+        """Current SLA-clock reading: wall clock when one was injected, else
+        the deterministic tick counter."""
+        return float(self._clock()) if self._clock is not None else float(self._ticks)
 
     def _validate_request(self, prompt, max_new: int) -> None:
         if not prompt:
@@ -163,13 +262,64 @@ class HostCore:
         if max_new < 1:
             raise ValueError("max_new must be >= 1")
 
-    def submit(self, prompt, max_new: int, sampling=GREEDY) -> int:
-        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
-        self._validate_request(prompt, max_new)
+    # ---------------------------------------------------------------- admission
+
+    def _occupancy(self) -> PoolOccupancy | None:
+        return None  # the paged core reports its BlockPool census
+
+    def _in_system(self) -> int:
+        """Requests admitted but not finished: queued + occupying a slot."""
+        return len(self._queue) + sum(not s.free for s in self._slots)
+
+    def _admission_check(self) -> Rejected | None:
+        """Load-shedding gate for new submissions (DESIGN.md §11). Returns a
+        structured ``Rejected`` when the request should back off, None when
+        it may enter the queue. Never sheds on request *validity* — that is
+        ``_validate_request``'s job and is non-retryable."""
+        if self.max_inflight is not None and self._in_system() >= self.max_inflight:
+            return Rejected(
+                "max_inflight",
+                detail=f"{self._in_system()} requests in flight >= cap {self.max_inflight}",
+                retryable=True, backoff_hint=float(self.steps_per_sync),
+                occupancy=self._occupancy(),
+            )
+        return None
+
+    def _enqueue(self, prompt, max_new: int, sampling, priority: int,
+                 deadline: float | None) -> int:
         uid = self._next_uid
         self._next_uid += 1
-        self._queue.append(Request(uid, prompt, max_new, sampling))
+        self._queue.append(Request(uid, prompt, max_new, sampling, int(priority), deadline))
+        self._submit_time[uid] = self.now()
         return uid
+
+    def submit(self, prompt, max_new: int, sampling=GREEDY, *, priority: int = 0,
+               deadline: float | None = None) -> int:
+        """Admit or die: malformed requests raise ValueError, shed load raises
+        ``AdmissionRejected`` (offline callers treat both as fatal); returns
+        the uid. Frontends wanting structured outcomes use ``try_submit``."""
+        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+        self._validate_request(prompt, max_new)
+        rej = self._admission_check()
+        if rej is not None:
+            raise AdmissionRejected(rej)
+        return self._enqueue(prompt, max_new, sampling, priority, deadline)
+
+    def try_submit(self, prompt, max_new: int, sampling=GREEDY, *, priority: int = 0,
+                   deadline: float | None = None) -> int | Rejected:
+        """Non-raising admission for the serving front: returns a uid, or a
+        ``Rejected`` — non-retryable for malformed requests, retryable with a
+        backoff hint for shed load."""
+        try:
+            prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+            self._validate_request(prompt, max_new)
+        except (ValueError, TypeError) as e:
+            return Rejected("invalid", detail=str(e), retryable=False,
+                            occupancy=self._occupancy())
+        rej = self._admission_check()
+        if rej is not None:
+            return rej
+        return self._enqueue(prompt, max_new, sampling, priority, deadline)
 
     @property
     def num_active(self) -> int:
@@ -186,6 +336,79 @@ class HostCore:
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self._slots) if s.free]
 
+    # ------------------------------------------------- cancellation / streaming
+
+    def cancel(self, uid: int) -> bool:
+        """Abort a request wherever it lives — queued, prefilling, or decoding.
+        Every block it holds is released back to the pool (the paged
+        ``_finish`` path), tokens generated so far land in results with
+        finish_reason "cancelled", and a queued preempt-continuation resolves
+        to its carried tokens. Returns False for unknown/finished uids (a
+        disconnect racing a finish is not an error)."""
+        req = self._queue.remove_uid(uid)
+        if req is not None:
+            carry = self._preempt_carry.pop(uid, [])
+            self._results[uid] = Generation(uid, carry, "cancelled")
+            self._submit_time.pop(uid, None)
+            self.stats["cancelled"] += 1
+            return True
+        for slot, s in enumerate(self._slots):
+            if not s.free and s.uid == uid:
+                self._cancel_slot(slot)
+                self._submit_time.pop(uid, None)
+                self.stats["cancelled"] += 1
+                return True
+        return False
+
+    def _cancel_slot(self, slot: int) -> None:
+        self._finish(slot, "cancelled")
+
+    def tokens_so_far(self, uid: int) -> list[int]:
+        """Every token generated for ``uid`` so far (preempt carry included) —
+        the frontend's streaming source between chunks. Finished requests
+        report their final tokens; unknown uids report []."""
+        carry = self._preempt_carry.get(uid, [])
+        for i, s in enumerate(self._slots):
+            if not s.free and s.uid == uid:
+                return list(carry) + list(s.generated)
+        if uid in self._results:
+            return list(self._results[uid].tokens)
+        return list(carry)  # queued (possibly a preempted continuation)
+
+    def take_finished(self) -> dict[int, Generation]:
+        """Drain completed results (finish/EOS/cancel) since the last call."""
+        out, self._results = self._results, {}
+        return out
+
+    def take_shed(self) -> dict[int, Rejected]:
+        """Drain post-admission deadline sheds since the last call."""
+        out, self.sheds = self.sheds, {}
+        return out
+
+    def _shed_expired(self) -> int:
+        """Shed queued requests whose TTFT deadline already passed — running
+        their prefill can only waste pool blocks the punctual requests need.
+        Continuations of preempted requests are exempt: their admission
+        decision was already made (and a decoding request's TTFT was met).
+        Shed uids land in ``sheds`` as retryable ``Rejected`` responses."""
+        if not self._queue:
+            return 0
+        now = self.now()
+        expired = [r.uid for r in self._queue
+                   if r.deadline is not None and r.deadline <= now
+                   and r.uid not in self._preempt_carry]
+        for uid in expired:
+            req = self._queue.remove_uid(uid)
+            self.sheds[uid] = Rejected(
+                "deadline",
+                detail=f"TTFT deadline {req.deadline:g} expired at clock {now:g}",
+                retryable=True, backoff_hint=float(self.steps_per_sync),
+                occupancy=self._occupancy(), uid=uid,
+            )
+            self._submit_time.pop(uid, None)
+            self.stats["shed"] += 1
+        return len(expired)
+
     def _complete_first(self, slot: int, req: Request, first: int) -> None:
         """Record the first generated token and flip the slot into decode
         state (or finish immediately on EOS / budget 1). The *sampling* of
@@ -193,6 +416,9 @@ class HostCore:
         ``_sample_first``); this is the host transition it feeds."""
         sp = req.sampling
         self.stats["tokens_out"] += 1
+        t0 = self._submit_time.pop(req.uid, None)
+        if t0 is not None and req.uid not in self.ttft:  # continuations keep the original TTFT
+            self.ttft[req.uid] = self.now() - t0
         s = self._slots[slot]
         s.uid, s.generated = req.uid, [first]
         self.kv_lens[slot] = len(req.prompt)
@@ -240,6 +466,7 @@ class HostCore:
         emitted = np.asarray(emitted)  # (steps, S)
         masks = np.asarray(masks)
         n_out = 0
+        self._ticks += emitted.shape[0]  # SLA clock: one tick per decode step
         for t in range(emitted.shape[0]):
             self.stats["decode_steps"] += 1
             self.stats["occupancy_sum"] += float(masks[t].sum())
@@ -297,11 +524,16 @@ class EngineCore(HostCore):
     def __init__(self, *, max_slots: int, max_seq: int, block_size: int = 16,
                  prefill_chunk: int = 32, num_blocks: int | None = None,
                  eos_id: int | None = None, steps_per_sync: int = 8,
-                 quantized: bool = False):
+                 quantized: bool = False, clock=None, max_inflight: int | None = None,
+                 admit_watermark: float | None = None):
         # explicit base call: PagedEngine linearizes as (EngineCore, Engine,
         # HostCore) and Engine.__init__ must not run on this path
         HostCore.__init__(self, max_slots=max_slots, max_seq=max_seq, eos_id=eos_id,
-                          steps_per_sync=steps_per_sync)
+                          steps_per_sync=steps_per_sync, clock=clock,
+                          max_inflight=max_inflight)
+        # shed new work once this fraction of pool blocks is live (None = off):
+        # admission control before the allocator thrashes into eviction storms
+        self.admit_watermark = admit_watermark
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
         self.blocks_per_table = -(-max_seq // block_size)
@@ -314,7 +546,6 @@ class EngineCore(HostCore):
 
         self.stats.update(prompt_tokens=0, prefix_hit_tokens=0,
                           prefill_tokens=0, prefill_chunks=0, preemptions=0)
-        self._preempt_carry: dict[int, list[int]] = {}
         # CoW device copies planned but not yet performed: (src, dst) pairs in
         # the order they must execute (see class docstring)
         self.pending_copies: list[tuple[int, int]] = []
@@ -338,6 +569,37 @@ class EngineCore(HostCore):
                 f"request needs up to {need} blocks of {self.block_size} but the pool "
                 f"has {self.pool.num_blocks - 1} usable blocks"
             )
+
+    def _occupancy(self) -> PoolOccupancy:
+        return self.pool.occupancy()
+
+    def _admission_check(self) -> Rejected | None:
+        rej = super()._admission_check()
+        if rej is not None:
+            return rej
+        if self.admit_watermark is not None:
+            occ = self.pool.occupancy()
+            if occ.live_fraction >= self.admit_watermark:
+                return Rejected(
+                    "pool_pressure",
+                    detail=(f"{occ.num_live}/{occ.num_blocks} blocks live "
+                            f">= watermark {self.admit_watermark:g}"),
+                    retryable=True, backoff_hint=float(self.steps_per_sync),
+                    occupancy=occ,
+                )
+        return None
+
+    def _cancel_slot(self, slot: int) -> None:
+        # queued CoW copies into blocks this cancel releases must never run:
+        # the dst can be recycled to another slot before the next drain, and
+        # a stale copy would overwrite its payload (the live engine drains
+        # copies eagerly so this is a host-only-core concern, but the chaos
+        # harness runs exactly that configuration)
+        doomed = set(self._slots[slot].table)
+        if doomed and self.pending_copies:
+            self.pending_copies = [(s, d) for (s, d) in self.pending_copies
+                                   if d not in doomed]
+        super()._cancel_slot(slot)
 
     # -------------------------------------------------------------- block ops
 
@@ -407,13 +669,24 @@ class EngineCore(HostCore):
         plus everything generated so far, so prefilling it reproduces the
         decode state exactly (greedy continuation is bit-identical — chunked
         prefill is exact, DESIGN.md §3), and its prompt blocks usually hit
-        the prefix cache the preempted slot just parked."""
+        the prefix cache the preempted slot just parked. Works on decoding
+        *and* mid-prefill slots (priority admission evicts either); the
+        continuation keeps the request's priority class and deadline."""
         s = self._slots[slot]
         req = s.req
         done = list(s.generated)
-        remaining = int(self._budget[slot])
-        self._preempt_carry[req.uid] = self._preempt_carry.pop(req.uid, []) + done
-        cont = Request(req.uid, req.prompt + tuple(done), remaining, req.sampling)
+        # mid-prefill: nothing sampled yet, the continuation is the original
+        # request verbatim (its _budget is stale — never set for this slot)
+        remaining = req.max_new if s.prefilling else int(self._budget[slot])
+        carry = self._preempt_carry.pop(req.uid, []) + done
+        if carry:  # no empty entries: _shed_expired treats presence as TTFT-met
+            self._preempt_carry[req.uid] = carry
+        cont = Request(req.uid, req.prompt + tuple(done), remaining, req.sampling,
+                       req.priority, req.deadline)
+        doomed = set(s.table)
+        if doomed and self.pending_copies:  # same staleness hazard as _cancel_slot
+            self.pending_copies = [(a, b) for (a, b) in self.pending_copies
+                                   if b not in doomed]
         for blk in s.table:
             self.pool.release(blk)
         self._tables[slot, :] = NULL_BLOCK
@@ -423,41 +696,81 @@ class EngineCore(HostCore):
         self._queue.appendleft(cont)  # continuation bypasses _validate_request:
         # its prompt may legitimately reach max_seq (finishes right after prefill)
 
+    def _victim_rank(self, j: int):
+        """Sort key for preemption policy (DESIGN.md §11): under max(), the
+        victim is the least-urgent occupied slot — highest priority value
+        first, then the most deadline slack (no deadline = infinite slack),
+        then the newest uid. With every request at the defaults this reduces
+        exactly to the pre-SLA policy (preempt the newest)."""
+        s = self._slots[j]
+        req = s.req
+        prio = req.priority if req is not None else 0
+        slack = req.deadline if (req is not None and req.deadline is not None) else float("inf")
+        return (prio, slack, s.uid)
+
     def _reserve_chunk_blocks(self, steps: int) -> None:
-        """Ensure every active slot can write its share of the coming chunk.
-        Exhaustion preempts the newest active slot (its blocks free up, its
+        """Ensure every active slot can write its share of the coming chunk,
+        most-urgent slots reserving first. Exhaustion preempts the least
+        urgent active slot per ``_victim_rank`` (its blocks free up, its
         request recomputes later) instead of crashing the engine — honest
         back-pressure on undersized pools."""
-        for i in np.argsort([self._slots[i].uid if self._active[i] else np.iinfo(np.int64).max
-                             for i in range(self.max_slots)]):
-            i = int(i)
-            if not self._active[i]:
-                continue
+        order = sorted((i for i in range(self.max_slots) if self._active[i]),
+                       key=self._victim_rank)
+        for i in order:
+            # a slot later in the order may have been preempted for an earlier one
             while self._active[i]:
                 try:
                     self._ensure_decode_blocks(i, steps)
                     break
                 except PoolExhausted:
                     victims = [j for j in range(self.max_slots) if self._active[j]]
-                    victim = max(victims, key=lambda j: self._slots[j].uid)
+                    victim = max(victims, key=self._victim_rank)
                     if victim == i and len(victims) == 1:
                         raise PoolExhausted(
                             f"cannot grow KV for the only active request (uid "
                             f"{self._slots[i].uid}): pool of {self.pool.num_blocks - 1} "
-                            f"usable blocks is too small for max_seq {self.max_seq}"
+                            f"usable blocks is too small for max_seq {self.max_seq}",
+                            retryable=False, occupancy=self.pool.occupancy(),
                         ) from None
                     self._preempt(victim)
 
     # ------------------------------------------------------------- scheduling
 
+    def _preempt_for(self, req: Request) -> int | None:
+        """Occupied slot to evict so the strictly-more-urgent ``req`` can run:
+        the least-urgent per ``_victim_rank``, and only when its priority
+        class is strictly less urgent than ``req``'s — equal-class arrivals
+        wait their turn (no churn within a class). None when nothing
+        qualifies. Mid-prefill slots are eligible victims: they hold blocks
+        and haven't produced a token yet, so they are the cheapest to redo."""
+        occupied = [j for j in range(self.max_slots) if not self._slots[j].free]
+        if not occupied:
+            return None
+        victim = max(occupied, key=self._victim_rank)
+        vreq = self._slots[victim].req
+        if vreq is None or vreq.priority <= req.priority:
+            return None
+        return victim
+
     def _admit(self) -> int:
-        """Match prefix hashes, retain hits, allocate the rest of the prompt's
-        blocks, and park the slot in chunked-prefill state. Pool exhaustion
-        rolls the request back into the queue (back-pressure)."""
+        """Shed expired deadlines, then match prefix hashes, retain hits,
+        allocate the rest of the prompt's blocks, and park the slot in
+        chunked-prefill state. The queue is priority-ordered, so the head is
+        always the most urgent waiter; when it is blocked on a slot or on
+        pool blocks held by a strictly-less-urgent class, that victim is
+        preempted (deadline-aware ``_victim_rank``). Otherwise pool
+        exhaustion rolls the request back into the queue (back-pressure)."""
+        self._shed_expired()
         admitted = 0
         free = self._free_slots()
-        while free and self._queue:
+        while self._queue:
             req = self._queue[0]
+            if not free:
+                victim = self._preempt_for(req)
+                if victim is None:
+                    break
+                self._preempt(victim)
+                free = self._free_slots()
             hashes = chain_hashes(req.prompt, self.block_size)
             table, cached = [], 0
             for h, n in hashes:
@@ -475,7 +788,12 @@ class EngineCore(HostCore):
             except PoolExhausted:
                 for b in table:
                     self.pool.release(b)
-                break
+                victim = self._preempt_for(req)
+                if victim is None:
+                    break
+                self._preempt(victim)  # frees its blocks; retry the same head
+                free = self._free_slots()
+                continue
             self._queue.popleft()
             slot = free.pop(0)
             s = self._slots[slot]
@@ -520,6 +838,7 @@ class EngineCore(HostCore):
         samples the first token from the chunk's logits)."""
         s = self._slots[slot]
         s.filled += n
+        self._ticks += 1  # SLA clock: one tick per prefill chunk
         self.stats["prefill_chunks"] += 1
         self.stats["prefill_tokens"] += n
         bs = self.block_size

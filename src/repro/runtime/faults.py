@@ -1,0 +1,298 @@
+"""Deterministic fault injection for the serving stack (DESIGN.md §11).
+
+Chaos testing only means something when a failure replays: every fault
+schedule here is driven by a caller-provided ``numpy`` Generator, which the
+test layer seeds through the PYTEST_SEED machinery (tests/conftest.py) — a
+chaos counterexample reproduces with one env var, exactly like the fuzzers.
+
+Three pieces, all jax-free (they exercise the pure-host ``EngineCore`` from
+DESIGN.md §9 directly, and wrap real engines without touching device state):
+
+  * ``audit_block_invariants`` — the full allocator + scheduler audit
+    (BlockPool I1-I4, refcount-vs-table equality, device-mirror agreement,
+    reset/copy ordering). Shared by the fuzzers, the chaos suite, and the
+    frontend tests; the ``held`` parameter accounts for blocks the harness
+    itself has pinned, so pool-exhaustion injection doesn't read as a leak.
+  * ``HostDeviceEmulator`` — a numpy emulation of ``PagedEngine.step_chunk``
+    honoring decode_scan's visible semantics (emission masks, budget / EOS /
+    max_seq finish transitions), so scheduler policy and fault recovery are
+    testable at fuzz speed with no jax in the process.
+  * ``ChaosHarness`` — the injection surface: pool exhaustion (pin blocks
+    until the allocator starves), mid-stream client disconnects (cancel),
+    malformed requests (must shed as non-retryable ``Rejected``, never
+    enqueue), and stalled device steps (``slow_steps`` wraps an engine's
+    ``step_chunk`` with a delay — the async frontend must keep accepting
+    submissions and cancellations while a step drags).
+
+Invariant contract the chaos suite enforces (ISSUE acceptance): after every
+injected event, no block leaks (audit passes), every non-shed request
+finishes with bit-exact greedy parity against a fault-free run, and every
+shed request receives a structured retryable ``Rejected``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.runtime.engine_core import EngineCore, Rejected
+from repro.runtime.kv_pool import NULL_BLOCK, PoolExhausted
+
+__all__ = [
+    "ChaosHarness",
+    "EmulatedEngine",
+    "HostDeviceEmulator",
+    "audit_block_invariants",
+    "slow_steps",
+]
+
+
+# ------------------------------------------------------------ invariant audit
+
+
+def audit_block_invariants(core: EngineCore, held=()) -> None:
+    """Audit the full allocator + scheduler state (BlockPool I1-I4 plus the
+    engine-core bookkeeping that rides on them). Cheap enough to run after
+    every fuzz/chaos step. ``held`` lists block ids pinned by a harness
+    (one entry per reference), accounted alongside slot-table references."""
+    pool = core.pool
+    n = pool.num_blocks
+    ref = np.asarray(pool.refcount)
+    free = list(pool._free)
+    lru = list(pool._lru)
+
+    # I4: the null block is permanently reserved
+    assert NULL_BLOCK not in free and NULL_BLOCK not in lru
+    assert ref[NULL_BLOCK] == 0
+
+    # I1: free / evictable(LRU) / live partition the usable ids exactly
+    assert len(set(free)) == len(free), "duplicate ids on the free list"
+    assert len(set(lru)) == len(lru), "duplicate ids on the LRU"
+    live = {b for b in range(1, n) if ref[b] > 0}
+    assert live.isdisjoint(free), f"live blocks on the free list: {live & set(free)}"
+    assert live.isdisjoint(lru), f"live blocks on the LRU: {live & set(lru)}"
+    assert set(free).isdisjoint(lru)
+    assert live | set(free) | set(lru) == set(range(1, n)), "pool partition leak"
+
+    # I3: evictable blocks are refcount-0 AND published (else they'd be free)
+    for b in lru:
+        assert ref[b] == 0 and b in pool._hash_of
+
+    # I2 bookkeeping: index and reverse map agree
+    for h, b in pool._index.items():
+        assert pool._hash_of.get(b) == h, f"index/hash_of disagree on block {b}"
+
+    # refcount accounting: every reference is exactly one slot-table entry
+    # (plus any harness-held pins)
+    expected = np.zeros(n, np.int64)
+    for b in held:
+        expected[b] += 1
+    for i, s in enumerate(core._slots):
+        if s.free:
+            continue
+        for b in s.table:
+            assert b != NULL_BLOCK
+            expected[b] += 1
+        # the device mirror matches host truth
+        t = core._tables[i]
+        assert list(t[: len(s.table)]) == list(s.table)
+        assert (t[len(s.table):] == NULL_BLOCK).all()
+    np.testing.assert_array_equal(
+        ref[1:], expected[1:],
+        err_msg="refcounts drifted from slot-table references",
+    )
+
+    # queued CoW destinations must not be pending a scale reset (the copy
+    # delivers their valid grid; a later reset would zero it)
+    for _, dst in core.pending_copies:
+        assert dst not in core._fresh_blocks
+
+
+# --------------------------------------------------------- host-side emulator
+
+
+class HostDeviceEmulator:
+    """Numpy stand-in for ``PagedEngine``'s device half: drives an
+    ``EngineCore`` through admit / prefill-chunk / decode-chunk transitions
+    with rng-sampled tokens, honoring decode_scan's visible semantics
+    (emission masks, budget / EOS / max_seq finish transitions). The policy
+    layer under test — priorities, deadlines, preemption, cancellation,
+    shedding — is identical to production; only the token values differ."""
+
+    def __init__(self, rng: np.random.Generator, *, vocab: int, eos: int | None):
+        self.rng = rng
+        self.vocab = vocab
+        self.eos = eos
+
+    def step_chunk(self, core: EngineCore, steps: int | None = None) -> None:
+        """One emulated ``PagedEngine.step_chunk``. May raise PoolExhausted
+        exactly where the real engine would (terminal sole-request growth)."""
+        core._admit()
+        for i, s in enumerate(core._slots):
+            if not s.free and s.prefilling:
+                plan = core.plan_prefill_chunk(i)
+                core.take_pending_copies()
+                core.take_fresh_scale_ids()
+                if core.commit_prefill_chunk(i, plan.n):
+                    core._complete_first(i, s.req, int(self.rng.integers(0, self.vocab)))
+        if core.num_active == 0:
+            return
+        if steps is None:
+            steps = int(self.rng.integers(1, core.steps_per_sync + 1))
+        steps = core._clamp_steps(steps)
+        core._reserve_chunk_blocks(steps)
+        if core.num_active == 0:
+            return
+        core.take_pending_copies()
+        core.take_fresh_scale_ids()
+        S = core.max_slots
+        lens = core.kv_lens.copy()
+        active = core._active.copy()
+        budget = core._budget.copy()
+        tokens = core._tokens.copy()
+        emitted = np.full((steps, S), -1, np.int64)
+        masks = np.zeros((steps, S), bool)
+        was_active = core._active.copy()
+        for t in range(steps):
+            for b in range(S):
+                if not active[b]:
+                    continue
+                nxt = int(self.rng.integers(0, self.vocab))
+                masks[t, b] = True
+                emitted[t, b] = nxt
+                tokens[b, 0] = nxt
+                lens[b] += 1
+                budget[b] -= 1
+                if nxt == self.eos or budget[b] <= 0 or lens[b] >= core.max_seq:
+                    active[b] = False
+        core._absorb_chunk(tokens, lens, active, budget, emitted, masks, was_active)
+
+
+class EmulatedEngine(EngineCore):
+    """``EngineCore`` fused with the emulator into a steppable engine exposing
+    the ``PagedEngine`` serving surface (``step_chunk`` / ``run`` /
+    ``has_work`` / the SLA methods) — what the async frontend and the chaos
+    suite drive when no jax belongs in the process. Scheduling is production
+    code; only token values come from the rng."""
+
+    def __init__(self, rng: np.random.Generator, *, vocab: int = 40,
+                 eos: int | None = None, **core_kw):
+        core_kw.setdefault("eos_id", eos)
+        super().__init__(**core_kw)
+        self._emu = HostDeviceEmulator(rng, vocab=vocab, eos=eos)
+
+    def step_chunk(self, steps: int | None = None) -> int:
+        before = self.stats["tokens_out"]
+        self._emu.step_chunk(self, steps)
+        return self.stats["tokens_out"] - before
+
+
+# ------------------------------------------------------------ fault injection
+
+
+def slow_steps(engine, delay_s: float, *, every: int = 1):
+    """Wrap ``engine.step_chunk`` so every ``every``-th call stalls
+    ``delay_s`` seconds before running — a slow/hung device step. Returns an
+    undo callable. Deterministic in *which* steps stall; the delay is wall
+    clock, which only the online frontend observes."""
+    orig = engine.step_chunk
+    count = [0]
+
+    def stalled(steps=None):
+        count[0] += 1
+        if count[0] % every == 0:
+            time.sleep(delay_s)
+        return orig(steps)
+
+    engine.step_chunk = stalled
+
+    def undo():
+        engine.step_chunk = orig
+
+    return undo
+
+
+class ChaosHarness:
+    """Seeded fault injector over one core/engine (DESIGN.md §11 fault
+    matrix). Faults mutate real scheduler state through public entry points
+    only, so anything the harness breaks is a bug the serving front could
+    hit. ``audit()`` accounts for the harness's own pinned blocks."""
+
+    def __init__(self, core: EngineCore, rng: np.random.Generator):
+        self.core = core
+        self.rng = rng
+        self.held: list[int] = []
+        self.counters = {"exhaust": 0, "disconnect": 0, "malformed": 0, "release": 0}
+
+    # --- pool exhaustion: pin blocks until the allocator starves -----------
+
+    def exhaust_pool(self, n: int | None = None) -> int:
+        """Pin up to ``n`` blocks (default: drain everything allocatable) so
+        admissions/growth hit PoolExhausted. Pinned blocks are accounted by
+        ``audit`` and returned by ``release_held`` — never leaked."""
+        grabbed = 0
+        while n is None or grabbed < n:
+            try:
+                self.held.append(self.core.pool.alloc())
+            except PoolExhausted as e:
+                assert e.retryable and e.occupancy is not None  # structured terminal
+                break
+            grabbed += 1
+        self.counters["exhaust"] += grabbed
+        return grabbed
+
+    def release_held(self, k: int | None = None) -> int:
+        """Release ``k`` (default: all) pinned blocks back to the pool —
+        the 'live requests finished' half of an exhaustion episode."""
+        k = len(self.held) if k is None else min(k, len(self.held))
+        for _ in range(k):
+            self.core.pool.release(self.held.pop())
+        self.counters["release"] += k
+        return k
+
+    # --- client faults ------------------------------------------------------
+
+    def disconnect(self, uid: int) -> bool:
+        """Mid-stream client disconnect: cancel ``uid`` wherever it lives.
+        The core must release its blocks and absorb the cancel silently."""
+        self.counters["disconnect"] += 1
+        return self.core.cancel(uid)
+
+    def disconnect_random(self) -> int | None:
+        """Disconnect one uniformly-chosen in-flight request (slot or queue);
+        None when nothing is in flight."""
+        uids = [s.uid for s in self.core._slots if not s.free]
+        uids += [r.uid for r in self.core._queue]
+        if not uids:
+            return None
+        uid = int(self.rng.choice(uids))
+        self.disconnect(uid)
+        return uid
+
+    def submit_malformed(self) -> list[Rejected]:
+        """Fire the malformed-request battery through ``try_submit``: every
+        payload must come back as a *non-retryable* structured ``Rejected``
+        (shed-load must stay distinguishable from garbage), and none may
+        enqueue or touch the pool."""
+        before = self.core._in_system()
+        battery = [
+            ([], 4),                                   # empty prompt
+            (list(range(self.core.max_seq + 1)), 4),   # prompt >= max_seq
+            ([3, 5, 7], 0),                            # max_new < 1
+            (["not", "tokens"], 4),                    # non-integer payload
+        ]
+        out = []
+        for prompt, max_new in battery:
+            r = self.core.try_submit(prompt, max_new)
+            assert isinstance(r, Rejected), f"malformed payload admitted: {prompt!r}"
+            assert r.reason == "invalid" and not r.retryable
+            out.append(r)
+        assert self.core._in_system() == before
+        self.counters["malformed"] += len(out)
+        return out
+
+    # --- audit --------------------------------------------------------------
+
+    def audit(self) -> None:
+        audit_block_invariants(self.core, held=self.held)

@@ -1,0 +1,262 @@
+"""Async serving front: streaming admission over a stepped engine.
+
+The engines (``runtime/engine.py``) are pull-driven — someone must call
+``step_chunk`` — and their results surface per *request set* via ``run()``.
+Heavy online traffic needs the inverse shape (DESIGN.md §11): requests
+arrive at any time, tokens stream back per request as they are produced,
+clients vanish mid-stream, and overload must resolve to structured
+back-pressure, not a growing queue. ``AsyncFrontend`` is that inversion,
+built on the host core's SLA surface (``try_submit`` / ``tokens_so_far`` /
+``take_finished`` / ``take_shed`` / ``cancel``):
+
+  * one background *pump* task steps the engine whenever work exists and
+    flushes per-request token deltas into each ``StreamHandle``'s queue;
+  * an ``asyncio.Lock`` serializes every engine touch (submit, cancel,
+    step) — the host core is not thread-safe, and the lock is the entire
+    concurrency story;
+  * the blocking ``step_chunk`` runs in the default executor, so a slow or
+    stalled device step never blocks the event loop: submissions and
+    cancellations keep being *accepted* (they queue on the lock) and every
+    other coroutine keeps running — the chaos suite injects exactly this;
+  * per-request cancellation routes through ``HostCore.cancel``, which
+    releases every block the request holds back to the pool (the audit in
+    ``runtime/faults.py`` proves no leak), and resolves the stream with
+    finish_reason "cancelled";
+  * admission rejections and post-admission deadline sheds surface as
+    structured ``Rejected`` values (retryable + backoff hint + pool
+    occupancy), never as exceptions mid-stream.
+
+Deadlines passed to ``submit`` are *relative* TTFT budgets in the engine
+clock's units (deterministic scheduler ticks by default, seconds when the
+engine was built with ``clock=time.monotonic``); the frontend converts them
+to the absolute form the core compares against.
+
+This module imports no jax: it drives any object with the HostCore serving
+surface, which is how the chaos suite runs it against the numpy-emulated
+core at fuzz speed.
+"""
+
+from __future__ import annotations
+
+import asyncio
+
+from repro.runtime.engine_core import GREEDY, Rejected
+from repro.runtime.kv_pool import PoolExhausted
+
+__all__ = ["AsyncFrontend", "StreamHandle"]
+
+_DONE = object()  # stream terminator sentinel
+
+
+class StreamHandle:
+    """One request's streaming view: an async iterator of generated tokens.
+
+    Iteration ends when the request finishes, is cancelled, or is shed;
+    ``finish_reason`` then holds "eos" / "length" / "cancelled" / "shed"
+    (``rejected`` carries the structured ``Rejected`` for sheds). ``tokens``
+    accumulates everything pushed so far — preempt-recompute carries
+    included, so the stream is the request's exact greedy output."""
+
+    def __init__(self, frontend: "AsyncFrontend", uid: int):
+        self.uid = uid
+        self.tokens: list[int] = []
+        self.finish_reason: str | None = None
+        self.rejected: Rejected | None = None
+        self._frontend = frontend
+        self._q: asyncio.Queue = asyncio.Queue()
+        self._sent = 0  # engine-side tokens already pushed into the queue
+
+    # pump-side (always under the frontend lock)
+
+    def _push(self, tok: int) -> None:
+        self.tokens.append(tok)
+        self._q.put_nowait(tok)
+
+    def _close(self, reason: str) -> None:
+        if self.finish_reason is None:
+            self.finish_reason = reason
+            self._q.put_nowait(_DONE)
+
+    def _fail(self, rej: Rejected) -> None:
+        self.rejected = rej
+        self._close("shed")
+
+    # client-side
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self) -> int:
+        if self.finish_reason is not None and self._q.empty():
+            raise StopAsyncIteration
+        tok = await self._q.get()
+        if tok is _DONE:
+            raise StopAsyncIteration
+        return tok
+
+    async def collect(self) -> list[int]:
+        """Drain the stream to completion; returns all tokens."""
+        async for _ in self:
+            pass
+        return list(self.tokens)
+
+    async def cancel(self) -> None:
+        """Client disconnect: abort the request and release its blocks. The
+        stream closes with finish_reason "cancelled" (no-op if already
+        finished — a disconnect racing a finish is not an error)."""
+        await self._frontend._cancel(self)
+
+
+class AsyncFrontend:
+    """Asyncio admission + streaming layer over one engine (DESIGN.md §11).
+
+    Use as an async context manager::
+
+        async with AsyncFrontend(engine) as fe:
+            h = await fe.submit(prompt, max_new=32, priority=0, deadline=50)
+            if isinstance(h, Rejected):      # shed: back off h.backoff_hint
+                ...
+            else:
+                async for tok in h:          # tokens stream per engine chunk
+                    ...
+
+    ``chunk_steps`` bounds decode steps per pump iteration (smaller = lower
+    inter-token latency, more host overhead); None uses the engine's
+    ``steps_per_sync``. On exit, unresolved streams are cancelled — call
+    ``drain()`` first for a graceful finish.
+    """
+
+    def __init__(self, engine, *, chunk_steps: int | None = None):
+        self.engine = engine
+        self.chunk_steps = chunk_steps
+        self._handles: dict[int, StreamHandle] = {}
+        self._lock = asyncio.Lock()
+        self._wake = asyncio.Event()
+        self._closed = False
+        self._pump_task: asyncio.Task | None = None
+        self._fatal: Exception | None = None
+
+    # ------------------------------------------------------------- lifecycle
+
+    async def __aenter__(self) -> "AsyncFrontend":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()
+
+    def start(self) -> None:
+        if self._pump_task is None:
+            self._pump_task = asyncio.get_running_loop().create_task(self._pump())
+
+    async def aclose(self) -> None:
+        """Cancel every unresolved stream, stop the pump."""
+        async with self._lock:
+            for uid in list(self._handles):
+                self.engine.cancel(uid)
+            self._flush_locked()
+        self._closed = True
+        self._wake.set()
+        if self._pump_task is not None:
+            await self._pump_task
+            self._pump_task = None
+
+    async def drain(self) -> None:
+        """Wait until every admitted request has resolved (finished, shed,
+        or cancelled). Raises the pump's error if stepping died fatally."""
+        while self._handles and self._fatal is None:
+            self._wake.set()
+            await asyncio.sleep(0.001)
+        if self._fatal is not None:
+            raise self._fatal
+
+    # ------------------------------------------------------------- admission
+
+    async def submit(self, prompt, max_new: int, sampling=GREEDY, *,
+                     priority: int = 0,
+                     deadline: float | None = None) -> StreamHandle | Rejected:
+        """Admit a request; returns a ``StreamHandle`` or a structured
+        ``Rejected`` (non-retryable for malformed input, retryable with a
+        backoff hint under load shed). ``deadline`` is a relative TTFT
+        budget in the engine clock's units."""
+        async with self._lock:
+            abs_deadline = None if deadline is None else self.engine.now() + deadline
+            r = self.engine.try_submit(prompt, max_new, sampling,
+                                       priority=priority, deadline=abs_deadline)
+            if isinstance(r, Rejected):
+                return r
+            h = StreamHandle(self, r)
+            self._handles[r] = h
+        self._wake.set()
+        return h
+
+    async def _cancel(self, handle: StreamHandle) -> None:
+        async with self._lock:
+            self.engine.cancel(handle.uid)
+            self._flush_locked()
+            # unknown/already-finished uids resolve here too: never leave a
+            # client awaiting a stream nobody will close
+            if self._handles.pop(handle.uid, None) is not None:
+                handle._close("cancelled")
+
+    # ------------------------------------------------------------------ pump
+
+    async def _pump(self) -> None:
+        loop = asyncio.get_running_loop()
+        while not self._closed:
+            if not (self._handles and self.engine.has_work()):
+                self._wake.clear()
+                # re-check before sleeping: submit may have landed in between
+                if not (self._handles and self.engine.has_work()):
+                    await self._wake.wait()
+                continue
+            async with self._lock:
+                try:
+                    await loop.run_in_executor(
+                        None, self.engine.step_chunk, self.chunk_steps)
+                except PoolExhausted as e:
+                    # terminal (non-retryable) exhaustion: the engine cannot
+                    # make progress at all — fail every live stream with the
+                    # structured census rather than hanging the clients
+                    rej = Rejected("pool_pressure", detail=str(e),
+                                   retryable=e.retryable, occupancy=e.occupancy)
+                    self._fatal = e
+                    for uid, h in list(self._handles.items()):
+                        self.engine.cancel(uid)
+                        h._fail(rej)
+                    self._handles.clear()
+                    return
+                self._flush_locked()
+            await asyncio.sleep(0)  # let clients consume between chunks
+
+    def _flush_locked(self) -> None:
+        """Push per-request token deltas and resolve finished/shed streams.
+        Caller holds the lock."""
+        eng = self.engine
+        for uid, h in self._handles.items():
+            toks = eng.tokens_so_far(uid)
+            for t in toks[h._sent:]:
+                h._push(t)
+            h._sent = len(toks)
+        for uid, g in eng.take_finished().items():
+            h = self._handles.pop(uid, None)
+            if h is not None:
+                for t in g.tokens[h._sent:]:
+                    h._push(t)
+                h._sent = len(g.tokens)
+                h._close(g.finish_reason)
+        for uid, rej in eng.take_shed().items():
+            h = self._handles.pop(uid, None)
+            if h is not None:
+                h._fail(rej)
+
+    # ------------------------------------------------------------- telemetry
+
+    @property
+    def inflight(self) -> int:
+        return len(self._handles)
+
+    def ttft(self, uid: int) -> float | None:
+        """First-token latency for ``uid`` in engine-clock units, once the
+        first token exists (None before)."""
+        return self.engine.ttft.get(uid)

@@ -59,9 +59,41 @@ import numpy as np
 NULL_BLOCK = 0
 
 
+@dataclass(frozen=True)
+class PoolOccupancy:
+    """Point-in-time allocator census, shipped inside ``PoolExhausted`` and
+    shed-load ``Rejected`` responses (DESIGN.md §11) so callers can size
+    their backoff against how full the pool actually is. ``num_blocks``
+    counts usable blocks (the reserved null block excluded); the three
+    states partition it (BlockPool invariant I1)."""
+
+    num_blocks: int
+    num_free: int
+    num_evictable: int
+    num_live: int
+
+    @property
+    def live_fraction(self) -> float:
+        return self.num_live / max(self.num_blocks, 1)
+
+
 class PoolExhausted(RuntimeError):
     """No free block and nothing evictable — every block is held by a live
-    request. The engine surfaces this instead of silently corrupting KV."""
+    request. The engine surfaces this instead of silently corrupting KV.
+
+    Structured, not just a message (DESIGN.md §11): ``retryable`` tells the
+    serving front whether waiting can help — True when live requests will
+    release blocks as they finish (shed-load territory), False when the
+    demand can *never* fit (a sole request larger than the pool — a bug or a
+    misconfiguration, which the chaos harness must not mistake for load).
+    ``occupancy`` carries the ``PoolOccupancy`` census at raise time.
+    """
+
+    def __init__(self, msg: str, *, retryable: bool = True,
+                 occupancy: "PoolOccupancy | None" = None):
+        super().__init__(msg)
+        self.retryable = retryable
+        self.occupancy = occupancy
 
 
 def hash_block(prev_hash: int, tokens) -> int:
@@ -153,10 +185,16 @@ class BlockPool:
     def num_live(self) -> int:
         return int((self.refcount > 0).sum())
 
+    def occupancy(self) -> PoolOccupancy:
+        """Allocator census for structured back-pressure (DESIGN.md §11)."""
+        return PoolOccupancy(self.num_blocks - 1, self.num_free,
+                             self.num_evictable, self.num_live)
+
     def alloc(self) -> int:
         """One exclusive (refcount-1) block; evicts the LRU cached block when
-        the free list is empty. Raises ``PoolExhausted`` when every block is
-        live — callers must treat that as back-pressure, not corruption."""
+        the free list is empty. Raises ``PoolExhausted`` (retryable, with the
+        occupancy census attached) when every block is live — callers must
+        treat that as back-pressure, not corruption."""
         if self._free:
             blk = self._free.popleft()
         elif self._lru:
@@ -165,7 +203,8 @@ class BlockPool:
             self.stats.evictions += 1
         else:
             raise PoolExhausted(
-                f"all {self.num_blocks - 1} usable blocks are referenced by live requests"
+                f"all {self.num_blocks - 1} usable blocks are referenced by live requests",
+                retryable=True, occupancy=self.occupancy(),
             )
         assert blk != NULL_BLOCK and self.refcount[blk] == 0
         self.refcount[blk] = 1

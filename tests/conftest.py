@@ -55,6 +55,20 @@ def rng(test_seed):
     return np.random.default_rng(test_seed)
 
 
+@pytest.fixture(scope="session")
+def smoke_model():
+    """Trained 2-layer smoke model (the bench's recipe, briefly overfit on a
+    periodic stream so greedy margins are confident, not argmax noise).
+    Session-scoped and shared by the differential-fuzz, SLA-scheduler, and
+    chaos suites — training dominates their cost."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+    from bench_serving import make_smoke_model
+
+    cfg, params, loss = make_smoke_model("yi-6b", train_steps=60)
+    assert loss < 0.2, f"smoke model failed to overfit (loss {loss})"
+    return cfg, params
+
+
 @pytest.fixture
 def quantize_pool():
     """fp pool -> (int8 codes, per-(block, kv-head) scales) the way the write

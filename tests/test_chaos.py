@@ -1,0 +1,328 @@
+"""Chaos-injection suite for the serving stack (DESIGN.md §11).
+
+Three layers, all seeded through PYTEST_SEED (failures replay with one env
+var — see conftest):
+
+  * Host chaos — randomized fault schedules (pool exhaustion, mid-stream
+    disconnects, malformed requests, deadline pressure, admission-control
+    rejections) injected through ``runtime.faults.ChaosHarness`` into the
+    pure-host scheduler while the numpy device emulator steps it. After
+    EVERY injected event the full allocator audit runs, and once faults
+    clear the core must drain: every submitted uid resolves to exactly one
+    of {finished, cancelled, shed}, sheds are structured-retryable, and the
+    stats ledger agrees with the harness's own counters.
+
+  * Async frontend chaos — the asyncio serving front over the emulated
+    engine: token streams resolve, mid-stream cancellation releases every
+    block, overload surfaces structured ``Rejected`` (never exceptions),
+    deadline sheds close the stream with finish_reason "shed", and a
+    stalled device step (``slow_steps``) never wedges the event loop —
+    submissions and heartbeats keep running while a chunk drags.
+
+  * Device chaos — the real ``PagedEngine`` on the trained smoke model
+    under a tight pool (forcing preempt-and-recompute) plus injected
+    disconnects and stalled steps: surviving requests must stream
+    bit-exactly the tokens of a fault-free uncontended run, and cancelled
+    requests' partials must be exact prefixes of it (greedy decode is
+    deterministic; faults may truncate it, never corrupt it).
+
+Scale knobs match the fuzzers: FUZZ_TRACES / FUZZ_STEPS (the scheduled
+long-fuzz CI job raises both).
+"""
+
+import asyncio
+import os
+
+import numpy as np
+
+from repro.runtime.engine_core import EngineCore, Rejected
+from repro.runtime.faults import (
+    ChaosHarness,
+    EmulatedEngine,
+    HostDeviceEmulator,
+    audit_block_invariants,
+    slow_steps,
+)
+from repro.runtime.frontend import AsyncFrontend
+from repro.runtime.kv_pool import PoolExhausted
+
+FUZZ_TRACES = int(os.environ.get("FUZZ_TRACES", "4"))
+FUZZ_STEPS = int(os.environ.get("FUZZ_STEPS", "40"))
+
+VOCAB, EOS = 32, 1
+
+
+# ------------------------------------------------------------- host chaos
+
+
+def test_chaos_random_fault_schedules(test_seed):
+    """Random interleavings of valid submissions, pool-exhaustion pins,
+    partial releases, disconnects, malformed batteries, and emulated device
+    chunks — audit after every event; full accounting after recovery."""
+    rng = np.random.default_rng(test_seed)
+    for trace in range(FUZZ_TRACES):
+        num_blocks = int(rng.integers(10, 24))
+        core = EngineCore(
+            max_slots=int(rng.integers(2, 5)), max_seq=48,
+            block_size=int(rng.choice([2, 4])), num_blocks=num_blocks,
+            prefill_chunk=int(rng.choice([4, 8])), eos_id=EOS,
+            max_inflight=None if rng.random() < 0.5 else int(rng.integers(3, 9)),
+            admit_watermark=None if rng.random() < 0.5 else 0.9,
+        )
+        em = HostDeviceEmulator(rng, vocab=VOCAB, eos=EOS)
+        h = ChaosHarness(core, rng)
+        submitted = []
+        for _ in range(FUZZ_STEPS):
+            op = rng.random()
+            if op < 0.30:
+                prompt = [int(t) for t in rng.integers(2, VOCAB, int(rng.integers(2, 9)))]
+                dl = None if rng.random() < 0.7 else core.now() + float(rng.integers(1, 30))
+                r = core.try_submit(prompt, int(rng.integers(1, 10)),
+                                    priority=int(rng.integers(0, 3)), deadline=dl)
+                if isinstance(r, Rejected):
+                    # valid request: only load shed may turn it away, and
+                    # load shed is always structured-retryable with a census
+                    assert r.reason in ("max_inflight", "pool_pressure")
+                    assert r.retryable and r.backoff_hint > 0
+                else:
+                    submitted.append(r)
+            elif op < 0.40:
+                h.exhaust_pool(int(rng.integers(1, num_blocks)))
+            elif op < 0.50:
+                h.release_held(int(rng.integers(1, num_blocks)))
+            elif op < 0.60:
+                h.disconnect_random()
+            elif op < 0.70:
+                h.submit_malformed()
+            else:
+                try:
+                    em.step_chunk(core)
+                except PoolExhausted as e:
+                    # the harness pinned the pool out from under the only
+                    # live request; still structured, and releasing the pins
+                    # must fully recover
+                    assert e.occupancy is not None
+                    h.release_held()
+            h.audit()
+        # recovery: drop every pin, drain to completion
+        h.release_held()
+        for guard in range(2000):
+            if not core.has_work():
+                break
+            em.step_chunk(core)
+            h.audit()
+        else:
+            raise AssertionError("core failed to drain after fault removal")
+        res = core.take_finished()
+        sheds = core.take_shed()
+        assert not set(res) & set(sheds), "a uid resolved twice"
+        assert set(res) | set(sheds) == set(submitted), "requests vanished"
+        for uid, rej in sheds.items():
+            assert rej.reason == "deadline" and rej.retryable and rej.uid == uid
+        assert core.stats["shed"] == len(sheds)
+        assert core.stats["cancelled"] == h.counters["disconnect"]
+        assert not h.held
+        h.audit()
+
+
+# -------------------------------------------------------- frontend chaos
+
+
+def _engine(rng, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("block_size", 4)
+    return EmulatedEngine(rng, vocab=VOCAB, eos=None, **kw)
+
+
+def test_frontend_streams_to_completion(test_seed):
+    """Concurrent streams resolve with the engine's exact tokens and
+    finish_reason; TTFT telemetry lands; no blocks leak."""
+    async def main():
+        eng = _engine(np.random.default_rng(test_seed))
+        async with AsyncFrontend(eng, chunk_steps=2) as fe:
+            h1 = await fe.submit([2] * 6, 12)
+            h2 = await fe.submit([3] * 6, 8, priority=1)
+            t1, t2 = await h1.collect(), await h2.collect()
+            assert len(t1) == 12 and h1.finish_reason == "length"
+            assert len(t2) == 8 and h2.finish_reason == "length"
+            assert fe.ttft(h1.uid) is not None and fe.ttft(h2.uid) is not None
+            assert fe.inflight == 0
+            audit_block_invariants(eng)
+    asyncio.run(main())
+
+
+def test_frontend_cancel_mid_stream_releases_blocks(test_seed):
+    """A client disconnect mid-generation closes the stream with
+    finish_reason "cancelled", releases every block (audit), and leaves the
+    surviving stream untouched."""
+    async def main():
+        eng = _engine(np.random.default_rng(test_seed))
+        chunks_done = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        orig, calls = eng.step_chunk, [0]
+
+        def counting(steps=None):
+            r = orig(steps)
+            calls[0] += 1
+            if calls[0] >= 3:
+                loop.call_soon_threadsafe(chunks_done.set)
+            return r
+
+        eng.step_chunk = counting
+        async with AsyncFrontend(eng, chunk_steps=2) as fe:
+            h1 = await fe.submit([2] * 6, 50)
+            h2 = await fe.submit([3] * 6, 20)
+            await chunks_done.wait()  # h1 is decoding, partial tokens exist
+            await h1.cancel()
+            assert h1.finish_reason == "cancelled"
+            assert 0 < len(h1.tokens) < 50
+            t2 = await h2.collect()
+            assert len(t2) == 20 and h2.finish_reason == "length"
+            await fe.drain()
+            audit_block_invariants(eng)
+    asyncio.run(main())
+
+
+def test_frontend_rejections_are_structured(test_seed):
+    """Overload and malformed input surface as ``Rejected`` values from
+    ``submit`` — retryable-with-backoff vs non-retryable — never as
+    exceptions, and never corrupt in-flight streams."""
+    async def main():
+        eng = _engine(np.random.default_rng(test_seed), max_inflight=1)
+        async with AsyncFrontend(eng, chunk_steps=2) as fe:
+            h1 = await fe.submit([2] * 4, 30)
+            r = await fe.submit([3] * 4, 4)
+            assert isinstance(r, Rejected) and r.reason == "max_inflight"
+            assert r.retryable and r.backoff_hint > 0
+            bad = await fe.submit([], 4)
+            assert isinstance(bad, Rejected) and bad.reason == "invalid"
+            assert not bad.retryable
+            assert len(await h1.collect()) == 30
+            # capacity freed: the retry now lands
+            h3 = await fe.submit([3] * 4, 4)
+            assert not isinstance(h3, Rejected)
+            assert len(await h3.collect()) == 4
+            audit_block_invariants(eng)
+    asyncio.run(main())
+
+
+def test_frontend_deadline_shed_resolves_stream(test_seed):
+    """A queued request whose TTFT deadline lapses behind a slot hog resolves
+    as a closed stream with finish_reason "shed" and the structured
+    retryable ``Rejected`` — the client is never left hanging."""
+    async def main():
+        eng = _engine(np.random.default_rng(test_seed), max_slots=1)
+        async with AsyncFrontend(eng, chunk_steps=4) as fe:
+            hog = await fe.submit([2] * 4, 40)
+            late = await fe.submit([3] * 4, 4, deadline=2.0)
+            toks = await late.collect()
+            assert toks == [] and late.finish_reason == "shed"
+            assert late.rejected is not None
+            assert late.rejected.reason == "deadline" and late.rejected.retryable
+            assert late.rejected.uid == late.uid
+            assert len(await hog.collect()) == 40
+            audit_block_invariants(eng)
+    asyncio.run(main())
+
+
+def test_frontend_survives_stalled_steps(test_seed):
+    """Stalled device chunks must not wedge the loop: a heartbeat coroutine
+    keeps beating and a submission lands *while* a chunk drags, because
+    ``step_chunk`` runs in the executor, off the event loop."""
+    async def main():
+        eng = _engine(np.random.default_rng(test_seed))
+        undo = slow_steps(eng, 0.02, every=1)
+        beats = [0]
+
+        async def heartbeat():
+            while True:
+                beats[0] += 1
+                await asyncio.sleep(0.001)
+
+        async with AsyncFrontend(eng, chunk_steps=2) as fe:
+            beat_task = asyncio.get_running_loop().create_task(heartbeat())
+            h1 = await fe.submit([2] * 6, 16)
+            async for _ in h1:
+                break  # first token: the pump is mid-traffic
+            h2 = await fe.submit([3] * 6, 8)  # submitted between stalls
+            assert not isinstance(h2, Rejected)
+            assert len(await h1.collect()) == 16
+            assert len(await h2.collect()) == 8
+            beat_task.cancel()
+            undo()
+            # ~8+ stalled chunks x 20ms each: a wedged loop would beat ~once
+            assert beats[0] > 5
+            audit_block_invariants(eng)
+    asyncio.run(main())
+
+
+def test_frontend_aclose_cancels_unresolved(test_seed):
+    """Leaving the context with live streams cancels them engine-side (no
+    leaked blocks, no dangling awaiters)."""
+    async def main():
+        eng = _engine(np.random.default_rng(test_seed))
+        async with AsyncFrontend(eng, chunk_steps=1) as fe:
+            h = await fe.submit([2] * 6, 500)
+        assert h.finish_reason == "cancelled"
+        assert await h.collect() == list(h.tokens)  # stream is closed, not hung
+        audit_block_invariants(eng)
+    asyncio.run(main())
+
+
+# --------------------------------------------------------- device chaos
+
+
+def test_device_chaos_survivors_bit_exact(smoke_model, test_seed):
+    """Real engine, tight pool, stalled steps, mid-flight disconnects: every
+    surviving request reproduces the fault-free uncontended run bit-exactly,
+    and every cancelled request's partial is an exact prefix of it."""
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+    from bench_serving import PERIOD, TOK0
+
+    from repro.runtime.engine import PagedEngine
+
+    cfg, params = smoke_model
+    pattern = [int(t) for t in np.arange(48) % PERIOD + TOK0]
+    reqs = [  # shared prefixes force prefix hits + CoW forks under pressure
+        (pattern[:10], 12), (pattern[:14], 12), (pattern[4:14], 12), (pattern[8:18], 12),
+    ]
+
+    def build(num_blocks=None):
+        return PagedEngine(cfg, params, max_slots=3, max_seq=64, block_size=8,
+                           prefill_chunk=8, eos_id=None, seed=0, num_blocks=num_blocks)
+
+    ref = build()  # fully provisioned, fault-free
+    ref_uids = [ref.submit(p, m) for p, m in reqs]
+    ref_out = ref.run()
+
+    eng = build(num_blocks=8)  # 7 usable for ~13 blocks of demand: contention
+    uids = [eng.submit(p, m) for p, m in reqs]
+    undo = slow_steps(eng, 0.002, every=2)
+    cancel_at = {2: uids[1], 5: uids[3]}
+    cancelled = set()
+    for chunk in range(1, 500):
+        if not eng.has_work():
+            break
+        eng.step_chunk()
+        if chunk in cancel_at and eng.cancel(cancel_at[chunk]):
+            cancelled.add(cancel_at[chunk])
+        audit_block_invariants(eng)
+    else:
+        raise AssertionError("chaos run failed to drain")
+    undo()
+    out = eng.run()
+
+    assert cancelled, "trace failed to land any mid-flight disconnect"
+    for uid, ruid in zip(uids, ref_uids):
+        full = ref_out[ruid].tokens
+        if uid in cancelled:
+            assert out[uid].finish_reason == "cancelled"
+            got = out[uid].tokens
+            assert got == full[:len(got)], "cancelled partial diverged from greedy"
+        else:
+            assert out[uid].tokens == full, "survivor lost bit-exact parity"
+            assert len(out[uid].tokens) == 12
+    audit_block_invariants(eng)

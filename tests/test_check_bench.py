@@ -14,7 +14,8 @@ _spec.loader.exec_module(check_bench)
 
 
 def _report(tok_per_s=100.0, agree=1.0, parity=True, step_ms=5.0, reduction=4.0,
-            gather_ms=2.0, exact_tok=125.0, dp_parity=True, dp_hit=0.75, dp_occ=2.5):
+            gather_ms=2.0, exact_tok=125.0, dp_parity=True, dp_hit=0.75, dp_occ=2.5,
+            p99_ttft=28.0, p99_itl=6.0, overload_done=7, shed_retryable=True):
     return {
         "serving": {
             "impls": {
@@ -28,6 +29,13 @@ def _report(tok_per_s=100.0, agree=1.0, parity=True, step_ms=5.0, reduction=4.0,
                 "greedy_parity_vs_single": dp_parity,
                 "aggregate": {"prefix_hit_rate": dp_hit, "mean_occupancy": dp_occ},
                 "per_replica": [{"requests": 6}, {"requests": 6}],
+            },
+            "bursty": {
+                "requests": 12,
+                "p50_ttft_steps": 14.0, "p99_ttft_steps": p99_ttft,
+                "p50_itl_steps": 1.0, "p99_itl_steps": p99_itl,
+                "overload": {"max_inflight": 4, "completed": overload_done,
+                             "shed": 5, "all_shed_retryable": shed_retryable},
             },
         },
         "micro": {
@@ -109,6 +117,24 @@ def test_parity_and_ratio_metrics_are_exact_or_better():
     assert any("agreement_vs_exact" in f for f in fails)
     fails, _ = check_bench.compare(_report(), _report(reduction=3.5), 0.2)
     assert sum("bytes_reduction_x" in f for f in fails) == 2
+
+
+def test_bursty_latency_ceilings_are_exact_or_lower():
+    """Tick-clocked TTFT/ITL percentiles are deterministic: any rise fails,
+    any improvement passes — direction is the mirror image of "floor"."""
+    fails, _ = check_bench.compare(_report(), _report(p99_ttft=29.0), 0.2)
+    assert any("p99_ttft_steps" in f and "rose above" in f for f in fails)
+    fails, _ = check_bench.compare(_report(), _report(p99_itl=7.0), 0.2)
+    assert any("p99_itl_steps" in f for f in fails)
+    fails, _ = check_bench.compare(_report(), _report(p99_ttft=20.0, p99_itl=2.0), 0.2)
+    assert fails == []
+
+
+def test_overload_arm_is_gated():
+    fails, _ = check_bench.compare(_report(), _report(overload_done=6), 0.2)
+    assert any("overload.completed" in f for f in fails)
+    fails, _ = check_bench.compare(_report(), _report(shed_retryable=False), 0.2)
+    assert any("all_shed_retryable" in f for f in fails)
 
 
 def test_missing_gated_metric_fails_new_metric_notes():

@@ -5,147 +5,75 @@ report prints the derived seed, so any counterexample replays with one env
 var):
 
   * Host fuzz — random admission / chunked-prefill / CoW-fork / preempt /
-    eviction schedules driven through a pure-host ``EngineCore`` with a
-    numpy emulation of the device decode chunk. After EVERY step the full
-    allocator state is audited against the BlockPool invariants I1-I4
-    (DESIGN.md §3): refcounts equal table references, free/LRU/live
-    partition the pool, the prefix index and its reverse map agree, the
-    null block is never touched, and queued CoW destinations are never
-    pending a scale reset.
+    eviction / *cancellation* schedules driven through a pure-host
+    ``EngineCore`` with a numpy emulation of the device decode chunk
+    (``runtime.faults.HostDeviceEmulator``). After EVERY step — and after
+    every cancellation — the full allocator state is audited against the
+    BlockPool invariants I1-I4 (DESIGN.md §3) via
+    ``runtime.faults.audit_block_invariants``: refcounts equal table
+    references, free/LRU/live partition the pool, the prefix index and its
+    reverse map agree, the null block is never touched, and queued CoW
+    destinations are never pending a scale reset.
 
-  * Differential fuzz — the same randomized request trace run through real
-    ``PagedEngine`` instances across the fp32/bf16/int8/int4 pool formats,
-    fused and gather paths: fused-vs-gather greedy tokens must match
-    exactly per format (same dequant arithmetic, kernel parity <= 1e-5,
-    trained smoke-model margins — DESIGN.md §6/§10), quantized formats
-    must agree with the fp32 pool on nearly every token, and the allocator
-    invariants hold after every engine step.
+  * Differential fuzz — the same randomized request trace (submissions AND
+    mid-flight cancel events) run through real ``PagedEngine`` instances
+    across the fp32/bf16/int8/int4 pool formats, fused and gather paths:
+    fused-vs-gather greedy tokens must match exactly per format (same
+    dequant arithmetic, kernel parity <= 1e-5, trained smoke-model margins
+    — DESIGN.md §6/§10), quantized formats must agree with the fp32 pool on
+    nearly every token, and the allocator invariants hold after every
+    engine step and cancellation. Cancel timing is measured in trace steps
+    and the engines run with eos_id=None, so scheduling (and therefore each
+    cancelled request's partial length) is identical across formats — only
+    token *values* may differ.
 
 Scale knobs for the scheduled long-fuzz CI job: FUZZ_TRACES multiplies the
 host-fuzz trace count, FUZZ_STEPS the per-trace step count.
 """
 
 import os
-import sys
 
 import numpy as np
 import pytest
 
 from conftest import PYTEST_SEED, derive_seed
 from repro.runtime.engine_core import EngineCore
-from repro.runtime.kv_pool import NULL_BLOCK, PoolExhausted
+from repro.runtime.faults import HostDeviceEmulator, audit_block_invariants
+from repro.runtime.kv_pool import PoolExhausted
 
 FUZZ_TRACES = int(os.environ.get("FUZZ_TRACES", "4"))
 FUZZ_STEPS = int(os.environ.get("FUZZ_STEPS", "40"))
 
-
-# ------------------------------------------------------------ invariant audit
-
-
-def check_invariants(core: EngineCore) -> None:
-    """Audit the full allocator + scheduler state (BlockPool I1-I4 plus the
-    engine-core bookkeeping that rides on them). Cheap enough to run after
-    every fuzz step."""
-    pool = core.pool
-    n = pool.num_blocks
-    ref = np.asarray(pool.refcount)
-    free = list(pool._free)
-    lru = list(pool._lru)
-
-    # I4: the null block is permanently reserved
-    assert NULL_BLOCK not in free and NULL_BLOCK not in lru
-    assert ref[NULL_BLOCK] == 0
-
-    # I1: free / evictable(LRU) / live partition the usable ids exactly
-    assert len(set(free)) == len(free), "duplicate ids on the free list"
-    assert len(set(lru)) == len(lru), "duplicate ids on the LRU"
-    live = {b for b in range(1, n) if ref[b] > 0}
-    assert live.isdisjoint(free), f"live blocks on the free list: {live & set(free)}"
-    assert live.isdisjoint(lru), f"live blocks on the LRU: {live & set(lru)}"
-    assert set(free).isdisjoint(lru)
-    assert live | set(free) | set(lru) == set(range(1, n)), "pool partition leak"
-
-    # I3: evictable blocks are refcount-0 AND published (else they'd be free)
-    for b in lru:
-        assert ref[b] == 0 and b in pool._hash_of
-
-    # I2 bookkeeping: index and reverse map agree
-    for h, b in pool._index.items():
-        assert pool._hash_of.get(b) == h, f"index/hash_of disagree on block {b}"
-
-    # refcount accounting: every reference is exactly one slot-table entry
-    expected = np.zeros(n, np.int64)
-    for i, s in enumerate(core._slots):
-        if s.free:
-            continue
-        for b in s.table:
-            assert b != NULL_BLOCK
-            expected[b] += 1
-        # the device mirror matches host truth
-        t = core._tables[i]
-        assert list(t[: len(s.table)]) == list(s.table)
-        assert (t[len(s.table):] == NULL_BLOCK).all()
-    np.testing.assert_array_equal(
-        ref[1:], expected[1:],
-        err_msg="refcounts drifted from slot-table references",
-    )
-
-    # queued CoW destinations must not be pending a scale reset (the copy
-    # delivers their valid grid; a later reset would zero it)
-    for _, dst in core.pending_copies:
-        assert dst not in core._fresh_blocks
+# the audit moved to runtime/faults.py so the chaos suite shares it; the
+# local name is kept — half this file reads as "step, then check_invariants"
+check_invariants = audit_block_invariants
 
 
 # ----------------------------------------------------------------- host fuzz
 
 
 def _host_step_chunk(core: EngineCore, rng, vocab: int, eos: int) -> None:
-    """One PagedEngine.step_chunk with the device replaced by a numpy decode
-    emulation that honors decode_scan's visible semantics (emission masks,
-    budget/eos/max_seq finish transitions)."""
-    core._admit()
-    for i, s in enumerate(core._slots):
-        if not s.free and s.prefilling:
-            plan = core.plan_prefill_chunk(i)
-            core.take_pending_copies()
-            core.take_fresh_scale_ids()
-            if core.commit_prefill_chunk(i, plan.n):
-                core._complete_first(i, s.req, int(rng.integers(0, vocab)))
-    if core.num_active == 0:
-        return
-    steps = core._clamp_steps(int(rng.integers(1, core.steps_per_sync + 1)))
-    core._reserve_chunk_blocks(steps)
-    if core.num_active == 0:
-        return
-    core.take_pending_copies()
-    core.take_fresh_scale_ids()
-    S = core.max_slots
-    lens = core.kv_lens.copy()
-    active = core._active.copy()
-    budget = core._budget.copy()
-    tokens = core._tokens.copy()
-    emitted = np.full((steps, S), -1, np.int64)
-    masks = np.zeros((steps, S), bool)
-    was_active = core._active.copy()
-    for t in range(steps):
-        for b in range(S):
-            if not active[b]:
-                continue
-            nxt = int(rng.integers(0, vocab))
-            masks[t, b] = True
-            emitted[t, b] = nxt
-            tokens[b, 0] = nxt
-            lens[b] += 1
-            budget[b] -= 1
-            if nxt == eos or budget[b] <= 0 or lens[b] >= core.max_seq:
-                active[b] = False
-    core._absorb_chunk(tokens, lens, active, budget, emitted, masks, was_active)
+    """One emulated PagedEngine.step_chunk (see HostDeviceEmulator)."""
+    HostDeviceEmulator(rng, vocab=vocab, eos=eos).step_chunk(core)
+
+
+def _cancel_random(core: EngineCore, rng) -> bool:
+    """Cancel one uniformly-chosen in-flight request (queued, prefilling, or
+    decoding); no-op when nothing is in flight."""
+    uids = [s.uid for s in core._slots if not s.free]
+    uids += [r.uid for r in core._queue]
+    if not uids:
+        return False
+    assert core.cancel(int(rng.choice(uids)))
+    return True
 
 
 def test_engine_core_invariants_under_random_schedules(test_seed):
     """Random traces: bursty submissions (shared prefixes force CoW forks and
     prefix hits), tight pools (forcing eviction and preempt-and-recompute),
-    random chunk sizes — with the full allocator audit after every step."""
+    random chunk sizes, random mid-flight cancellations — with the full
+    allocator audit after every step AND after every cancellation
+    (refcount-vs-table equality is exactly where a cancel leak would show)."""
     rng = np.random.default_rng(test_seed)
     vocab, eos = 40, 1
     for trace in range(FUZZ_TRACES):
@@ -162,7 +90,7 @@ def test_engine_core_invariants_under_random_schedules(test_seed):
                           quantized=bool(rng.integers(0, 2)))
         prefixes = [tuple(rng.integers(2, vocab, int(rng.integers(0, 17))))
                     for _ in range(3)]
-        submitted = 0
+        submitted = cancelled = 0
         for step in range(FUZZ_STEPS):
             for _ in range(int(rng.integers(0, 3))):
                 pre = prefixes[int(rng.integers(0, len(prefixes)))]
@@ -181,6 +109,9 @@ def test_engine_core_invariants_under_random_schedules(test_seed):
                 check_invariants(core)
                 break
             check_invariants(core)
+            if rng.random() < 0.25 and _cancel_random(core, rng):
+                cancelled += 1
+                check_invariants(core)
         else:
             while core.has_work():
                 try:
@@ -246,31 +177,33 @@ def test_fresh_scale_queue_never_contains_fork_destinations(test_seed):
 # ---------------------------------------------------------- differential fuzz
 
 
-@pytest.fixture(scope="module")
-def smoke_model():
-    """2-layer smoke model briefly overfit on a periodic stream (the bench's
-    recipe): random-init logits are argmax noise — quantization-agreement
-    fuzzing needs confident greedy margins to measure the pools, not ties."""
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
-    from bench_serving import make_smoke_model
-
-    cfg, params, loss = make_smoke_model("yi-6b", train_steps=60)
-    assert loss < 0.2, f"smoke model failed to overfit (loss {loss})"
-    return cfg, params
+# quantization-agreement fuzzing needs confident greedy margins to measure
+# the pools, not argmax ties: the session-scoped trained `smoke_model`
+# fixture lives in conftest.py (shared with the SLA and chaos suites)
 
 
-def _run_trace(cfg, params, trace, *, kv_dtype, fused):
+def _run_trace(cfg, params, trace, *, kv_dtype, fused, cancels=()):
+    """Replay a (submission, cancel) schedule. ``cancels`` maps step index ->
+    list of submission ordinals to cancel right after that step; uids are
+    assigned in submission order, identically across engine configs, so the
+    same schedule cancels the same logical requests everywhere. The
+    allocator audit runs after every step and every cancellation."""
     from repro.runtime.engine import PagedEngine
     from repro.runtime.serve import KV_DTYPES
 
+    cancels = dict(cancels)
     eng = PagedEngine(cfg, params, max_slots=3, max_seq=64, block_size=8,
                       prefill_chunk=16, eos_id=None, seed=0, fused=fused,
                       cache_dtype=KV_DTYPES[kv_dtype])
-    for batch in trace:
+    uids: list[int] = []
+    for step, batch in enumerate(trace):
         for prompt, max_new in batch:
-            eng.submit(prompt, max_new)
+            uids.append(eng.submit(prompt, max_new))
         eng.step_chunk()
         check_invariants(eng)
+        for ordinal in cancels.get(step, ()):
+            eng.cancel(uids[ordinal])  # False when already finished — also
+            check_invariants(eng)      # a legal (deterministic) outcome
     while eng.has_work():
         eng.step_chunk()
         check_invariants(eng)
@@ -284,13 +217,19 @@ def _make_trace(rng, vocab: int, n_requests: int = 5):
     agreement floors against the fp32 pool need in-distribution margins
     (random tokens collapse argmax margins to the quantizer's noise floor;
     see the smoke_model fixture), and the ragged cut/rotation still
-    diversifies block layouts and prefix-cache hits across seeds."""
+    diversifies block layouts and prefix-cache hits across seeds.
+
+    Also emits cancel/abort events: each submission may be scheduled for
+    cancellation a few steps after it lands, so the differential fuzzer
+    covers mid-flight removal (queued, prefilling, and decoding victims).
+    Returns (trace, cancels) in ``_run_trace``'s schedule format."""
     del vocab  # prompts come from the trained pattern, not the full vocab
     from bench_serving import PERIOD, TOK0
 
     pattern = [int(t) for t in np.arange(48) % PERIOD + TOK0]
     prefix = pattern[:12]
-    trace, left = [], n_requests
+    trace, left, ordinal = [], n_requests, 0
+    cancels: dict[int, list[int]] = {}
     while left > 0:
         k = int(min(left, rng.integers(0, 3)))
         batch = []
@@ -301,25 +240,34 @@ def _make_trace(rng, vocab: int, n_requests: int = 5):
             n_body = int(rng.integers(4, 16))
             body = pattern[cut : cut + n_body]
             batch.append((prefix[:cut] + body, int(rng.integers(4, 10))))
+            if rng.random() < 0.3:  # mid-flight abort, 0-2 steps later
+                when = len(trace) + int(rng.integers(0, 3))
+                cancels.setdefault(when, []).append(ordinal)
+            ordinal += 1
             left -= 1
         trace.append(batch)
-    return trace
+    return trace, cancels
 
 
 def test_differential_pools_fused_vs_gather_same_trace(smoke_model, test_seed):
-    """One randomized trace through every pool format x path: fused and
-    gather must emit identical greedy tokens per format, and the quantized
-    pools must track the fp32 pool's tokens (the bench gates the exact
-    agreement floors; here the trained margins make disagreement a bug
-    signal, not noise)."""
+    """One randomized trace (with mid-flight cancels) through every pool
+    format x path: fused and gather must emit identical greedy tokens per
+    format, and the quantized pools must track the fp32 pool's tokens (the
+    bench gates the exact agreement floors; here the trained margins make
+    disagreement a bug signal, not noise). With eos_id=None and step-indexed
+    cancels, every engine produces the same per-request token *counts* —
+    cancelled partials included — so the flat comparison stays aligned."""
     cfg, params = smoke_model
     rng = np.random.default_rng(test_seed)
-    trace = _make_trace(rng, cfg.vocab_size)
-    ref = _run_trace(cfg, params, trace, kv_dtype="fp32", fused=False)
+    trace, cancels = _make_trace(rng, cfg.vocab_size)
+    ref = _run_trace(cfg, params, trace, kv_dtype="fp32", fused=False,
+                     cancels=cancels)
     flat_ref = [t for uid in sorted(ref) for t in ref[uid]]
     for kv_dtype in ("fp32", "bf16", "int8", "int4"):
-        gather = _run_trace(cfg, params, trace, kv_dtype=kv_dtype, fused=False)
-        fused = _run_trace(cfg, params, trace, kv_dtype=kv_dtype, fused=True)
+        gather = _run_trace(cfg, params, trace, kv_dtype=kv_dtype, fused=False,
+                            cancels=cancels)
+        fused = _run_trace(cfg, params, trace, kv_dtype=kv_dtype, fused=True,
+                           cancels=cancels)
         assert gather == fused, (
             f"[seed {test_seed}] kv_dtype={kv_dtype}: fused and gather paths "
             f"diverged on the same trace"

@@ -1,0 +1,286 @@
+"""Priority/SLA scheduler tests (DESIGN.md §11): priority classes, TTFT
+deadlines, deadline-aware preemption, and admission control.
+
+Policy tests run against the pure-host ``EngineCore`` with the numpy device
+emulator from ``runtime/faults.py`` — no jax, fuzz-speed. The greedy-parity
+test at the bottom runs the real ``PagedEngine`` on the trained smoke model:
+an adversarial trace where a low-priority long request is preempted for a
+high-priority arrival must still reproduce the uncontended run's tokens
+bit-exactly (preempt-and-recompute is exact — DESIGN.md §3) with no block
+leaks (``audit_block_invariants``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.runtime.engine_core import (
+    AdmissionRejected,
+    EngineCore,
+    Rejected,
+    Request,
+)
+from repro.runtime.faults import HostDeviceEmulator, audit_block_invariants
+
+VOCAB = 40
+
+
+def _core(**kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("eos_id", None)
+    return EngineCore(**kw)
+
+
+def _drain(core, em, limit=400):
+    for _ in range(limit):
+        if not core.has_work():
+            return
+        em.step_chunk(core)
+    raise AssertionError(f"engine did not drain in {limit} emulated chunks")
+
+
+# ------------------------------------------------------------- queue ordering
+
+
+def test_queue_orders_priority_classes_fifo_within_class(rng):
+    core = _core(max_slots=1)
+    a = core.submit([1, 2], 4, priority=1)
+    b = core.submit([3, 4], 4, priority=0)
+    c = core.submit([5, 6], 4, priority=1)
+    d = core.submit([7, 8], 4, priority=0)
+    assert [r.uid for r in core._queue] == [b, d, a, c]
+    assert core._queue[0].uid == b  # peek surface used by engine tests
+    assert len(core._queue) == 4 and bool(core._queue)
+
+
+def test_default_priority_is_pure_fifo(rng):
+    core = _core(max_slots=1)
+    uids = [core.submit([1, 2, 3], 4) for _ in range(5)]
+    assert [r.uid for r in core._queue] == uids
+
+
+def test_continuation_reenters_ahead_of_its_class():
+    """A preempted continuation re-sorts by its original (small) uid, so it
+    beats later arrivals of the same class — the appendleft semantics the
+    preempt-and-recompute mechanism was built on."""
+    core = _core(max_slots=1)
+    core._next_uid = 5  # uid 0 was "admitted" before the later arrivals
+    late = core.submit([1, 2], 4, priority=1)
+    cont = Request(0, (1, 2, 3), 2, priority=1)  # uid 0 < late
+    core._queue.appendleft(cont)
+    assert [r.uid for r in core._queue] == [0, late]
+
+
+# --------------------------------------------------------- priority preemption
+
+
+def test_high_priority_preempts_low_at_admission(rng):
+    core = _core(max_slots=2)
+    em = HostDeviceEmulator(rng, vocab=VOCAB, eos=None)
+    u0 = core.submit([2] * 8, 30, priority=5)
+    u1 = core.submit([3] * 8, 30, priority=5)
+    em.step_chunk(core)
+    assert core.num_active == 2
+    hi = core.submit([4] * 8, 5, priority=0)
+    em.step_chunk(core)
+    assert core.stats["preemptions"] >= 1, "high-priority arrival did not evict"
+    assert any(not s.free and s.uid == hi for s in core._slots)
+    audit_block_invariants(core)
+    _drain(core, em)
+    res = core.run()
+    assert set(res) == {u0, u1, hi}
+    # preempt-and-recompute: every request still gets its full budget
+    assert [len(res[u].tokens) for u in (u0, u1, hi)] == [30, 30, 5]
+    audit_block_invariants(core)
+
+
+def test_equal_priority_arrivals_never_preempt(rng):
+    core = _core(max_slots=1)
+    em = HostDeviceEmulator(rng, vocab=VOCAB, eos=None)
+    core.submit([2] * 8, 30, priority=1)
+    em.step_chunk(core)
+    core.submit([3] * 8, 5, priority=1)  # same class: waits its turn
+    em.step_chunk(core)
+    assert core.stats["preemptions"] == 0
+    _drain(core, em)
+    assert core.stats["preemptions"] == 0
+
+
+def test_mid_prefill_slot_is_preemptable(rng):
+    """A prefilling slot holds blocks but produced nothing — it must be a
+    legal victim, and its continuation is the original request verbatim
+    (not a stale-budget corpse)."""
+    core = _core(max_slots=1, max_seq=256, prefill_chunk=4)
+    em = HostDeviceEmulator(rng, vocab=VOCAB, eos=None)
+    lo = core.submit([2] * 40, 4, priority=5)
+    em.step_chunk(core)  # one 4-token chunk of 40 — still prefilling
+    assert core._slots[0].prefilling
+    hi = core.submit([3] * 4, 3, priority=0)
+    em.step_chunk(core)
+    assert core.stats["preemptions"] == 1
+    audit_block_invariants(core)
+    _drain(core, em)
+    res = core.run()
+    assert len(res[lo].tokens) == 4 and len(res[hi].tokens) == 3
+    audit_block_invariants(core)
+
+
+def test_victim_rank_orders_priority_then_slack(rng):
+    """Preemption policy: class first, then deadline slack (none = infinite),
+    then newest — under max(), the no-deadline newest low-priority slot goes
+    first and the tight-deadline urgent slot goes last."""
+    core = _core(max_slots=3)
+    em = HostDeviceEmulator(rng, vocab=VOCAB, eos=None)
+    u0 = core.submit([2] * 4, 20, priority=0, deadline=10.0)
+    u1 = core.submit([3] * 4, 20, priority=0, deadline=50.0)
+    u2 = core.submit([4] * 4, 20, priority=0)
+    em.step_chunk(core, steps=1)
+    slot_of = {core._slots[i].uid: i for i in range(3) if not core._slots[i].free}
+    assert set(slot_of) == {u0, u1, u2}
+    order = sorted(slot_of.values(), key=core._victim_rank)
+    assert [core._slots[i].uid for i in order] == [u0, u1, u2]
+    # priority dominates slack: make the tight-deadline slot a worse class
+    core._slots[slot_of[u0]].req = Request(u0, (2,) * 4, 20, priority=7, deadline=10.0)
+    order = sorted(slot_of.values(), key=core._victim_rank)
+    assert [core._slots[i].uid for i in order] == [u1, u2, u0]
+
+
+# ------------------------------------------------------------ deadline sheds
+
+
+def test_expired_deadline_sheds_with_structured_rejection(rng):
+    core = _core(max_slots=1)
+    em = HostDeviceEmulator(rng, vocab=VOCAB, eos=None)
+    u0 = core.submit([2] * 4, 30)
+    em.step_chunk(core)
+    late = core.submit([3] * 4, 4, deadline=core.now() + 2.0)  # 2-tick TTFT budget
+    for _ in range(20):
+        em.step_chunk(core)
+        if late in core.sheds:
+            break
+    sheds = core.take_shed()
+    assert late in sheds
+    r = sheds[late]
+    assert r.reason == "deadline" and r.retryable and r.uid == late
+    assert r.backoff_hint > 0 and r.occupancy is not None
+    assert core.stats["shed"] == 1
+    assert late not in [q.uid for q in core._queue]
+    assert core.take_shed() == {}  # drains on take
+    _drain(core, em)
+    res = core.run()
+    assert len(res[u0].tokens) == 30  # the punctual request is untouched
+    audit_block_invariants(core)
+
+
+def test_preempted_continuation_survives_expired_deadline(rng):
+    """TTFT deadlines gate *first-token* latency: a request that already
+    produced tokens and was then preempted must not be shed when its
+    deadline lapses mid-recompute — its admission was already honored."""
+    core = _core(max_slots=1)
+    em = HostDeviceEmulator(rng, vocab=VOCAB, eos=None)
+    lo = core.submit([2] * 4, 25, priority=5, deadline=core.now() + 50.0)
+    em.step_chunk(core, steps=2)  # first token lands well inside the deadline
+    assert any(not s.free and s.uid == lo for s in core._slots)
+    hi = core.submit([3] * 4, 30, priority=0)
+    em.step_chunk(core)  # preempts lo; its continuation re-queues
+    assert core.stats["preemptions"] == 1
+    for _ in range(60):  # run the clock far past lo's deadline
+        if not core.has_work():
+            break
+        em.step_chunk(core)
+    res = core.run()
+    assert core.stats["shed"] == 0 and lo in res and hi in res
+    assert len(res[lo].tokens) == 25 and len(res[hi].tokens) == 30
+    audit_block_invariants(core)
+
+
+# --------------------------------------------------------- admission control
+
+
+def test_try_submit_sheds_at_max_inflight_with_backoff(rng):
+    core = _core(max_slots=4, max_inflight=2)
+    em = HostDeviceEmulator(rng, vocab=VOCAB, eos=None)
+    a = core.try_submit([1, 2], 4)
+    b = core.try_submit([1, 2], 4)
+    assert isinstance(a, int) and isinstance(b, int)
+    r = core.try_submit([1, 2], 4)
+    assert isinstance(r, Rejected)
+    assert r.reason == "max_inflight" and r.retryable
+    assert r.backoff_hint > 0 and r.occupancy is not None
+    with pytest.raises(AdmissionRejected) as ei:  # raising surface agrees
+        core.submit([1, 2], 4)
+    assert ei.value.rejected.reason == "max_inflight"
+    _drain(core, em)
+    core.run()
+    assert isinstance(core.try_submit([1, 2], 4), int)  # capacity came back
+
+
+def test_try_submit_malformed_is_nonretryable(rng):
+    core = _core()
+    for prompt, max_new in ([], 4), ([1] * 64, 4), ([1], 0):
+        r = core.try_submit(prompt, max_new)
+        assert isinstance(r, Rejected)
+        assert r.reason == "invalid" and not r.retryable
+    assert core._in_system() == 0
+
+
+def test_admit_watermark_sheds_under_pool_pressure(rng):
+    core = _core(max_slots=4, max_seq=32, num_blocks=13, admit_watermark=0.5)
+    em = HostDeviceEmulator(rng, vocab=VOCAB, eos=None)
+    u0 = core.submit([2] * 28, 3)  # 7 of 12 usable blocks -> 0.58 live
+    em.step_chunk(core, steps=1)
+    r = core.try_submit([3] * 4, 4)
+    assert isinstance(r, Rejected)
+    assert r.reason == "pool_pressure" and r.retryable
+    assert r.occupancy is not None and r.occupancy.live_fraction >= 0.5
+    _drain(core, em)
+    res = core.run()
+    assert len(res[u0].tokens) == 3
+    # finished blocks parked on the LRU are evictable, not live: admission resumes
+    assert isinstance(core.try_submit([3] * 4, 4), int)
+
+
+# ----------------------------------------------- real-engine greedy parity
+
+
+# the trained `smoke_model` fixture is session-scoped in conftest.py (shared
+# with the differential-fuzz and chaos suites)
+
+
+def test_priority_preemption_keeps_greedy_parity(smoke_model):
+    """Adversarial trace on the real engine: a low-priority long request is
+    preempted (pool pressure + a high-priority arrival) and must still emit
+    the exact tokens of an uncontended run — and the high-priority request's
+    tokens too — with no block leaks."""
+    from bench_serving import PERIOD, TOK0
+
+    from repro.runtime.engine import PagedEngine
+
+    cfg, params = smoke_model
+    pattern = [int(t) for t in np.arange(48) % PERIOD + TOK0]
+    lo_prompt, lo_new = pattern[:20], 24
+    hi_prompt, hi_new = pattern[5:13], 16
+
+    def build(num_blocks=None):
+        return PagedEngine(cfg, params, max_slots=2, max_seq=64, block_size=8,
+                           prefill_chunk=16, eos_id=None, seed=0,
+                           num_blocks=num_blocks)
+
+    ref = build()  # fully provisioned: no contention possible
+    r_lo = ref.submit(lo_prompt, lo_new)
+    r_hi = ref.submit(hi_prompt, hi_new)
+    ref_out = ref.run()
+
+    eng = build(num_blocks=7)  # 6 usable: exactly the long request's final need
+    lo = eng.submit(lo_prompt, lo_new, priority=5)
+    eng.step_chunk()
+    eng.step_chunk()  # lo is decoding and holds most of the pool
+    hi = eng.submit(hi_prompt, hi_new, priority=0, deadline=eng.now() + 100.0)
+    out = eng.run()
+    assert eng.stats["preemptions"] >= 1, "trace failed to force a preemption"
+    assert eng.stats["shed"] == 0
+    assert out[lo].tokens == ref_out[r_lo].tokens, "low-priority parity broke"
+    assert out[hi].tokens == ref_out[r_hi].tokens, "high-priority parity broke"
+    assert len(out[lo].tokens) == lo_new and len(out[hi].tokens) == hi_new
+    audit_block_invariants(eng)

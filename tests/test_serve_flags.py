@@ -12,7 +12,8 @@ from repro.launch.serve import validate_serve_args  # noqa: E402
 
 
 def _args(**kw):
-    base = dict(paged=False, fused=None, impl="exaq", kv_dtype="bf16", dp=1, tp=1)
+    base = dict(paged=False, fused=None, impl="exaq", kv_dtype="bf16", dp=1, tp=1,
+                online=False, priority_classes=1, deadline_ms=0, max_inflight=0)
     base.update(kw)
     return Namespace(**base)
 
@@ -21,6 +22,8 @@ def test_defaults_pass():
     validate_serve_args(_args())
     validate_serve_args(_args(paged=True, fused=True, kv_dtype="int8", dp=2, tp=2),
                         device_count=4)
+    validate_serve_args(_args(paged=True, online=True, priority_classes=3,
+                              deadline_ms=250, max_inflight=8))
 
 
 @pytest.mark.parametrize("kw,msg", [
@@ -32,6 +35,14 @@ def test_defaults_pass():
     (dict(tp=2), "--paged"),
     (dict(dp=0), ">= 1"),
     (dict(tp=-1), ">= 1"),
+    (dict(online=True), "--paged"),
+    (dict(paged=True, online=True, dp=2), "--dp"),
+    (dict(paged=True, online=True, priority_classes=0), ">= 1"),
+    (dict(paged=True, online=True, deadline_ms=-1), ">= 0"),
+    (dict(paged=True, online=True, max_inflight=-4), ">= 0"),
+    (dict(paged=True, priority_classes=2), "--online"),
+    (dict(paged=True, deadline_ms=100), "--online"),
+    (dict(paged=True, max_inflight=4), "--online"),
 ])
 def test_rejections_name_the_fix(kw, msg):
     with pytest.raises(SystemExit, match=msg):

@@ -27,6 +27,10 @@ informational context. Per-metric rules:
     seed/toolchain, so any dip is a real regression. This includes the
     data-parallel fleet metrics (`serving.dp.*`): replica dispatch is
     deterministic, so the aggregated hit rate and occupancy are too.
+  * the bursty-trace latency metrics (`serving.bursty.*_steps`) are
+    exact-or-lower ("ceiling"): TTFT and inter-token latency are measured
+    in deterministic scheduler ticks, not wall clock, so any rise is a
+    real scheduling regression, and improvements always pass.
 
 Metrics in the baseline that no rule matches are informational. Metrics the
 rules match that *disappear* from a fresh run fail (a silently dropped
@@ -73,7 +77,8 @@ DERIVED = [
 ]
 
 # (dotted-path pattern, rule). Rules: "higher" / "lower" are ratio-tolerant
-# in one direction; "floor" is exact-or-better; "bool" must stay truthy.
+# in one direction; "floor" is exact-or-better; "ceiling" is exact-or-lower
+# (deterministic step-clocked latencies); "bool" must stay truthy.
 SPEC = [
     ("serving.impls.*.tok_per_s_rel_exact", "higher"),
     ("serving.impls.*.agreement_vs_exact", "floor"),
@@ -95,6 +100,12 @@ SPEC = [
     ("serving.dp.greedy_parity_vs_single", "bool"),
     ("serving.dp.aggregate.prefix_hit_rate", "floor"),
     ("serving.dp.aggregate.mean_occupancy", "floor"),
+    ("serving.bursty.p50_ttft_steps", "ceiling"),
+    ("serving.bursty.p99_ttft_steps", "ceiling"),
+    ("serving.bursty.p50_itl_steps", "ceiling"),
+    ("serving.bursty.p99_itl_steps", "ceiling"),
+    ("serving.bursty.overload.completed", "floor"),
+    ("serving.bursty.overload.all_shed_retryable", "bool"),
 ]
 FLOOR_EPS = 1e-9  # fp-serialization slack for the exact-or-better rules
 
@@ -160,6 +171,8 @@ def compare(
             failures.append(f"{path}: {new_f:.4g} rose >{lat_tol:.0%} above baseline {base_f:.4g}")
         elif rule == "floor" and new_f < base_f - FLOOR_EPS:
             failures.append(f"{path}: {new_f:.6g} regressed below baseline {base_f:.6g}")
+        elif rule == "ceiling" and new_f > base_f + FLOOR_EPS:
+            failures.append(f"{path}: {new_f:.6g} rose above baseline {base_f:.6g}")
     for path in sorted(set(fresh_flat) - set(base_flat)):
         if rule_for(path) is not None:
             notes.append(f"{path}: new gated metric not in baseline — refresh it with --update")
@@ -217,8 +230,8 @@ def main() -> int:
     n_gated = sum(1 for p in derive(flatten(baseline)) if rule_for(p) is not None)
     print(
         f"bench OK: {n_gated} gated metrics within tolerance "
-        f"(throughput -{args.tolerance:.0%}, parity/ratio/occupancy exact-or-better; "
-        f"wall-clock latency ratios informational)"
+        f"(throughput -{args.tolerance:.0%}, parity/ratio/occupancy exact-or-better, "
+        f"step-clocked latency exact-or-lower; wall-clock latency ratios informational)"
     )
     return 0
 
