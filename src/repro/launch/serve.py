@@ -72,6 +72,18 @@ def validate_serve_args(args, device_count: int | None = None):
             f"only {device_count} visible (try XLA_FLAGS="
             f"--xla_force_host_platform_device_count=N on CPU)"
         )
+    if args.spec_k < 0:
+        raise SystemExit(f"--spec-k must be >= 0, got {args.spec_k}")
+    if args.spec_k and not args.paged:
+        raise SystemExit(
+            "--spec-k drafts against the paged pool's branch forks "
+            "(DESIGN.md §12); add --paged"
+        )
+    if args.spec_k and args.temperature > 0:
+        raise SystemExit(
+            "--spec-k is greedy-only (the accept rule compares exact argmaxes, "
+            "DESIGN.md §12); drop --temperature"
+        )
     if args.online and not args.paged:
         raise SystemExit(
             "--online drives the paged engine's streaming/cancellation surface "
@@ -184,6 +196,13 @@ def main():
                     help="tensor-parallel shards per replica: block pool split on "
                          "the kv-head axis over the 'model' mesh axis (paged; "
                          "DESIGN.md §9)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft up to K tokens per slot per "
+                         "round and verify them in one fused paged-prefill call "
+                         "(paged + greedy only; 0 = off; DESIGN.md §12)")
+    ap.add_argument("--drafter", default="ngram", choices=["ngram"],
+                    help="draft proposer for --spec-k: 'ngram' reuses the longest "
+                         "matching suffix of the request's own context")
     ap.add_argument("--online", action="store_true",
                     help="asyncio serving front: streaming admission with "
                          "per-request cancellation, priority classes, and TTFT "
@@ -231,7 +250,8 @@ def main():
                              eos_id=eos, seed=args.seed, block_size=args.block_size,
                              prefill_chunk=args.prefill_chunk,
                              num_blocks=args.num_blocks or None, fused=args.fused,
-                             cache_dtype=KV_DTYPES[args.kv_dtype])
+                             cache_dtype=KV_DTYPES[args.kv_dtype],
+                             spec_k=args.spec_k, drafter=args.drafter)
             if args.online:
                 # deadlines compare against the engine clock: wall seconds when
                 # deadlines are live, deterministic scheduler ticks otherwise
@@ -277,6 +297,12 @@ def main():
                   f"{eng.stats['prefill_chunks']} prefill chunks of {args.prefill_chunk}; "
                   f"pool {eng.kv_pool_bytes/2**20:.1f} MiB, "
                   f"{st.cow_copies} CoW copies, {st.evictions} evictions")
+            if args.spec_k:
+                es = eng.stats
+                print(f"speculative: k={args.spec_k} drafter={args.drafter}; "
+                      f"{es['spec_rounds']} verify rounds, accepted "
+                      f"{es['spec_accepted']}/{es['spec_drafted']} drafts "
+                      f"({es['spec_accepted']/max(es['spec_rounds'],1):.2f} per verify)")
         if args.dp > 1:
             for i, s in enumerate(eng.per_replica_stats):
                 print(f"  replica {i}: {s['prefills']} requests, "

@@ -506,7 +506,7 @@ def attention_decode_paged(params, x, cfg, statics: AttnStatics, clip, pool_k, p
 
 def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, pool_v,
                             block_table, start, blk_t, off_t, k_scale=None, v_scale=None,
-                            k_sub=None, v_sub=None):
+                            k_sub=None, v_sub=None, seed_first_row=False):
     """One chunk of chunked prefill against a paged cache (DESIGN.md §3).
 
     Processes ``C`` prompt tokens at global positions ``start + i`` for one
@@ -542,6 +542,15 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
     against the (just-seeded) block scales, then each row packs to nibbles
     at its sub-block's effective scale ``block_scale * sub_code / 15``.
 
+    ``seed_first_row`` (speculative verify, DESIGN.md §12) restricts which
+    rows may *seed* scales: only the window's first row and rows landing at a
+    block boundary (offset 0; sub-block boundary for int4 sub codes) feed the
+    scatter-max. That is exactly the row one-token-at-a-time decode would
+    have seeded each block/sub-block from, so a verify window whose tail rows
+    get rejected leaves every scale bit-identical to the vanilla decode that
+    never saw them — scales stay immutable once set, and the rejected rows'
+    payload codes sit past ``kv_lens``, where no read path looks.
+
     x: (1, C, D) chunk embeddings (right-padded); block_table: (MB,) int32;
     start: scalar int32 (tokens already cached); blk_t/off_t: (C,) int32;
     k_scale/v_scale: (N, KV) fp32 or None; k_sub/v_sub: (N, KV, n_sub)
@@ -561,12 +570,24 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
         sub_t = off_t // sub_bs  # (C,) each row's target sub-block
         tok_amax_k = jnp.max(jnp.abs(k[0]), axis=-1)  # (C, KV)
         tok_amax_v = jnp.max(jnp.abs(v[0]), axis=-1)
-        amax_k = jnp.zeros_like(k_scale).at[blk_t].max(tok_amax_k)
-        amax_v = jnp.zeros_like(v_scale).at[blk_t].max(tok_amax_v)
+        blk_amax_k = sub_amax_k = tok_amax_k
+        blk_amax_v = sub_amax_v = tok_amax_v
+        if seed_first_row:
+            # sequential-seeding mask (§12): only the row vanilla decode
+            # would have seeded each block / sub-block from may contribute
+            row = jnp.arange(C, dtype=jnp.int32)
+            first_blk = ((row == 0) | (off_t == 0))[:, None]
+            first_sub = ((row == 0) | (off_t % sub_bs == 0))[:, None]
+            blk_amax_k = jnp.where(first_blk, tok_amax_k, 0.0)
+            blk_amax_v = jnp.where(first_blk, tok_amax_v, 0.0)
+            sub_amax_k = jnp.where(first_sub, tok_amax_k, 0.0)
+            sub_amax_v = jnp.where(first_sub, tok_amax_v, 0.0)
+        amax_k = jnp.zeros_like(k_scale).at[blk_t].max(blk_amax_k)
+        amax_v = jnp.zeros_like(v_scale).at[blk_t].max(blk_amax_v)
         k_scale = ops.kv4_write_block_scales(amax_k, k_scale)
         v_scale = ops.kv4_write_block_scales(amax_v, v_scale)
-        amax_sub_k = jnp.zeros(k_sub.shape, jnp.float32).at[blk_t, :, sub_t].max(tok_amax_k)
-        amax_sub_v = jnp.zeros(v_sub.shape, jnp.float32).at[blk_t, :, sub_t].max(tok_amax_v)
+        amax_sub_k = jnp.zeros(k_sub.shape, jnp.float32).at[blk_t, :, sub_t].max(sub_amax_k)
+        amax_sub_v = jnp.zeros(v_sub.shape, jnp.float32).at[blk_t, :, sub_t].max(sub_amax_v)
         k_sub = ops.kv4_write_sub_scales(amax_sub_k, k_scale, k_sub)
         v_sub = ops.kv4_write_sub_scales(amax_sub_v, v_scale, v_sub)
         se_k = ops.kv4_effective_scale(k_scale, k_sub)[blk_t, :, sub_t]  # (C, KV)
@@ -577,8 +598,15 @@ def attention_prefill_chunk(params, x, cfg, statics: AttnStatics, clip, pool_k, 
         # group the chunk's rows by target block: scatter-max their per-head
         # amax onto the (N, KV) scale plane, seed unset scales, then quantize
         # each row at its block's scale. Padded rows target the null block.
-        amax_k = jnp.zeros_like(k_scale).at[blk_t].max(jnp.max(jnp.abs(k[0]), axis=-1))
-        amax_v = jnp.zeros_like(v_scale).at[blk_t].max(jnp.max(jnp.abs(v[0]), axis=-1))
+        tok_amax_k = jnp.max(jnp.abs(k[0]), axis=-1)  # (C, KV)
+        tok_amax_v = jnp.max(jnp.abs(v[0]), axis=-1)
+        if seed_first_row:
+            # sequential-seeding mask (§12): see the int4 branch above
+            first_blk = ((jnp.arange(C, dtype=jnp.int32) == 0) | (off_t == 0))[:, None]
+            tok_amax_k = jnp.where(first_blk, tok_amax_k, 0.0)
+            tok_amax_v = jnp.where(first_blk, tok_amax_v, 0.0)
+        amax_k = jnp.zeros_like(k_scale).at[blk_t].max(tok_amax_k)
+        amax_v = jnp.zeros_like(v_scale).at[blk_t].max(tok_amax_v)
         k_scale = ops.kv_write_scales(amax_k, k_scale)
         v_scale = ops.kv_write_scales(amax_v, v_scale)
         new_pool_k = pool_k.at[blk_t, :, off_t].set(ops.kv_quantize(k[0], k_scale[blk_t][..., None]))

@@ -719,6 +719,60 @@ class Model:
         logits = self._mask_padded_vocab(logits)
         return logits, dict(zip(keys, nkv))
 
+    def verify_paged_chunk(self, params, tokens, pool, block_table, start,
+                           blk_t, off_t, qstate=None):
+        """Speculative-verify window for one request (DESIGN.md §12).
+
+        tokens (1, C) = [pending, draft_1..draft_{C-1}] at global positions
+        ``start + i``; block_table (MB,) is the slot prefix composed with the
+        draft branch's blocks; blk_t/off_t (C,) host-computed scatter targets
+        inside the branch. The body is ``prefill_paged_chunk`` — same fused
+        paged-prefill kernel, same chunk-invariant two-pass histogram combine
+        (§2/§7), so row i's attention is bit-identical to the decode step
+        that would have consumed the same context — with two differences:
+
+          * scale seeding runs under ``seed_first_row`` so rejected rows
+            can't perturb quantized scales vanilla decode would have seeded
+            differently (attention.py, §12);
+          * logits come back for EVERY row (C, V), because the accept rule
+            needs the target's argmax after each draft position, not just
+            the last.
+
+        Returns (logits (C, V), new_pool).
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "vlm", "moe"), (
+            f"paged verify requires an attention KV cache, got family={cfg.family!r}"
+        )
+        qstate = qstate or default_qstate(cfg)
+        statics = _statics(cfg)
+        int4 = pool["k"].dtype == jnp.uint8
+        quantized = int4 or pool["k"].dtype == jnp.int8
+        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+
+        def body(h, xs):
+            lp, clip, pk, pv, *sc = xs
+            a, nkv = attn.attention_prefill_chunk(
+                lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip,
+                pk, pv, block_table, start, blk_t, off_t, *sc,
+                seed_first_row=True,
+            )
+            h = h + a
+            if cfg.moe is not None:
+                f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+            else:
+                f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return h + f, nkv
+
+        keys = ("k", "v") + (("k_scale", "v_scale") if quantized else ()) \
+            + (("k_sub", "v_sub") if int4 else ())
+        xs = (params["layers"], qstate["attn_clip"]) + tuple(pool[k] for k in keys)
+        h, nkv = jax.lax.scan(body, h, xs)
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("cd,dv->cv", h[0], params["head"].astype(h.dtype))
+        logits = self._mask_padded_vocab(logits)
+        return logits, dict(zip(keys, nkv))
+
     def decode_step(self, params, tokens, cache, qstate=None):
         """tokens: (B, 1) -> (logits (B, V), new cache)."""
         cfg = self.cfg

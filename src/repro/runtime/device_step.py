@@ -218,6 +218,8 @@ class PagedDeviceStep(_DeviceStep):
         self.int4 = kv_cache_is_int4(cache_dtype)
         self.quantized = self.int4 or jnp.dtype(cache_dtype) == jnp.int8
         self._jit_prefill_chunk = jax.jit(self._prefill_chunk_fn, donate_argnums=(1,))
+        self._jit_verify_chunk = jax.jit(self._verify_chunk_fn, donate_argnums=(1,))
+        self._jit_trim_sub = jax.jit(self._trim_sub_fn, donate_argnums=(0,))
         # raw jitted (pool, src, dst) -> pool; the engine exposes this as
         # ``_jit_copy_block`` (tests drive it directly on a loose pool dict)
         self.copy_block = jax.jit(self._copy_block_fn, donate_argnums=(0,))
@@ -239,6 +241,33 @@ class PagedDeviceStep(_DeviceStep):
         return self.model.prefill_paged_chunk(
             params, tokens, pool, table, start, chunk_len, blk_t, off_t, self.qstate
         )
+
+    def _verify_chunk_fn(self, params, pool, tokens, table, start, blk_t, off_t):
+        """Speculative verify (DESIGN.md §12): one fused paged-prefill call
+        over the [start, start+C) window returns the target model's greedy
+        token after every row — pending token + each draft position. Argmax
+        runs in-jit so only (C,) int32 crosses back to the host."""
+        logits, pool = self.model.verify_paged_chunk(
+            params, tokens, pool, table, start, blk_t, off_t, self.qstate
+        )
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pool
+
+    def _trim_sub_fn(self, pool, blk, keep_subs):
+        """Zero block ``blk``'s int4 sub-scale codes at sub indices >=
+        ``keep_subs`` (all layers, K and V). Rejected verify rows may have
+        seeded sub codes past the accepted tail inside the kept block; sub
+        codes are immutable once set (first-write-wins), so without this the
+        next real token to reach that sub-block would quantize at a scale
+        vanilla decode never saw (DESIGN.md §12)."""
+        pool = dict(pool)
+        n_sub = pool["k_sub"].shape[-1]
+        drop = jnp.arange(n_sub) >= keep_subs  # (n_sub,)
+        for key in ("k_sub", "v_sub"):
+            plane = pool[key]  # (L, N, KV, n_sub)
+            pool[key] = plane.at[:, blk].set(
+                jnp.where(drop, jnp.zeros((), plane.dtype), plane[:, blk])
+            )
+        return pool
 
     def _copy_block_fn(self, pool, src, dst):
         """Copy-on-write device half: duplicate block ``src`` into ``dst``
@@ -281,6 +310,22 @@ class PagedDeviceStep(_DeviceStep):
                 self._put(np.int32(start)), self._put(np.int32(n)),
                 self._put(blk_t), self._put(off_t),
             )
+
+    def verify_chunk(self, pool, tokens, table, start, blk_t, off_t):
+        """-> (verified (C,) int32 greedy tokens, new_pool). Compiles once
+        per distinct window length C (k is fixed per engine, so in practice
+        two shapes: k+1 and the k=0 fallback row)."""
+        with shd.use_mesh(self.mesh):
+            return self._jit_verify_chunk(
+                self.params, pool, self._put(tokens), self._put(table),
+                self._put(np.int32(start)), self._put(blk_t), self._put(off_t),
+            )
+
+    def trim_sub_scales(self, pool, blk, keep_subs) -> dict:
+        """Drop rejected-row sub-scale codes past ``keep_subs`` in ``blk``."""
+        with shd.use_mesh(self.mesh):
+            return self._jit_trim_sub(pool, self._put(np.int32(blk)),
+                                      self._put(np.int32(keep_subs)))
 
     def copy_blocks(self, pool, copies) -> dict:
         """Drain queued CoW copies (in order — sources may be recycled and

@@ -89,6 +89,7 @@ from repro.runtime.kv_pool import (
     PoolStats,
     chain_hashes,
 )
+from repro.runtime.speculative import NgramDrafter, make_drafter
 
 __all__ = [
     "DataParallelEngine",
@@ -310,7 +311,11 @@ class PagedEngine(EngineCore, Engine):
         clock=None,
         max_inflight: int | None = None,
         admit_watermark: float | None = None,
+        spec_k: int = 0,
+        drafter=None,
     ):
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         if fused is not None:
             if fused and cfg.quant.softmax_impl != "exaq":
                 raise ValueError(
@@ -336,6 +341,25 @@ class PagedEngine(EngineCore, Engine):
         self._pool = self._dev.init_pool()
         # raw jitted (pool, src, dst) -> pool CoW copy; tests drive it directly
         self._jit_copy_block = self._dev.copy_block
+        # speculative decoding (DESIGN.md §12): spec_k > 0 replaces decode
+        # chunks with per-slot draft/verify rounds; drafter may be a name
+        # from the registry ("ngram"), a Drafter instance, or None (ngram)
+        self.spec_k = spec_k
+        if isinstance(drafter, str):
+            drafter = make_drafter(drafter)
+        if spec_k > 0 and drafter is None:
+            drafter = NgramDrafter()
+        self.drafter = drafter
+
+    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY, *,
+               priority: int = 0, deadline: float | None = None) -> int:
+        if self.spec_k > 0 and sampling.temperature > 0:
+            raise ValueError(
+                "speculative decoding (spec_k > 0) is greedy-only: the accept rule "
+                "compares exact argmaxes (DESIGN.md §12); submit with temperature=0"
+            )
+        return super().submit(prompt, max_new, sampling, priority=priority,
+                              deadline=deadline)
 
     # -------------------------------------------------------------- block ops
 
@@ -395,6 +419,8 @@ class PagedEngine(EngineCore, Engine):
                 self._prefill_step(i)
         if self.num_active == 0:
             return 0
+        if self.spec_k > 0:
+            return self._spec_chunk()
         steps = self._clamp_steps(steps)
         self._reserve_chunk_blocks(steps)  # may preempt slots under pool pressure
         if self.num_active == 0:
@@ -412,6 +438,75 @@ class PagedEngine(EngineCore, Engine):
         self._pool = pool
         was_active = self._active
         return self._absorb_chunk(tokens, lens, active, budget, emitted, masks, was_active)
+
+    # ------------------------------------------------- speculative decoding
+
+    def _spec_chunk(self) -> int:
+        """One draft/verify round per active slot (DESIGN.md §12); replaces
+        the decode chunk entirely when ``spec_k > 0``. Returns #tokens
+        emitted. A slot deactivated mid-chunk (finished, or preempted by a
+        sibling's pool-pressure retry) is skipped."""
+        n_out = 0
+        for slot in range(self.max_slots):
+            if self._active[slot]:
+                n_out += self._spec_round(slot)
+        return n_out
+
+    def _spec_round(self, slot: int) -> int:
+        """Draft k tokens, fork a branch, verify the whole window in one
+        fused paged-prefill call, accept/reject, absorb. Pool exhaustion
+        first retries draft-free (k=0 needs at most one block — the round
+        degrades to vanilla single-token decode), then preempts the least
+        urgent *other* slot; a sole slot that cannot even grow by one block
+        raises non-retryable, mirroring ``_reserve_chunk_blocks``."""
+        s = self._slots[slot]
+        L = int(self.kv_lens[slot])
+        k_eff = max(0, min(self.spec_k, int(self._budget[slot]) - 1,
+                           self.max_seq - 1 - L))
+        drafts: list[int] = []
+        if k_eff > 0:
+            drafts = list(self.drafter.propose(list(s.req.prompt) + list(s.generated),
+                                               k_eff))[:k_eff]
+        while True:
+            try:
+                plan = self.plan_spec_round(slot, drafts)
+                break
+            except PoolExhausted:
+                if drafts:
+                    drafts = []  # degrade to k=0 before evicting anyone
+                    continue
+                victims = [j for j in range(self.max_slots)
+                           if self._active[j] and j != slot]
+                if not victims:
+                    raise PoolExhausted(
+                        f"cannot grow KV for the only active request (uid "
+                        f"{s.uid}): pool of {self.pool.num_blocks - 1} usable "
+                        f"blocks is too small for max_seq {self.max_seq}",
+                        retryable=False, occupancy=self.pool.occupancy(),
+                    ) from None
+                self._preempt(max(victims, key=self._victim_rank))
+        # branch fork copies must land before verify reads the window, and
+        # fresh-block scale resets before verify's first quantized scatter
+        self._drain_copies()
+        self._flush_fresh_scales()
+        t0 = time.perf_counter()
+        verified, self._pool = self._dev.verify_chunk(
+            self._pool, plan.tokens, plan.table, plan.start, plan.blk_t, plan.off_t,
+        )
+        verified = np.asarray(jax.device_get(verified))
+        self.stats["decode_time"] += time.perf_counter() - t0
+        res = self.commit_spec_round(plan, verified)
+        if self._dev.int4 and res.trim_tail:
+            # rejected rows seeded immutable sub-block codes in the kept tail
+            # block; zero every sub-block wholly past the committed rows so
+            # the next (vanilla-equivalent) write re-seeds it (DESIGN.md §12)
+            n_sub = self._pool["k_sub"].shape[-1]
+            sub_bs = self.block_size // n_sub
+            keep_subs = (res.tail_rows - 1) // sub_bs + 1
+            if keep_subs < n_sub:
+                self._pool = self._dev.trim_sub_scales(self._pool, res.tail_block,
+                                                       keep_subs)
+        return self.absorb_spec_round(slot, res.emitted)
 
     # -------------------------------------------------------------- telemetry
 

@@ -44,6 +44,7 @@ from repro.runtime.kv_pool import (
     PoolOccupancy,
     chain_hashes,
 )
+from repro.runtime.speculative import greedy_accept_length
 
 
 @dataclass(frozen=True)
@@ -195,6 +196,56 @@ class PrefillChunkPlan:
     n: int                   # live tokens in this chunk
     blk_t: np.ndarray        # (C,) int32 scatter target blocks (pad -> null)
     off_t: np.ndarray        # (C,) int32 scatter target offsets
+
+
+@dataclass
+class SpecBranch:
+    """One in-flight speculative draft branch (DESIGN.md §12): the blocks
+    backing verify positions ``[start, start + len(drafts)]`` of slot
+    ``slot``. Every entry of ``table`` is branch-owned (holds exactly one
+    refcount); the slot's shared prefix blocks are covered by the slot's own
+    references and are NOT retained again — a branch dies (abort) or is
+    spliced into the slot table (commit) without ever touching prefix
+    refcounts. When ``forked`` the first entry is a CoW read-fork of the
+    slot's partially-filled tail block, delivered by a queued
+    ``pending_copies`` entry (drained before the verify launches)."""
+
+    slot: int
+    uid: int
+    drafts: tuple[int, ...]
+    start: int               # kv length at fork time = write position of row 0
+    bi0: int                 # first table index the branch owns
+    table: list[int]         # branch-owned block ids for indices [bi0, ...]
+    forked: bool             # table[0] is a CoW copy of the slot's tail block
+
+
+@dataclass(frozen=True)
+class SpecVerifyPlan:
+    """Launch plan for one speculative verify round: one fused paged-prefill
+    call over the window [start, start + C) with the branch's blocks spliced
+    over the slot's table (device mirror composed here, host-side)."""
+
+    slot: int
+    branch: SpecBranch
+    tokens: np.ndarray       # (1, C) int32: [pending, draft_1..draft_{C-1}]
+    start: int
+    table: np.ndarray        # (MB,) int32 slot-prefix + branch window table
+    blk_t: np.ndarray        # (C,) int32 scatter target blocks (branch-owned)
+    off_t: np.ndarray        # (C,) int32 scatter target offsets
+
+
+@dataclass(frozen=True)
+class SpecCommit:
+    """Host outcome of a verify round, pre-absorb: what to emit plus the
+    int4 tail-hygiene coordinates (the engine trims sub codes the rejected
+    rows seeded past the accepted length — DESIGN.md §12)."""
+
+    slot: int
+    emitted: list[int]       # drafts[:accepted] + [correction token]
+    accepted: int            # accepted draft prefix length in [0, k]
+    tail_block: int          # the committed tail block id
+    tail_rows: int           # committed-valid rows of that block: (start+a)%bs+1
+    trim_tail: bool          # rejected rows wrote into the kept tail block
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -556,6 +607,14 @@ class EngineCore(HostCore):
         # re-allocated before the flush, and a CoW fork destination must be
         # *removed* (its valid scales arrive with the copied payload)
         self._fresh_blocks: set[int] = set()
+        # speculative-decoding branches in flight, slot -> [SpecBranch]
+        # (DESIGN.md §12). Branch blocks are invisible to the slot table
+        # until commit; every fault path (_preempt, _finish, cancel) must
+        # abort them first so their refcounts and queued fork copies die
+        # with the slot.
+        self._branches: dict[int, list[SpecBranch]] = {}
+        self.stats.update(spec_rounds=0, spec_drafted=0, spec_accepted=0,
+                          spec_emitted=0, spec_forks=0)
 
     def _new_slot(self):
         return _PagedSlot()
@@ -672,6 +731,7 @@ class EngineCore(HostCore):
         the prefix cache the preempted slot just parked. Works on decoding
         *and* mid-prefill slots (priority admission evicts either); the
         continuation keeps the request's priority class and deadline."""
+        self.abort_spec_branches(slot)  # branch blocks + queued fork copies die first
         s = self._slots[slot]
         req = s.req
         done = list(s.generated)
@@ -851,7 +911,176 @@ class EngineCore(HostCore):
             return True
         return False
 
+    # ------------------------------------------------- speculative decoding
+
+    def plan_spec_round(self, slot: int, drafts) -> SpecVerifyPlan:
+        """Fork a draft branch and plan its verify window (DESIGN.md §12).
+
+        The branch owns fresh blocks for every table index the window
+        ``[start, start + k]`` touches. When the slot's tail block is
+        partially filled, the branch's first block is a CoW *read-fork* of
+        it — payload copy queued on ``pending_copies``, the slot's own
+        reference left untouched — so a rejected round releases the copy and
+        the slot is exactly as it was. Raises ``PoolExhausted`` with full
+        rollback (no branch registered, no blocks leaked) when the pool
+        cannot cover the window; the engine retries with k=0 or preempts.
+        """
+        s = self._slots[slot]
+        bs = self.block_size
+        drafts = tuple(int(d) for d in drafts)
+        k = len(drafts)
+        L = int(self.kv_lens[slot])
+        assert self._active[slot] and not s.prefilling, "spec round needs a decoding slot"
+        assert L + k < self.max_seq, "k_eff clamp must keep the window inside max_seq"
+        bi0 = L // bs
+        forked = (L % bs) != 0
+        # active decode slots always satisfy len(table) == ceil(L / bs): spec
+        # rounds grow the table themselves and decode chunks never run on a
+        # spec engine, so over-allocation (an EOS mid-chunk) cannot occur
+        assert len(s.table) == bi0 + (1 if forked else 0), (
+            f"slot {slot} table length {len(s.table)} inconsistent with kv_len {L}"
+        )
+        bik = (L + k) // bs
+        table: list[int] = []
+        try:
+            for bi in range(bi0, bik + 1):
+                blk = self._alloc_fresh()
+                if bi == bi0 and forked:
+                    # read-fork of the partially-filled tail: the copied
+                    # payload carries valid scales, so the block must not sit
+                    # in the fresh-reset queue (same hazard as _make_writable)
+                    self._fresh_blocks.discard(blk)
+                    self.pending_copies.append((s.table[bi0], blk))
+                table.append(blk)
+        except PoolExhausted:
+            self._release_branch_blocks(table)
+            raise
+        br = SpecBranch(slot, s.uid, drafts, L, bi0, table, forked)
+        self._branches.setdefault(slot, []).append(br)
+        if forked:
+            self.stats["spec_forks"] += 1
+        # window rows: the pending token (sampled last round, KV not yet
+        # written) then the k drafts — C = k + 1 rows at positions [L, L + k]
+        C = k + 1
+        toks = np.zeros((1, C), np.int32)
+        toks[0, 0] = self._tokens[slot, 0]
+        toks[0, 1:] = drafts
+        win = np.full((self.blocks_per_table,), NULL_BLOCK, np.int32)
+        win[:bi0] = s.table[:bi0]
+        win[bi0 : bik + 1] = table
+        blk_t = np.zeros((C,), np.int32)
+        off_t = np.zeros((C,), np.int32)
+        for i in range(C):
+            pos = L + i
+            blk_t[i] = table[pos // bs - bi0]
+            off_t[i] = pos % bs
+        return SpecVerifyPlan(slot, br, toks, L, win, blk_t, off_t)
+
+    def commit_spec_round(self, plan: SpecVerifyPlan, verified) -> SpecCommit:
+        """Adjudicate a verify round: greedy accept rule, splice the winning
+        branch prefix into the slot table, release the losing tail. The
+        committed tail block is always a branch block (the branch covers
+        position ``start`` onward), so ``keep >= 1`` and the slot's old tail
+        — if the branch forked it — is released here: safe, because the
+        engine drained the fork copy before the verify launched."""
+        br = plan.branch
+        slot = plan.slot
+        s = self._slots[slot]
+        bs = self.block_size
+        verified = [int(v) for v in np.asarray(verified).reshape(-1)]
+        k = len(br.drafts)
+        assert len(verified) == k + 1, "verify must return one token per window row"
+        a = greedy_accept_length(br.drafts, verified)
+        L = br.start
+        bi0 = br.bi0
+        tail_bi = (L + a) // bs
+        keep = tail_bi - bi0 + 1
+        self._release_branch_blocks(br.table[keep:])
+        kept = br.table[:keep]
+        if br.forked:
+            old = s.table[bi0]
+            s.table[bi0] = kept[0]
+            self.pool.release(old)
+            s.table.extend(kept[1:])
+        else:
+            s.table.extend(kept)
+        self._tables[slot, bi0 : bi0 + keep] = kept
+        self._branches[slot].remove(br)
+        if not self._branches[slot]:
+            del self._branches[slot]
+        self.stats["spec_rounds"] += 1
+        self.stats["spec_drafted"] += k
+        self.stats["spec_accepted"] += a
+        emitted = list(br.drafts[:a]) + [verified[a]]
+        # int4 tail hygiene: rejected rows at positions [L+a+1, L+k] seeded
+        # immutable sub-block codes; when the first of them shares the kept
+        # tail block, the engine must zero codes past the committed rows
+        trim_tail = a < k and (L + a + 1) // bs == tail_bi
+        return SpecCommit(slot, emitted, a, kept[-1], (L + a) % bs + 1, trim_tail)
+
+    def absorb_spec_round(self, slot: int, emitted: list[int]) -> int:
+        """Pull one committed spec round into host state: each emitted token
+        replays the decode-scan transition (append, kv_len++, budget--,
+        pending-token update, finish checks in scan order) so greedy spec is
+        bit-identical to vanilla including where generation stops — later
+        emissions past a finish are truncated, exactly the tokens vanilla
+        would never have produced. One round = one device step = one SLA
+        tick, which is what makes steps-per-token the speedup metric."""
+        s = self._slots[slot]
+        self._ticks += 1
+        self.stats["decode_steps"] += 1
+        self.stats["occupancy_sum"] += 1.0  # spec rounds run one slot per launch
+        self.stats["max_active"] = max(self.stats["max_active"], self.num_active)
+        n_out = 0
+        finished = None
+        for t in emitted:
+            t = int(t)
+            s.generated.append(t)
+            self.kv_lens[slot] += 1
+            self._budget[slot] -= 1
+            self._tokens[slot, 0] = t
+            n_out += 1
+            if self.eos_id is not None and t == self.eos_id:
+                finished = "eos"
+                break
+            if self._budget[slot] <= 0 or self.kv_lens[slot] >= self.max_seq:
+                finished = "length"
+                break
+        self.stats["tokens_out"] += n_out
+        self.stats["spec_emitted"] += n_out
+        if finished is not None:
+            self._finish(slot, finished)
+        return n_out
+
+    def _release_branch_blocks(self, blocks) -> None:
+        """Release branch-owned blocks, first purging any queued CoW copy
+        whose destination is one of them: the id can be recycled before the
+        next drain, and a stale fork copy landing in it would corrupt the
+        new owner (the drain-ordering hazard of DESIGN.md §9). Released ids
+        stay in ``_fresh_blocks`` — a queued reset on a freed block is
+        harmless, and the id re-entering via alloc needs the reset anyway."""
+        doomed = set(blocks)
+        if doomed and self.pending_copies:
+            self.pending_copies = [(a, b) for (a, b) in self.pending_copies
+                                   if b not in doomed]
+        for blk in blocks:
+            self.pool.release(blk)
+
+    def abort_spec_branches(self, slot: int) -> int:
+        """Kill every in-flight branch of ``slot`` (losing sibling, cancel,
+        preemption, mid-verify PoolExhausted): all branch blocks release and
+        their queued fork copies are purged. The slot's own table is
+        untouched — a read-fork never dropped the slot's references."""
+        branches = self._branches.pop(slot, [])
+        for br in branches:
+            self._release_branch_blocks(br.table)
+        return len(branches)
+
     def _finish(self, slot: int, reason: str):
+        # in-flight spec branches die with the slot (cancel mid-verify, EOS
+        # truncation): their blocks and queued fork copies must go before the
+        # slot's own references drop, or a recycled dst could eat a stale copy
+        self.abort_spec_branches(slot)
         s = self._slots[slot]
         for blk in s.table:
             self.pool.release(blk)

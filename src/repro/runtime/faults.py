@@ -83,8 +83,9 @@ def audit_block_invariants(core: EngineCore, held=()) -> None:
     for h, b in pool._index.items():
         assert pool._hash_of.get(b) == h, f"index/hash_of disagree on block {b}"
 
-    # refcount accounting: every reference is exactly one slot-table entry
-    # (plus any harness-held pins)
+    # refcount accounting: every reference is exactly one slot-table entry,
+    # one in-flight speculative branch-table entry (DESIGN.md §12), or a
+    # harness-held pin
     expected = np.zeros(n, np.int64)
     for b in held:
         expected[b] += 1
@@ -98,9 +99,17 @@ def audit_block_invariants(core: EngineCore, held=()) -> None:
         t = core._tables[i]
         assert list(t[: len(s.table)]) == list(s.table)
         assert (t[len(s.table):] == NULL_BLOCK).all()
+    for slot, branches in getattr(core, "_branches", {}).items():
+        assert branches, f"slot {slot} keeps an empty branch list"
+        assert not core._slots[slot].free, f"free slot {slot} owns spec branches"
+        for br in branches:
+            assert br.uid == core._slots[slot].uid, "branch outlived its request"
+            for b in br.table:
+                assert b != NULL_BLOCK
+                expected[b] += 1
     np.testing.assert_array_equal(
         ref[1:], expected[1:],
-        err_msg="refcounts drifted from slot-table references",
+        err_msg="refcounts drifted from slot/branch-table references",
     )
 
     # queued CoW destinations must not be pending a scale reset (the copy
@@ -167,6 +176,39 @@ class HostDeviceEmulator:
                 if nxt == self.eos or budget[b] <= 0 or lens[b] >= core.max_seq:
                     active[b] = False
         core._absorb_chunk(tokens, lens, active, budget, emitted, masks, was_active)
+
+    def spec_round(self, core: EngineCore, slot: int, k: int | None = None) -> int:
+        """One emulated draft/verify/accept round on ``slot`` (DESIGN.md
+        §12): rng drafts, the full branch fork through ``plan_spec_round``,
+        an emulated verify whose agreement with the drafts is rng-chosen so
+        every accept length 0..k occurs, then commit + absorb. Returns
+        tokens emitted; 0 when the pool cannot fund the branch (the plan
+        rolled itself back — the fuzzer audits that claim)."""
+        if not core._active[slot]:
+            return 0
+        L = int(core.kv_lens[slot])
+        if k is None:
+            k = int(self.rng.integers(0, 5))
+        k = max(0, min(k, int(core._budget[slot]) - 1, core.max_seq - 1 - L))
+        drafts = [int(t) for t in self.rng.integers(0, self.vocab, size=k)]
+        try:
+            plan = core.plan_spec_round(slot, drafts)
+        except PoolExhausted:
+            return 0
+        core.take_pending_copies()
+        core.take_fresh_scale_ids()
+        a = int(self.rng.integers(0, k + 1))
+        verified = []
+        for i in range(k + 1):
+            if i < a:
+                verified.append(drafts[i])
+            else:
+                t = int(self.rng.integers(0, self.vocab))
+                if i < k and t == drafts[i]:
+                    t = (t + 1) % self.vocab  # force the accept length to a
+                verified.append(t)
+        res = core.commit_spec_round(plan, verified)
+        return core.absorb_spec_round(slot, res.emitted)
 
 
 class EmulatedEngine(EngineCore):

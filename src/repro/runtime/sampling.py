@@ -18,6 +18,11 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+# the speculative-decoding accept rule lives with the (jax-free) drafting
+# layer so the host scheduler can use it without importing jax; re-exported
+# here because sampling owns the "which token comes next" contract
+from repro.runtime.speculative import greedy_accept_length  # noqa: F401
+
 _NEG_BIG = -1e30
 
 

@@ -1,0 +1,122 @@
+"""Self-drafting for speculative decoding (DESIGN.md §12).
+
+Speculative decoding attacks the one-step-per-token serial bottleneck: a
+cheap *drafter* proposes ``k`` continuation tokens for a slot, the target
+model verifies all of them (plus the slot's pending token) in ONE fused
+paged-prefill call over the window ``[L, L+k]``, and greedy accept/reject
+keeps whichever prefix the target model agrees with. Everything here is
+jax-free host code — the engine core plans branches with it, and the only
+device work stays the single verify chunk.
+
+Drafters implement one method::
+
+    propose(context: Sequence[int], k: int) -> list[int]
+
+``context`` is the request's full token history (prompt + everything
+generated so far, ending with the slot's *pending* token — sampled but not
+yet written to KV); the proposal continues it. Returning fewer than ``k``
+tokens is legal (the verify window just shrinks); proposals must be
+deterministic functions of ``(context, k)`` so dp replicas and reruns stay
+bit-reproducible.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Sequence
+
+__all__ = [
+    "Drafter",
+    "FnDrafter",
+    "NgramDrafter",
+    "greedy_accept_length",
+    "make_drafter",
+]
+
+
+class Drafter(Protocol):
+    """Anything with a deterministic ``propose(context, k) -> list[int]``."""
+
+    def propose(self, context: Sequence[int], k: int) -> list[int]: ...
+
+
+def greedy_accept_length(drafts: Sequence[int], verified: Sequence[int]) -> int:
+    """Greedy accept rule: longest prefix of ``drafts`` the target agrees with.
+
+    ``verified[i]`` is the target model's argmax *after* consuming draft
+    position ``i`` context (``verified[0]`` follows the pending token alone),
+    so draft ``drafts[i]`` survives iff every earlier draft survived and
+    ``drafts[i] == verified[i]``. Returns ``a`` in ``[0, len(drafts)]``; the
+    caller emits ``drafts[:a]`` then the correction token ``verified[a]`` —
+    exactly the ``a + 1`` tokens vanilla greedy decode would have produced,
+    bit-for-bit (the chunked verify attends with the same two-pass global-max
+    histogram combine as single-token decode, DESIGN.md §5/§12).
+    """
+    a = 0
+    for d, v in zip(drafts, verified):
+        if int(d) != int(v):
+            break
+        a += 1
+    return a
+
+
+class NgramDrafter:
+    """Suffix-match self-drafter: no draft model, just the request's own
+    history. For each proposed token it finds the most recent earlier
+    occurrence of the longest current suffix (order ``n`` down to
+    ``min_order``) and proposes whatever followed it — free accuracy on
+    repetitive continuations (code, templated text, the bench's periodic
+    trace) and harmless on novel text, where rejections cost one verify
+    round that vanilla decode would have spent anyway."""
+
+    def __init__(self, order: int = 3, min_order: int = 1):
+        assert 1 <= min_order <= order
+        self.order = order
+        self.min_order = min_order
+
+    def propose(self, context: Sequence[int], k: int) -> list[int]:
+        ctx = [int(t) for t in context]
+        out: list[int] = []
+        for _ in range(max(k, 0)):
+            nxt = self._match(ctx)
+            if nxt is None:
+                break
+            out.append(nxt)
+            ctx.append(nxt)
+        return out
+
+    def _match(self, ctx: list[int]) -> int | None:
+        for n in range(self.order, self.min_order - 1, -1):
+            if len(ctx) <= n:
+                continue
+            pat = ctx[-n:]
+            for i in range(len(ctx) - n - 1, -1, -1):
+                if ctx[i : i + n] == pat:
+                    return ctx[i + n]
+        return None
+
+
+class FnDrafter:
+    """Wrap a plain ``fn(context, k) -> Sequence[int]`` as a Drafter — the
+    test suites use it to script exact accept-length edges (all-accepted,
+    all-rejected, every split in between)."""
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def propose(self, context: Sequence[int], k: int) -> list[int]:
+        return [int(t) for t in self._fn(context, k)][: max(k, 0)]
+
+
+_DRAFTERS = {
+    "ngram": NgramDrafter,
+}
+
+
+def make_drafter(name: str) -> Drafter:
+    """Resolve a ``--drafter`` flag value to a Drafter instance."""
+    try:
+        return _DRAFTERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown drafter {name!r}; available: {sorted(_DRAFTERS)}"
+        ) from None

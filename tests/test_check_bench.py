@@ -15,7 +15,8 @@ _spec.loader.exec_module(check_bench)
 
 def _report(tok_per_s=100.0, agree=1.0, parity=True, step_ms=5.0, reduction=4.0,
             gather_ms=2.0, exact_tok=125.0, dp_parity=True, dp_hit=0.75, dp_occ=2.5,
-            p99_ttft=28.0, p99_itl=6.0, overload_done=7, shed_retryable=True):
+            p99_ttft=28.0, p99_itl=6.0, overload_done=7, shed_retryable=True,
+            spec_parity=True, spec_apv=3.1, spec_spt_x=2.0):
     return {
         "serving": {
             "impls": {
@@ -36,6 +37,13 @@ def _report(tok_per_s=100.0, agree=1.0, parity=True, step_ms=5.0, reduction=4.0,
                 "p50_itl_steps": 1.0, "p99_itl_steps": p99_itl,
                 "overload": {"max_inflight": 4, "completed": overload_done,
                              "shed": 5, "all_shed_retryable": shed_retryable},
+            },
+            "spec": {
+                "spec_k": 4, "drafter": "ngram",
+                "greedy_parity_vs_vanilla": spec_parity,
+                "rounds": 50, "drafted": 200, "accepted": 155, "tokens": 205,
+                "accepted_per_verify": spec_apv,
+                "steps_per_token_reduction_x": spec_spt_x,
             },
         },
         "micro": {
@@ -127,6 +135,21 @@ def test_bursty_latency_ceilings_are_exact_or_lower():
     fails, _ = check_bench.compare(_report(), _report(p99_itl=7.0), 0.2)
     assert any("p99_itl_steps" in f for f in fails)
     fails, _ = check_bench.compare(_report(), _report(p99_ttft=20.0, p99_itl=2.0), 0.2)
+    assert fails == []
+
+
+def test_spec_decode_metrics_are_gated():
+    """Speculative-decoding gates: vanilla parity must stay truthy, and the
+    deterministic speedup counters (accepted drafts per verify round,
+    target-model steps-per-token reduction) are exact-or-better floors."""
+    fails, _ = check_bench.compare(_report(), _report(spec_parity=False), 0.2)
+    assert any("spec.greedy_parity_vs_vanilla" in f for f in fails)
+    fails, _ = check_bench.compare(_report(), _report(spec_apv=2.9), 0.2)
+    assert any("spec.accepted_per_verify" in f for f in fails)
+    fails, _ = check_bench.compare(_report(), _report(spec_spt_x=1.4), 0.2)
+    assert any("spec.steps_per_token_reduction_x" in f and "regressed below" in f for f in fails)
+    # a better drafter round-trips: improvements never trip the floors
+    fails, _ = check_bench.compare(_report(), _report(spec_apv=4.0, spec_spt_x=3.0), 0.2)
     assert fails == []
 
 

@@ -13,7 +13,11 @@ var):
     ``runtime.faults.audit_block_invariants``: refcounts equal table
     references, free/LRU/live partition the pool, the prefix index and its
     reverse map agree, the null block is never touched, and queued CoW
-    destinations are never pending a scale reset.
+    destinations are never pending a scale reset. A second host fuzzer runs
+    the speculative-decoding lifecycle (DESIGN.md §12): fork-k-branches /
+    verify / release events interleaved with cancels, preemptions and pool
+    exhaustion, with branch tables counted into the refcount audit after
+    every event.
 
   * Differential fuzz — the same randomized request trace (submissions AND
     mid-flight cancel events) run through real ``PagedEngine`` instances
@@ -122,6 +126,120 @@ def test_engine_core_invariants_under_random_schedules(test_seed):
                 check_invariants(core)
         done = len(core._results) + len(core._preempt_carry)
         assert submitted > 0, f"trace {trace} submitted nothing — widen the generator"
+        check_invariants(core)
+
+
+def _spec_event(core: EngineCore, rng, vocab: int) -> None:
+    """One speculative lifecycle event on a random decoding slot (DESIGN.md
+    §12): fork 1-3 draft branches, drain the queued device effects the way
+    the engine would, then resolve the round by an rng-chosen fate — cancel
+    mid-verify, preempt mid-verify, plain abort (dropped round), or commit
+    one winner and release the losers through the normal abort path. The
+    allocator audit runs between every sub-event; a ``PoolExhausted`` during
+    branch planning must roll that branch back completely (the audit right
+    after is what catches a leaked partial allocation)."""
+    slots = [i for i in range(core.max_slots) if core._active[i]]
+    if not slots:
+        return
+    slot = int(rng.choice(slots))
+    uid = core._slots[slot].uid
+    L = int(core.kv_lens[slot])
+    kmax = max(0, min(4, int(core._budget[slot]) - 1, core.max_seq - 1 - L))
+    plans = []
+    for _ in range(int(rng.integers(1, 4))):
+        drafts = [int(t) for t in rng.integers(0, vocab, int(rng.integers(0, kmax + 1)))]
+        try:
+            plans.append(core.plan_spec_round(slot, drafts))
+        except PoolExhausted:
+            break  # full rollback claimed; branches planned so far stay live
+        check_invariants(core)
+    check_invariants(core)
+    # the engine drains fork copies + scale resets before the verify launch;
+    # a fork destination must already have escaped the fresh-scale set
+    for _, dst in core.take_pending_copies():
+        assert dst not in core._fresh_blocks
+    core.take_fresh_scale_ids()
+    fate = rng.random()
+    if not plans or fate < 0.12:
+        assert core.cancel(uid)              # client vanished mid-verify
+    elif fate < 0.24:
+        core._preempt(slot)                  # pool pressure mid-verify
+    elif fate < 0.36:
+        core.abort_spec_branches(slot)       # round dropped (deadline, fault)
+    else:
+        winner = plans[int(rng.integers(0, len(plans)))]
+        k = len(winner.branch.drafts)
+        a = int(rng.integers(0, k + 1))      # scripted accept length
+        verified = list(winner.branch.drafts[:a])
+        for i in range(a, k + 1):
+            t = int(rng.integers(0, vocab))
+            if i < k and t == winner.branch.drafts[i]:
+                t = (t + 1) % vocab
+            verified.append(t)
+        res = core.commit_spec_round(winner, verified)
+        check_invariants(core)
+        core.absorb_spec_round(slot, res.emitted)  # may finish -> aborts losers
+        check_invariants(core)
+        core.abort_spec_branches(slot)       # losing siblings release normally
+    check_invariants(core)
+    assert core._branches.get(slot) is None, "spec event left branches in flight"
+
+
+def test_spec_branch_lifecycle_invariants_under_random_schedules(test_seed):
+    """The host fuzz of the speculative fork/verify/release lifecycle: the
+    same bursty tight-pool traces as the base fuzzer, with spec events mixed
+    into every step — multi-branch forks, scripted accept lengths 0..k,
+    cancels and preemptions landing mid-verify, and PoolExhausted during
+    branch planning. Invariants I1-I4 plus refcount-vs-table equality (branch
+    tables included) must hold after every event, and no event may leave a
+    branch in flight past its round."""
+    rng = np.random.default_rng(test_seed)
+    vocab, eos = 40, 1
+    for trace in range(FUZZ_TRACES):
+        bs = int(rng.choice([2, 4, 8]))
+        max_seq = int(rng.choice([32, 48, 64]))
+        max_slots = int(rng.integers(2, 5))
+        per_table = -(-max_seq // bs)
+        full = 1 + max_slots * per_table
+        num_blocks = int(rng.choice([full, max(per_table + 3, int(full * 0.5))]))
+        core = EngineCore(max_slots=max_slots, max_seq=max_seq, block_size=bs,
+                          prefill_chunk=int(rng.choice([4, 8, 16])),
+                          num_blocks=num_blocks, eos_id=eos,
+                          steps_per_sync=int(rng.integers(2, 9)),
+                          quantized=bool(rng.integers(0, 2)))
+        submitted = spec_events = 0
+        for step in range(FUZZ_STEPS):
+            for _ in range(int(rng.integers(0, 3))):
+                prompt = tuple(rng.integers(2, vocab, int(rng.integers(1, 13))))
+                try:
+                    core.submit(list(prompt), int(rng.integers(2, 12)))
+                    submitted += 1
+                except ValueError:
+                    pass
+            # admit + prefill through the emulator only: spec rounds replace
+            # decode chunks entirely when spec_k > 0 (a branch in flight
+            # during a decode chunk cannot happen in production)
+            try:
+                core._admit()
+                for i, s in enumerate(core._slots):
+                    if not s.free and s.prefilling:
+                        plan = core.plan_prefill_chunk(i)
+                        core.take_pending_copies()
+                        core.take_fresh_scale_ids()
+                        if core.commit_prefill_chunk(i, plan.n):
+                            core._complete_first(i, s.req,
+                                                 int(rng.integers(0, vocab)))
+            except PoolExhausted:
+                check_invariants(core)
+                break
+            check_invariants(core)
+            for _ in range(int(rng.integers(1, 3))):
+                _spec_event(core, rng, vocab)
+                spec_events += 1
+            if rng.random() < 0.2 and _cancel_random(core, rng):
+                check_invariants(core)
+        assert submitted > 0 and spec_events > 0
+        assert not core._branches, "trace ended with branches in flight"
         check_invariants(core)
 
 

@@ -13,7 +13,8 @@ from repro.launch.serve import validate_serve_args  # noqa: E402
 
 def _args(**kw):
     base = dict(paged=False, fused=None, impl="exaq", kv_dtype="bf16", dp=1, tp=1,
-                online=False, priority_classes=1, deadline_ms=0, max_inflight=0)
+                online=False, priority_classes=1, deadline_ms=0, max_inflight=0,
+                spec_k=0, temperature=0.0)
     base.update(kw)
     return Namespace(**base)
 
@@ -24,6 +25,7 @@ def test_defaults_pass():
                         device_count=4)
     validate_serve_args(_args(paged=True, online=True, priority_classes=3,
                               deadline_ms=250, max_inflight=8))
+    validate_serve_args(_args(paged=True, spec_k=4))
 
 
 @pytest.mark.parametrize("kw,msg", [
@@ -43,6 +45,9 @@ def test_defaults_pass():
     (dict(paged=True, priority_classes=2), "--online"),
     (dict(paged=True, deadline_ms=100), "--online"),
     (dict(paged=True, max_inflight=4), "--online"),
+    (dict(spec_k=4), "--paged"),
+    (dict(paged=True, spec_k=-1), ">= 0"),
+    (dict(paged=True, spec_k=4, temperature=0.8), "greedy-only"),
 ])
 def test_rejections_name_the_fix(kw, msg):
     with pytest.raises(SystemExit, match=msg):

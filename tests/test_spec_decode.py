@@ -1,0 +1,384 @@
+"""Speculative decoding on the paged pool: parity, accept edges, faults.
+
+The §12 contract under test, layer by layer:
+
+  * Drafter layer — ``NgramDrafter`` suffix matching, the greedy accept
+    rule's prefix semantics, the registry. Pure host, no jax.
+  * Greedy parity — spec decode must emit BIT-IDENTICAL tokens to vanilla
+    decode on the same trace for every pool format (fp32 / bf16 / int8 /
+    int4) and for dp=2 fleets: the verify window writes KV through the same
+    two-pass global-max histogram combine the sequential path uses, with
+    scale seeding masked to the rows vanilla's first-writer rule would have
+    used (``seed_first_row``), so acceptance is exact argmax equality, not
+    within-tolerance. Accept-length edges are scripted with ``FnDrafter``:
+    an oracle drafter (replays vanilla's own output) must accept everything;
+    an always-wrong drafter must accept nothing — and both must still be
+    bit-exact, because the correction token is the verify argmax.
+  * Sharded parity — tp=2 pools and (dp=2, tp=2) fleets under virtual
+    devices (subprocess: the device count must be set before jax
+    initializes) reproduce the single-shard spec tokens exactly.
+  * Fault paths — the regression layer for the drain-ordering hazard: a
+    mid-verify preemption or ``PoolExhausted`` must release every draft
+    branch block AND purge the branch's queued CoW fork copy, so a released
+    -and-recycled block can never eat a stale copy (the same escape PR 4
+    fixed for fork-destination scale resets). Verified through the full
+    allocator audit plus directed refcount checks.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+
+from bench_serving import PERIOD, TOK0
+from repro.runtime.engine_core import EngineCore
+from repro.runtime.faults import HostDeviceEmulator, audit_block_invariants
+from repro.runtime.kv_pool import PoolExhausted
+from repro.runtime.speculative import (
+    FnDrafter,
+    NgramDrafter,
+    greedy_accept_length,
+    make_drafter,
+)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ------------------------------------------------------------- drafter layer
+
+
+def test_greedy_accept_length_prefix_semantics():
+    assert greedy_accept_length([], [9]) == 0
+    assert greedy_accept_length([4, 5], [4, 5, 6]) == 2      # k = max, all in
+    assert greedy_accept_length([4, 5], [7, 5, 6]) == 0      # k = 0, all out
+    assert greedy_accept_length([4, 5, 6], [4, 9, 6, 1]) == 1  # stop at first miss
+    assert greedy_accept_length(np.array([3]), np.array([3, 8])) == 1
+
+
+def test_ngram_drafter_matches_periodic_pattern():
+    ctx = [int(t) for t in np.arange(30) % PERIOD + TOK0]
+    want = [int(t) for t in np.arange(30, 34) % PERIOD + TOK0]
+    assert NgramDrafter().propose(ctx, 4) == want
+    # no repeated suffix anywhere -> nothing to propose
+    assert NgramDrafter().propose([1, 2, 3, 4, 5], 4) == []
+    # order-1 fallback: last token seen once before, most recent occurrence
+    assert NgramDrafter().propose([7, 1, 7, 2, 9, 7], 2) == [2, 9]
+
+
+def test_make_drafter_registry():
+    assert isinstance(make_drafter("ngram"), NgramDrafter)
+    with pytest.raises(ValueError, match="unknown drafter"):
+        make_drafter("oracle")
+
+
+# ------------------------------------------------------------- greedy parity
+
+
+def _pattern_prompts(rng, n):
+    """Rotated in-distribution windows of the smoke model's trained pattern
+    (same reasoning as the differential fuzzer: parity is exact regardless,
+    but trained margins make the ngram drafter's accepts realistic)."""
+    pattern = [int(t) for t in np.arange(48) % PERIOD + TOK0]
+    out = []
+    for _ in range(n):
+        cut = int(rng.integers(0, 24))
+        out.append(pattern[cut : cut + int(rng.integers(6, 20))])
+    return out
+
+
+def _run_engine(cfg, params, prompts, *, cache_dtype, spec_k, drafter=None,
+                eos_id=None, num_blocks=None, max_new=14, audit=True):
+    from repro.runtime.engine import PagedEngine
+
+    eng = PagedEngine(cfg, params, max_slots=3, max_seq=64, block_size=8,
+                      prefill_chunk=16, eos_id=eos_id, seed=0, fused=True,
+                      num_blocks=num_blocks, cache_dtype=cache_dtype,
+                      spec_k=spec_k, drafter=drafter)
+    uids = [eng.submit(p, max_new) for p in prompts]
+    while eng.has_work():
+        eng.step_chunk()
+        if audit:
+            audit_block_invariants(eng)
+    res = eng.take_finished()
+    return [res[u].tokens for u in uids], eng
+
+
+@pytest.mark.parametrize("kv_dtype", ["fp32", "bf16", "int8", "int4"])
+def test_spec_greedy_parity_all_pool_formats(smoke_model, test_seed, kv_dtype):
+    """Property test: spec decode (k=4, ngram drafter) is bit-exact vs
+    vanilla on a randomized trace for every pool format, with the allocator
+    audit after every chunk; the drafter must actually be earning accepts
+    (the trained pattern makes the ngram near-oracle) and spending fewer
+    target-model launches per token."""
+    from repro.runtime.serve import KV_DTYPES
+
+    cfg, params = smoke_model
+    rng = np.random.default_rng(test_seed)
+    prompts = _pattern_prompts(rng, 5)
+    dt = KV_DTYPES[kv_dtype]
+    base, beng = _run_engine(cfg, params, prompts, cache_dtype=dt, spec_k=0)
+    spec, seng = _run_engine(cfg, params, prompts, cache_dtype=dt, spec_k=4)
+    assert spec == base, f"[seed {test_seed}] {kv_dtype}: spec diverged from vanilla"
+    st = seng.stats
+    assert st["spec_rounds"] > 0 and st["spec_accepted"] > 0
+    assert st["spec_emitted"] == sum(len(t) for t in base) - len(prompts)
+    # steps-per-token: every vanilla decode step serves the whole batch, a
+    # spec round serves one slot — compare per-token launches conservatively
+    assert st["spec_rounds"] < st["spec_emitted"], "speculation never batched tokens"
+
+
+def test_spec_parity_with_eos_truncation(smoke_model, test_seed):
+    """EOS landing mid-window: emissions past the hit are truncated exactly
+    where vanilla would have stopped, and the finish reason matches."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(test_seed)
+    prompts = _pattern_prompts(rng, 4)
+    eos = TOK0 + 3  # appears in the trained pattern -> hit mid-generation
+    base, _ = _run_engine(cfg, params, prompts, cache_dtype=np.float32,
+                          spec_k=0, eos_id=eos)
+    spec, seng = _run_engine(cfg, params, prompts, cache_dtype=np.float32,
+                             spec_k=4, eos_id=eos)
+    assert spec == base
+    assert any(t and t[-1] == eos for t in base), "trace never hit EOS — dead test"
+
+
+def test_spec_scripted_accept_edges(smoke_model, test_seed):
+    """The k=max all-accepted and k=0 all-rejected edges, scripted with
+    FnDrafter: an oracle replaying vanilla's own output accepts every draft;
+    a drafter proposing guaranteed-wrong tokens accepts none. Both stay
+    bit-exact — the correction token is the verify argmax either way."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(test_seed)
+    prompts = _pattern_prompts(rng, 4)
+    base, _ = _run_engine(cfg, params, prompts, cache_dtype=np.float32, spec_k=0)
+    seqs = [list(p) + t for p, t in zip(prompts, base)]
+
+    def continuation(ctx, k):
+        for seq in seqs:
+            if len(ctx) <= len(seq) and seq[: len(ctx)] == list(ctx):
+                return seq[len(ctx) : len(ctx) + k]
+        return []
+
+    oracle, oeng = _run_engine(cfg, params, prompts, cache_dtype=np.float32,
+                               spec_k=4, drafter=FnDrafter(continuation))
+    assert oracle == base
+    ost = oeng.stats
+    assert ost["spec_drafted"] > 0 and ost["spec_accepted"] == ost["spec_drafted"]
+
+    wrong = FnDrafter(lambda ctx, k: [(t + 1) % cfg.vocab_size
+                                      for t in continuation(ctx, k)])
+    rejected, reng = _run_engine(cfg, params, prompts, cache_dtype=np.float32,
+                                 spec_k=4, drafter=wrong)
+    assert rejected == base
+    rst = reng.stats
+    assert rst["spec_drafted"] > 0 and rst["spec_accepted"] == 0
+
+
+def test_spec_parity_dp2_fleet(smoke_model, test_seed):
+    """dp=2 replica fleets route requests by load, which greedy spec decode
+    must not observe: fleet tokens == single-engine vanilla tokens."""
+    from repro.runtime.engine import DataParallelEngine
+
+    cfg, params = smoke_model
+    rng = np.random.default_rng(test_seed)
+    prompts = _pattern_prompts(rng, 5)
+    base, _ = _run_engine(cfg, params, prompts, cache_dtype=np.float32, spec_k=0)
+    fleet = DataParallelEngine(cfg, params, replicas=2, max_slots=3, max_seq=64,
+                               block_size=8, prefill_chunk=16, eos_id=None,
+                               seed=0, fused=True, cache_dtype=np.float32,
+                               spec_k=4)
+    uids = [fleet.submit(p, 14) for p in prompts]
+    res = fleet.run()
+    assert [res[u].tokens for u in uids] == base
+    assert fleet.stats["spec_rounds"] > 0
+
+
+def test_spec_sharded_parity_tp2_and_dp2tp2():
+    """tp=2 pool sharding and a (dp=2, tp=2) fleet under 8 virtual devices:
+    spec tokens must match the unsharded vanilla engine bit-exactly (the
+    verify chunk runs the same shard_map'ed fused prefill as PR 5)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.configs import get_config
+        from repro.launch.mesh import make_replica_meshes
+        from repro.models import build_model
+        from repro.runtime.engine import DataParallelEngine, PagedEngine
+
+        cfg = get_config("yi-6b").reduced(num_layers=2)
+        cfg = cfg.with_quant(softmax_impl="exaq", bits=2)
+        m = build_model(cfg)
+        params = m.init(jax.random.PRNGKey(0), jnp.bfloat16)
+        rng = np.random.default_rng(0)
+        shared = rng.integers(0, cfg.vocab_size, 8)
+        prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, n)])
+                   for n in (9, 14, 11, 6)]
+
+        def run_engine(eng):
+            uids = [eng.submit(p, 8) for p in prompts]
+            res = eng.run()
+            return [res[u].tokens for u in uids]
+
+        kw = dict(max_slots=2, max_seq=40, block_size=4, prefill_chunk=8,
+                  fused=True, cache_dtype=jnp.int8, seed=0)
+        base = run_engine(PagedEngine(cfg, params, **kw))
+        mesh = make_replica_meshes(1, 2)[0]
+        tp = run_engine(PagedEngine(cfg, params, mesh=mesh, spec_k=3, **kw))
+        assert tp == base, (tp, base)
+        fleet = DataParallelEngine(cfg, params, replicas=2,
+                                   meshes=make_replica_meshes(2, 2),
+                                   spec_k=3, **kw)
+        got = run_engine(fleet)
+        assert got == base, (got, base)
+        assert fleet.stats["spec_rounds"] > 0
+        print("SPEC_SHARDED_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "SPEC_SHARDED_OK" in out.stdout
+
+
+# ---------------------------------------------------------------- fault paths
+
+
+def _core_with_decoding_slot(*, num_blocks, prompt_len=6, max_new=12,
+                             block_size=4, quantized=True):
+    """Host-only EngineCore driven to one decoding slot whose kv length sits
+    mid-block (forces the read-fork path in plan_spec_round)."""
+    rng = np.random.default_rng(0)
+    core = EngineCore(max_slots=2, max_seq=32, block_size=block_size,
+                      num_blocks=num_blocks, eos_id=None, quantized=quantized)
+    emu = HostDeviceEmulator(rng, vocab=40, eos=None)
+    core.submit(list(range(2, 2 + prompt_len)), max_new)
+    while not core.num_active:
+        emu.step_chunk(core, steps=1)
+    core.take_pending_copies()
+    core.take_fresh_scale_ids()
+    slot = int(np.nonzero(core._active)[0][0])
+    return core, slot
+
+
+def test_mid_verify_preemption_releases_branches_and_purges_copies():
+    """Regression for the fork-lifecycle drain hazard: a preemption landing
+    between branch fork and verify commit must release EVERY branch block
+    and purge the branch's queued CoW fork copy — a recycled destination
+    must never eat the stale copy (PR 4's scale-reset escape, copy-queue
+    edition)."""
+    core, slot = _core_with_decoding_slot(num_blocks=16)
+    plan = core.plan_spec_round(slot, [5, 6, 7])
+    br = plan.branch
+    assert br.forked and core.pending_copies, "setup must queue a fork copy"
+    branch_blocks = list(br.table)
+    assert any(d in branch_blocks for _, d in core.pending_copies)
+    core._preempt(slot)
+    audit_block_invariants(core)
+    assert not core._branches
+    for b in branch_blocks:
+        assert core.pool.refcount[b] == 0, f"branch block {b} leaked"
+    assert not any(d in branch_blocks for _, d in core.pending_copies), (
+        "stale fork copy survived the preemption — it could land in a "
+        "recycled block"
+    )
+    # the freed ids are allocatable again without inheriting anything: drain
+    # the allocator and confirm every branch block comes back clean
+    got = set()
+    while True:
+        try:
+            got.add(core.pool.alloc())
+        except PoolExhausted:
+            break
+    assert set(branch_blocks) <= got
+
+
+def test_mid_verify_cancel_releases_branches():
+    """Client disconnect between fork and commit: the cancel path (via the
+    paged ``_finish``) must abort the branch exactly like a preemption."""
+    core, slot = _core_with_decoding_slot(num_blocks=16)
+    plan = core.plan_spec_round(slot, [5, 6])
+    branch_blocks = list(plan.branch.table)
+    assert core.cancel(core._slots[slot].uid)
+    audit_block_invariants(core)
+    assert not core._branches
+    assert all(core.pool.refcount[b] == 0 for b in branch_blocks)
+    assert not any(d in branch_blocks for _, d in core.pending_copies)
+
+
+def test_plan_pool_exhausted_rolls_back_partial_branch():
+    """PoolExhausted midway through a multi-block branch allocation: the
+    plan must release what it grabbed and deregister nothing — the audit
+    plus a before/after refcount snapshot catch a partial leak."""
+    core, slot = _core_with_decoding_slot(num_blocks=16)
+    held = []
+    while True:  # pin everything but one block: k=3 needs two (fork + growth)
+        try:
+            held.append(core.pool.alloc())
+        except PoolExhausted:
+            break
+    core.pool.release(held.pop())
+    before = np.asarray(core.pool.refcount).copy()
+    with pytest.raises(PoolExhausted):
+        core.plan_spec_round(slot, [5, 6, 7])
+    np.testing.assert_array_equal(np.asarray(core.pool.refcount), before)
+    assert not core._branches and not core.pending_copies
+    audit_block_invariants(core, held=held)
+
+
+def test_engine_spec_under_pool_pressure_stays_bit_exact(smoke_model, test_seed):
+    """End-to-end: a pool too small for the full working set forces the
+    degrade-to-k=0 retry and preempt-and-recompute inside spec rounds; the
+    final greedy tokens must still match a fully-provisioned vanilla run
+    (recompute is bit-exact), with the allocator audit after every chunk."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(test_seed)
+    prompts = _pattern_prompts(rng, 4)
+    base, _ = _run_engine(cfg, params, prompts, cache_dtype=np.float32, spec_k=0)
+    # 3 slots x 64/8 = 24 blocks fully provisioned; squeeze to force pressure
+    spec, seng = _run_engine(cfg, params, prompts, cache_dtype=np.float32,
+                             spec_k=4, num_blocks=13)
+    assert spec == base, f"[seed {test_seed}] pool pressure broke spec parity"
+    assert seng.stats["spec_rounds"] > 0
+
+
+def test_spec_sole_slot_exhaustion_raises_non_retryable(smoke_model):
+    """A sole active request whose next round cannot fund even one block
+    must surface the same honest non-retryable PoolExhausted as the vanilla
+    reserve path — not corrupt KV or spin."""
+    cfg, params = smoke_model
+    from repro.runtime.engine import PagedEngine
+
+    eng = PagedEngine(cfg, params, max_slots=1, max_seq=64, block_size=8,
+                      prefill_chunk=16, eos_id=None, seed=0, fused=True,
+                      cache_dtype=np.float32, spec_k=4)
+    eng.submit([int(t) for t in np.arange(10) % PERIOD + TOK0], 40)
+    eng.step_chunk()  # prefill + first spec rounds
+    held = []
+    while True:
+        try:
+            held.append(eng.pool.alloc())
+        except PoolExhausted:
+            break
+    with pytest.raises(PoolExhausted, match="only active request") as ei:
+        while eng.has_work():
+            eng.step_chunk()
+    assert not ei.value.retryable
+
+
+def test_spec_rejects_non_greedy_sampling(smoke_model):
+    from repro.runtime.engine import PagedEngine
+    from repro.runtime.sampling import SamplingParams
+
+    cfg, params = smoke_model
+    eng = PagedEngine(cfg, params, max_slots=2, max_seq=64, block_size=8,
+                      prefill_chunk=16, seed=0, cache_dtype=np.float32, spec_k=4)
+    with pytest.raises(ValueError, match="greedy-only"):
+        eng.submit([3, 4, 5], 8, SamplingParams(temperature=0.7))

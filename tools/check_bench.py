@@ -31,6 +31,10 @@ informational context. Per-metric rules:
     exact-or-lower ("ceiling"): TTFT and inter-token latency are measured
     in deterministic scheduler ticks, not wall clock, so any rise is a
     real scheduling regression, and improvements always pass.
+  * the speculative-decoding metrics (`serving.spec.*`) are deterministic
+    too — greedy accept/reject over seeded drafts — so vanilla parity is a
+    "bool" gate and the accepted-per-verify / steps-per-token-reduction
+    speedup counters are exact-or-better floors.
 
 Metrics in the baseline that no rule matches are informational. Metrics the
 rules match that *disappear* from a fresh run fail (a silently dropped
@@ -106,6 +110,9 @@ SPEC = [
     ("serving.bursty.p99_itl_steps", "ceiling"),
     ("serving.bursty.overload.completed", "floor"),
     ("serving.bursty.overload.all_shed_retryable", "bool"),
+    ("serving.spec.greedy_parity_vs_vanilla", "bool"),
+    ("serving.spec.accepted_per_verify", "floor"),
+    ("serving.spec.steps_per_token_reduction_x", "floor"),
 ]
 FLOOR_EPS = 1e-9  # fp-serialization slack for the exact-or-better rules
 
