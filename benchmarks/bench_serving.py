@@ -69,6 +69,12 @@ hardware can't move them). An overload arm re-runs the trace behind a
 *retryable* ``Rejected`` with a backoff hint while the admitted subset
 still completes. All of it rides under ``"bursty"`` in the JSON.
 
+Part 8 serves every non-dense decoder family through the paged StatePool
+(DESIGN.md §13): pure-SSM ``mamba2-1.3b``, MoE ``deepseek-moe-16b``, and
+hybrid ``zamba2-2.7b``, each on a shared-prefix trace gated on exact greedy
+parity against its unpaged reference plus a mean-occupancy floor, under
+``"state_archs"`` in the JSON.
+
 The smoke model is a 2-layer reduced config briefly overfit on a periodic
 token sequence: a random-init model has near-tied logits (argmax margins
 below any quantizer's noise floor, so agreement would measure tie-breaking,
@@ -91,7 +97,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.optim.adamw import AdamW
-from repro.runtime.engine import DataParallelEngine, Engine, PagedEngine
+from repro.runtime.engine import (DataParallelEngine, Engine, EngineConfig,
+                                  PagedEngine, kv_dtype_name)
 from repro.runtime.train import init_train_state, make_train_step
 
 PERIOD, TOK0 = 7, 5  # the learned pattern: TOK0, TOK0+1, ..., cyclic
@@ -133,17 +140,16 @@ def make_trace(rng, n_requests: int, rate: float, lo: int, hi: int):
 def run_trace(cfg, params, qstate, trace, prompts, *, slots, max_seq, gen, chunk,
               paged=False, block_size=8, prefill_chunk=16, cache_dtype=jnp.bfloat16,
               dp=0, spec_k=0, drafter=None):
-    kw = dict(qstate=qstate, max_slots=slots, max_seq=max_seq, steps_per_sync=chunk, seed=0,
-              cache_dtype=cache_dtype)
-    if spec_k:
-        kw.update(spec_k=spec_k, drafter=drafter)
+    config = EngineConfig(max_slots=slots, max_seq=max_seq, block_size=block_size,
+                          prefill_chunk=prefill_chunk, steps_per_sync=chunk, seed=0,
+                          kv_dtype=kv_dtype_name(cache_dtype), spec_k=spec_k,
+                          drafter=drafter, replicas=dp or 1)
     if dp:
-        eng = DataParallelEngine(cfg, params, replicas=dp, block_size=block_size,
-                                 prefill_chunk=prefill_chunk, **kw)
+        eng = DataParallelEngine(cfg, params, config, qstate=qstate)
     elif paged:
-        eng = PagedEngine(cfg, params, block_size=block_size, prefill_chunk=prefill_chunk, **kw)
+        eng = PagedEngine(cfg, params, config, qstate=qstate)
     else:
-        eng = Engine(cfg, params, **kw)
+        eng = Engine(cfg, params, config, qstate=qstate)
     pending = list(range(len(trace)))
     uid_of = {}
     step_clock = 0  # monotone: advances by decode steps executed, or idle-skips
@@ -439,11 +445,11 @@ def bench_bursty(base, params, calib_stats, args, rng, report):
 
     cfg = base.with_quant(softmax_impl="exaq", bits=2)
     qstate = build_model(cfg).qstate_from_stats(calib_stats)
-    kw = dict(qstate=qstate, max_slots=args.slots, max_seq=max_seq, seed=0,
-              steps_per_sync=1, block_size=args.block_size,
-              prefill_chunk=args.prefill_chunk)
+    config = EngineConfig(max_slots=args.slots, max_seq=max_seq, seed=0,
+                          steps_per_sync=1, block_size=args.block_size,
+                          prefill_chunk=args.prefill_chunk, kv_dtype="bf16")
 
-    eng = PagedEngine(cfg, params, **kw)
+    eng = PagedEngine(cfg, params, config, qstate=qstate)
     uid_of, rejections, token_ticks, results = _replay_streaming(
         eng, trace, prompts, args.gen)
     assert not rejections, "no admission limits were set; nothing may be rejected"
@@ -469,8 +475,10 @@ def bench_bursty(base, params, calib_stats, args, rng, report):
     # overload arm: the same trace behind a max_inflight admission cap — the
     # cap must shed as structured retryable rejections, never grow the queue,
     # and everything it admits must still complete
+    import dataclasses
     cap = args.slots
-    eng2 = PagedEngine(cfg, params, max_inflight=cap, **kw)
+    eng2 = PagedEngine(cfg, params, dataclasses.replace(config, max_inflight=cap),
+                       qstate=qstate)
     uid2, rej2, _, res2 = _replay_streaming(eng2, trace, prompts, args.gen)
     assert rej2, f"bursts of 4 behind max_inflight={cap} must shed something"
     assert all(len(res2[u].tokens) == args.gen for u in uid2.values())
@@ -547,6 +555,79 @@ def bench_spec(base, params, calib_stats, args, rng, report):
         "accepted_per_verify": accepted_per_verify,
         "steps_per_token_reduction_x": reduction,
     }
+
+
+def bench_state_archs(args, report):
+    """Part 8: architecture-agnostic StatePool serving (DESIGN.md §13).
+
+    Serving traces for every non-dense decoder family through the paged
+    engine — pure-SSM (``mamba2-1.3b``, per-slot recurrent-state + conv-tail
+    planes checkpointed at block granularity), MoE (``deepseek-moe-16b``,
+    no pool state but router dispatch batched across live slots), and
+    hybrid (``zamba2-2.7b``, attention K/V planes and SSM planes side by
+    side in one pool) — each gated on exact greedy-token parity against its
+    unpaged reference (``serve.generate``'s rectangular loop for the state
+    families, the slot engine for MoE) plus a mean-occupancy floor.
+
+    Models are reduced random-init fp32: the gate compares two fp32
+    computation paths over the *same* weights, where argmax margins sit
+    orders of magnitude above the fp-noise between chunked and rectangular
+    attention, so the trained smoke head (needed for the *quantized*
+    agreement floors elsewhere) buys nothing here. State families serve
+    with ``ssm_chunk=1`` — the block-checkpoint bitwise-reproducibility
+    requirement the engine enforces — and an fp32 pool (state planes are
+    never quantized)."""
+    import dataclasses
+
+    from repro.runtime import serve as serve_rt
+    from repro.runtime.engine import EngineConfig
+    from repro.runtime.engine_core import Request
+
+    ARCHS = {
+        "mamba2-1.3b": {"num_layers": 2},
+        "deepseek-moe-16b": {"num_layers": 2},
+        # 2 mamba blocks + the weight-shared attention block = smallest
+        # config exercising both plane groups in one pool
+        "zamba2-2.7b": {"num_layers": 2, "hybrid_period": 2},
+    }
+    sys_len, tail, B, slots, gen, bs = 12, 3, 6, 3, 8, 4
+    report["state_archs"] = {}
+    for arch, overrides in ARCHS.items():
+        cfg = get_config(arch).reduced(**overrides)
+        if cfg.family in ("ssm", "hybrid"):
+            cfg = dataclasses.replace(cfg, ssm_chunk=1)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(args.seed), jnp.float32)
+        rng = np.random.default_rng(args.seed)
+        prefix = rng.integers(1, cfg.vocab_size, size=(sys_len,))
+        prompts = [np.concatenate([prefix, rng.integers(1, cfg.vocab_size, (tail,))])
+                   for _ in range(B)]
+
+        rect = np.asarray(serve_rt.generate(
+            params, cfg, jnp.asarray(np.stack(prompts)), gen, kv_dtype="fp32"))
+
+        config = EngineConfig(max_slots=slots, max_seq=sys_len + tail + gen,
+                              block_size=bs, prefill_chunk=2 * bs, kv_dtype="fp32")
+        eng = PagedEngine(cfg, params, config)
+        uids = [eng.submit(Request(p, gen)) for p in prompts]
+        results = eng.run()
+        parity = all(list(results[u].tokens) == rect[b].tolist()
+                     for b, u in enumerate(uids))
+        occ = eng.mean_occupancy
+        hit = eng.prefix_hit_rate
+        print(f"{arch:18s} ({cfg.family:6s}): greedy parity vs unpaged: {parity}; "
+              f"occupancy {occ:.2f}/{slots}, prefix-cache hit rate {100*hit:.1f}% "
+              f"({B} requests, {sys_len}-token shared prefix, ssm_chunk="
+              f"{cfg.ssm_chunk if cfg.family in ('ssm', 'hybrid') else '-'})")
+        assert parity, f"{arch}: paged StatePool diverged from the unpaged reference"
+        assert occ > 1.0, f"{arch}: trace never batched ({occ:.2f} mean occupancy)"
+        report["state_archs"][arch] = {
+            "family": cfg.family,
+            "greedy_parity_vs_unpaged": parity,
+            "mean_occupancy": occ,
+            "prefix_hit_rate": hit,
+            "preemptions": eng.stats["preemptions"],
+        }
 
 
 def bench_paged_decode_micro(base, params, args, report):
@@ -797,6 +878,9 @@ def main():
     print("--- speculative decoding: n-gram drafts + fused verify (DESIGN.md §12) ---")
     bench_spec(base, params, calib_stats, args, rng, report)
 
+    print("--- StatePool architectures: mamba2 / moe / hybrid paged serving (DESIGN.md §13) ---")
+    bench_state_archs(args, report)
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=2)
@@ -812,7 +896,8 @@ def main():
           ">=1.8x beyond int8 (>=3.5x vs bf16) and >=99% agreement on the packed-int4 pool; "
           "bit-exact dp=2 fleet parity with both replicas served; "
           "bursty trace served with every admission-control shed structured + retryable; "
-          "bit-exact speculative decode with >=1.5x fewer target-model steps per token at k=4")
+          "bit-exact speculative decode with >=1.5x fewer target-model steps per token at k=4; "
+          "greedy parity vs the unpaged reference for mamba2/moe/hybrid StatePool serving")
 
 
 if __name__ == "__main__":

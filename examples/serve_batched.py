@@ -20,10 +20,15 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
-from repro.runtime.engine import Engine, PagedEngine
+from repro.runtime.engine import Engine, EngineConfig, PagedEngine
 from repro.runtime.sampling import GREEDY, SamplingParams
 
 ARCH, SLOTS, MAX_SEQ, GEN = "yi-6b", 4, 96, 16
+# one EngineConfig per engine shape (DESIGN.md §13): the same frozen config
+# drives the slot engine and, with paging fields, every paged variant below
+SLOT_CONFIG = EngineConfig(max_slots=SLOTS, max_seq=MAX_SEQ, seed=0)
+PAGED_CONFIG = EngineConfig(max_slots=SLOTS, max_seq=MAX_SEQ, seed=0,
+                            block_size=16, prefill_chunk=32)
 
 rng = np.random.default_rng(0)
 base = get_config(ARCH).reduced()
@@ -43,7 +48,7 @@ styles = [GREEDY, SamplingParams(temperature=0.7, top_k=40), SamplingParams(temp
 
 for impl, bits in (("exact", 2), ("exaq", 2)):
     cfg = base.with_quant(softmax_impl=impl, bits=bits)
-    eng = Engine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ, seed=0)
+    eng = Engine(cfg, params, SLOT_CONFIG)
     uids = [eng.submit(p, GEN, styles[i % len(styles)]) for i, p in enumerate(prompts)]
     results = eng.run()
     # stats: decode_steps / tokens_out / occupancy track how full the
@@ -61,11 +66,10 @@ for impl, bits in (("exact", 2), ("exaq", 2)):
 # reduce-order tie flips; the trained-model benchmark asserts 100% parity
 # for EXAQ-INT2 (benchmarks/bench_serving.py).
 cfg = base.with_quant(softmax_impl="exact")
-slot_eng = Engine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ, seed=0)
+slot_eng = Engine(cfg, params, SLOT_CONFIG)
 slot_uids = [slot_eng.submit(p, GEN) for p in prompts]
 slot_res = slot_eng.run()
-paged = PagedEngine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ, seed=0,
-                    block_size=16, prefill_chunk=32)
+paged = PagedEngine(cfg, params, PAGED_CONFIG)
 paged_uids = [paged.submit(p, GEN) for p in prompts]
 paged_res = paged.run()
 agree = np.concatenate([np.asarray(slot_res[a].tokens) == np.asarray(paged_res[b].tokens)
@@ -81,8 +85,7 @@ print(f"--- paged engine: greedy agreement vs slot engine {100 * agree.mean():.1
 # (Submitting one request first lets it register before the rest arrive;
 # requests submitted in the same instant race admission and may all miss.)
 system = rng.integers(0, base.vocab_size, 48)  # 3 blocks of 16
-reuse = PagedEngine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ, seed=0,
-                    block_size=16, prefill_chunk=32)
+reuse = PagedEngine(cfg, params, PAGED_CONFIG)
 first = reuse.submit(np.concatenate([system, rng.integers(0, base.vocab_size, 6)]), GEN)
 reuse.step_chunk()  # first request prefills + registers the system blocks
 late = [reuse.submit(np.concatenate([system, rng.integers(0, base.vocab_size, int(n))]), GEN)
@@ -102,10 +105,11 @@ print(f"--- shared-prefix demo: {100 * reuse.prefix_hit_rate:.0f}% of prompt tok
 # below the EXAQ softmax's own 2-bit grid, so greedy tokens agree.
 from repro.kernels.exaq_paged_attention import paged_decode_bytes_model
 
+import dataclasses
+
 engines, results = {}, {}
-for label, dt in (("fp32", jnp.float32), ("int8", jnp.int8)):
-    eng = PagedEngine(cfg, params, max_slots=SLOTS, max_seq=MAX_SEQ, seed=0,
-                      block_size=16, prefill_chunk=32, cache_dtype=dt)
+for label in ("fp32", "int8"):
+    eng = PagedEngine(cfg, params, dataclasses.replace(PAGED_CONFIG, kv_dtype=label))
     uids = [eng.submit(p, GEN) for p in prompts]
     res = eng.run()
     engines[label], results[label] = eng, [res[u].tokens for u in uids]

@@ -50,6 +50,8 @@ class ModelConfig:
     ssm_head_dim: int = 64
     ssm_expand: int = 2
     ssm_conv_width: int = 4
+    ssm_chunk: int = 128         # SSD scan chunk; 1 = per-token recurrence
+                                 # (paged state serving requires 1, DESIGN.md §13)
     hybrid_period: int = 0       # zamba2: shared attn block every N mamba blocks
     enc_layers: int = 0          # whisper: encoder depth (enc-dec when > 0)
     enc_seq: int = 1500          # whisper: encoder frames (stub frontend)

@@ -28,6 +28,7 @@ dp/tp layout. Other families fall back to the rectangular greedy loop in
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -37,7 +38,32 @@ import numpy as np
 from repro.configs import get_config
 from repro.models import build_model
 from repro.runtime import serve as serve_rt
+from repro.runtime.engine_core import EngineConfig, Request
 from repro.runtime.sampling import SamplingParams
+
+
+def args_to_config(args) -> EngineConfig:
+    """The parsed CLI namespace -> one ``EngineConfig`` — THE construction
+    path for every engine this driver builds (slot, paged, data-parallel,
+    online). Pure over the namespace, so unit tests exercise the mapping
+    without devices. ``max_seq`` covers the worst prompt (shared prefix +
+    ragged prompt cap) plus the generation budget."""
+    online = getattr(args, "online", False)
+    return EngineConfig(
+        max_slots=args.slots,
+        max_seq=args.prompt_len + args.shared_prefix + args.gen,
+        block_size=args.block_size,
+        prefill_chunk=args.prefill_chunk,
+        num_blocks=args.num_blocks or None,
+        eos_id=None if args.eos_id < 0 else args.eos_id,
+        kv_dtype=args.kv_dtype,
+        fused=args.fused,
+        seed=args.seed,
+        max_inflight=(args.max_inflight or None) if online else None,
+        spec_k=args.spec_k,
+        drafter=args.drafter if args.spec_k else None,
+        replicas=args.dp,
+    )
 
 
 def validate_serve_args(args, device_count: int | None = None):
@@ -122,9 +148,9 @@ def _serve_online(eng, prompts, args, sp):
         handles, shed = [], []
         async with AsyncFrontend(eng) as fe:
             for i, p in enumerate(prompts):
-                h = await fe.submit(p, args.gen, sp,
-                                    priority=i % args.priority_classes,
-                                    deadline=deadline)
+                h = await fe.submit(Request(p, args.gen, sp,
+                                            priority=i % args.priority_classes,
+                                            deadline=deadline))
                 (shed if isinstance(h, Rejected) else handles).append(h)
             for h in handles:
                 await h.collect()
@@ -182,7 +208,8 @@ def main():
                          "per prefill chunk; needs --impl exaq)")
     ap.add_argument("--no-fused", dest="fused", action="store_false",
                     help="paged serving: force the gather-then-dispatch references")
-    ap.add_argument("--kv-dtype", default="bf16", choices=["fp32", "bf16", "int8", "int4"],
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["fp32", "fp16", "bf16", "int8", "int4"],
                     help="KV cache storage dtype; int8 (paged only) stores the pool "
                          "quantized with per-block scales (DESIGN.md §6); int4 (paged "
                          "only) packs two values per byte with 4-bit sub-block scale "
@@ -225,6 +252,11 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     cfg = cfg.with_quant(softmax_impl=args.impl, bits=args.bits, clip_rule=args.clip_rule)
+    if args.paged and cfg.family in ("ssm", "hybrid"):
+        # paged state pools checkpoint recurrent state per block; the SSD
+        # recurrence must run per token so the checkpoints reproduce the
+        # rectangular scan bit-exactly (DESIGN.md §13)
+        cfg = dataclasses.replace(cfg, ssm_chunk=1)
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0), jnp.bfloat16)
     rng = np.random.default_rng(args.seed)
@@ -234,7 +266,7 @@ def main():
     print(f"arch={cfg.name} impl={args.impl} int{args.bits} kv={args.kv_dtype} "
           f"sampling=(T={sp.temperature}, k={sp.top_k}, p={sp.top_p})")
 
-    if cfg.family in ("dense", "moe"):
+    if cfg.family in ("dense", "moe") or (args.paged and cfg.family in ("ssm", "hybrid")):
         from repro.runtime.engine import Engine, PagedEngine
 
         # ragged prompts: uniform in [prompt_len/2, prompt_len]
@@ -242,21 +274,12 @@ def main():
         shared = rng.integers(0, cfg.vocab_size, args.shared_prefix)
         prompts = [np.concatenate([shared, rng.integers(0, cfg.vocab_size, int(n))])
                    for n in lens]
-        max_seq = args.prompt_len + args.shared_prefix + args.gen
-        from repro.runtime.serve import KV_DTYPES
+        config = args_to_config(args)
 
         if args.paged:
-            engine_kw = dict(max_slots=args.slots, max_seq=max_seq,
-                             eos_id=eos, seed=args.seed, block_size=args.block_size,
-                             prefill_chunk=args.prefill_chunk,
-                             num_blocks=args.num_blocks or None, fused=args.fused,
-                             cache_dtype=KV_DTYPES[args.kv_dtype],
-                             spec_k=args.spec_k, drafter=args.drafter)
-            if args.online:
-                # deadlines compare against the engine clock: wall seconds when
-                # deadlines are live, deterministic scheduler ticks otherwise
-                engine_kw.update(max_inflight=args.max_inflight or None,
-                                 clock=time.monotonic if args.deadline_ms else None)
+            # deadlines compare against the engine clock: wall seconds when
+            # deadlines are live, deterministic scheduler ticks otherwise
+            clock = time.monotonic if (args.online and args.deadline_ms) else None
             if args.dp > 1 or args.tp > 1:
                 from repro.launch.mesh import make_replica_meshes
 
@@ -264,20 +287,19 @@ def main():
                 if args.dp > 1:
                     from repro.runtime.engine import DataParallelEngine
 
-                    eng = DataParallelEngine(cfg, params, replicas=args.dp,
-                                             meshes=meshes, **engine_kw)
+                    eng = DataParallelEngine(cfg, params, config, meshes=meshes,
+                                             clock=clock)
                 else:
-                    eng = PagedEngine(cfg, params, mesh=meshes[0], **engine_kw)
+                    eng = PagedEngine(cfg, params, config, mesh=meshes[0], clock=clock)
             else:
-                eng = PagedEngine(cfg, params, **engine_kw)
+                eng = PagedEngine(cfg, params, config, clock=clock)
         else:
-            eng = Engine(cfg, params, max_slots=args.slots, max_seq=max_seq,
-                         eos_id=eos, seed=args.seed, cache_dtype=KV_DTYPES[args.kv_dtype])
+            eng = Engine(cfg, params, config)
         if args.online:
             _serve_online(eng, prompts, args, sp)
             return
         t0 = time.time()
-        uids = [eng.submit(p, args.gen, sp) for p in prompts]
+        uids = [eng.submit(Request(p, args.gen, sp)) for p in prompts]
         results = eng.run()
         wall = time.time() - t0
         n_out = sum(len(g.tokens) for g in results.values())

@@ -40,14 +40,27 @@ def init_mamba(key, cfg, dtype=jnp.float32) -> dict:
     }
 
 
+def _causal_conv_window(cat: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over a window with explicit history rows.
+
+    cat: (B, w-1+C, ch) = [history rows | C chunk rows] -> (B, C, ch). The
+    shifted-add order is the ONE conv summation in the codebase — train,
+    prefill, paged chunk prefill, and decode all reduce to it, so the paged
+    state planes reproduce the rectangular path bitwise (DESIGN.md §13).
+    """
+    width = w.shape[0]
+    C = cat.shape[1] - (width - 1)
+    out = cat[:, width - 1 :] * w[-1][None, None, :]
+    for i in range(1, width):
+        out = out + cat[:, width - 1 - i : width - 1 - i + C] * w[-1 - i][None, None, :]
+    return out + b[None, None, :]
+
+
 def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Depthwise causal conv via shifted adds (width <= 4 — fuses on the VPU)."""
     width = w.shape[0]
-    out = xbc * w[-1][None, None, :]
-    for i in range(1, width):
-        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
-        out = out + shifted * w[-1 - i][None, None, :]
-    return out + b[None, None, :]
+    cat = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    return _causal_conv_window(cat, w, b)
 
 
 def _split_proj(proj: jnp.ndarray, cfg):
@@ -102,6 +115,28 @@ def ssd_scan(xs, dt, a, Bm, Cm, h0, chunk: int):
     return y, h_T
 
 
+def _ssd_scan_with_states(xs, dt, a, Bm, Cm, h0):
+    """Per-token (chunk=1) SSD scan that also stacks the state after every
+    step — bitwise the same per-step math as ``ssd_scan(..., chunk=1)``, which
+    is what the block-granular checkpoints of the paged state pool need
+    (DESIGN.md §13). xs: (b, S, nh, hd). Returns (y, h_T, hs) with hs of
+    shape (S, b, nh, hd, ds)."""
+    b, S, nh, hd = xs.shape
+
+    def to_steps(t):
+        return jnp.moveaxis(t.reshape((b, S, 1) + t.shape[2:]), 1, 0)
+
+    def body(h, xs_t):
+        h_new, y = _ssd_chunk(h, *xs_t)
+        return h_new, (y, h_new)
+
+    h_T, (ys, hs) = jax.lax.scan(
+        body, h0, (to_steps(xs), to_steps(dt), to_steps(a), to_steps(Bm), to_steps(Cm))
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, S, nh, hd)
+    return y, h_T, hs
+
+
 def mamba_forward(
     params: dict,
     x: jnp.ndarray,
@@ -121,8 +156,10 @@ def mamba_forward(
     if mode == "decode":
         conv_prev = cache["conv"]  # (B, w-1, ch)
         full = jnp.concatenate([conv_prev.astype(xbc.dtype), xbc], axis=1)  # (B, w, ch)
-        conv_out = jnp.einsum("bwc,wc->bc", full, params["conv_w"].astype(xbc.dtype)) + params["conv_b"].astype(xbc.dtype)
-        xbc_t = silu(conv_out)[:, None, :]  # (B, 1, ch)
+        # same shifted-add summation order as the prefill conv, so a decode
+        # step is bitwise one more row of the chunked path (DESIGN.md §13)
+        xbc_t = silu(_causal_conv_window(full, params["conv_w"].astype(xbc.dtype),
+                                         params["conv_b"].astype(xbc.dtype)))  # (B, 1, ch)
         new_conv = full[:, 1:]
     else:
         xbc_t = silu(_causal_conv(xbc, params["conv_w"].astype(xbc.dtype), params["conv_b"].astype(xbc.dtype)))
@@ -139,10 +176,10 @@ def mamba_forward(
 
     if mode == "decode":
         h = cache["ssm"].astype(jnp.float32)  # (B, nh, hd, ds)
-        da = jnp.exp(a[:, 0])  # (B, nh)
-        h_new = da[:, :, None, None] * h + jnp.einsum("bn,bs,bnh->bnhs", dt[:, 0], Bm[:, 0], xs[:, 0])
-        y = jnp.einsum("bs,bnhs->bnh", Cm[:, 0], h_new)[:, None]  # (B,1,nh,hd)
-        h_T = h_new
+        # one _ssd_chunk step (Q=1): bitwise identical to ssd_scan(chunk=1),
+        # so decode, chunked prefill, and preempt-recompute all walk the same
+        # per-token trajectory (DESIGN.md §13)
+        h_T, y = _ssd_chunk(h, xs, dt, a, Bm, Cm)  # y: (B, 1, nh, hd)
     else:
         h0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
         y, h_T = ssd_scan(xs, dt, a, Bm, Cm, h0, chunk)
@@ -153,3 +190,60 @@ def mamba_forward(
     out = jnp.einsum("bsd,dp->bsp", y, params["out_proj"].astype(x.dtype))
     new_cache = {"conv": new_conv, "ssm": h_T.astype(jnp.float32)}
     return out, new_cache
+
+
+def mamba_paged_prefill_chunk(params, x, cfg, conv_prev, h0, n, *, block_size):
+    """One paged prefill chunk of a Mamba2 layer with block-granular state
+    checkpoints (DESIGN.md §13).
+
+    x: (1, C, D) right-padded activations for global positions
+    [start, start+C); conv_prev: (1, w-1, ch) raw (pre-silu, pre-conv)
+    tail rows through position start-1 (zeros when start == 0); h0:
+    (1, nh, hd, ds) SSD state through start-1; n: live rows of the chunk
+    (rows >= n are pads beyond the prompt).
+
+    The chunk runs the per-token (chunk=1) SSD recurrence, so its math is
+    bitwise identical to both the decode path and ``ssd_scan(chunk=1)``.
+    Pad rows are masked via dt = 0: their decay is exp(0) = 1 and their
+    input weight is 0, so the carried state passes through them bitwise.
+
+    Returns (out (1, C, D), conv_ckpts (C//bs, w-1, ch), ssm_ckpts
+    (C//bs, nh, hd, ds)); checkpoint cb holds the conv tail / SSD state
+    through the last live position <= start + (cb+1)*bs - 1 — i.e. the
+    state a resume or prefix hit at that block boundary must see.
+    """
+    din, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B, C, _ = x.shape
+    width = cfg.ssm_conv_width
+    bs = block_size
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    cat = jnp.concatenate([conv_prev.astype(xbc.dtype), xbc], axis=1)  # (1, w-1+C, ch)
+    xbc_t = silu(_causal_conv_window(cat, params["conv_w"].astype(xbc.dtype),
+                                     params["conv_b"].astype(xbc.dtype)))
+
+    xs = xbc_t[..., :din].reshape(B, -1, nh, hd).astype(jnp.float32)
+    Bm = xbc_t[..., din : din + ds].astype(jnp.float32)
+    Cm = xbc_t[..., din + ds :].astype(jnp.float32)
+    xs = shard_activation(xs, "ssm_heads")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    live = (jnp.arange(C) < n)[None, :, None]
+    dt = jnp.where(live, dt, 0.0)  # pads: exp(0)=1 decay, zero input weight
+    a = -jnp.exp(params["A_log"])[None, None, :] * dt
+
+    y, _, hs = _ssd_scan_with_states(xs, dt, a, Bm, Cm, h0.astype(jnp.float32))
+
+    # block-granular checkpoints (C // bs of them; C % bs == 0 is enforced by
+    # the engine's prefill_chunk % block_size gate)
+    ends = (jnp.arange(C // bs) + 1) * bs - 1
+    ssm_ckpts = hs[ends, 0]                                  # (C//bs, nh, hd, ds)
+    e_cb = jnp.minimum((jnp.arange(C // bs) + 1) * bs, n)    # last live row + 1
+    rows = e_cb[:, None] + jnp.arange(width - 1)[None, :]    # cat row indices
+    conv_ckpts = cat[0][rows]                                # (C//bs, w-1, ch)
+
+    y = y + params["D_skip"][None, None, :, None] * xs
+    y = y.reshape(B, -1, din).astype(x.dtype)
+    y = rmsnorm(y * silu(z), params["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dp->bsp", y, params["out_proj"].astype(x.dtype))
+    return out, conv_ckpts, ssm_ckpts

@@ -244,7 +244,9 @@ class Model:
                 aux = {"moe_lb": lb / cfg.num_layers, "moe_z": z / cfg.num_layers}
         elif fam == "ssm":
             def body(h, lp):
-                out, _ = mamba2.mamba_forward(lp["ssm"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, mode="train")
+                out, _ = mamba2.mamba_forward(
+                    lp["ssm"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, mode="train", chunk=cfg.ssm_chunk
+                )
                 return shard_activation(h + out, "btd"), None
 
             h, _ = jax.lax.scan(self._remat(body), h, params["layers"])
@@ -256,7 +258,9 @@ class Model:
                 gp, clip = xs
 
                 def inner(hh, lp):
-                    out, _ = mamba2.mamba_forward(lp["ssm"], rmsnorm(hh, lp["ln1"], cfg.norm_eps), cfg, mode="train")
+                    out, _ = mamba2.mamba_forward(
+                        lp["ssm"], rmsnorm(hh, lp["ln1"], cfg.norm_eps), cfg, mode="train", chunk=cfg.ssm_chunk
+                    )
                     return hh + out, None
 
                 h, _ = jax.lax.scan(inner, h, gp)
@@ -417,12 +421,52 @@ class Model:
         ``sharding.block_scale_spec`` / ``sharding.block_sub_scale_spec`` —
         so each tensor-parallel shard allocates only its local head
         partition.
+
+        ssm / hybrid families build the architecture-agnostic *StatePool*
+        instead (DESIGN.md §13): per-layer plane groups keyed by what each
+        layer kind needs. Mamba2 layers get a "conv" plane of
+        (L, num_blocks, w-1, ch) raw conv-tail rows plus an "ssm" plane of
+        (L, num_blocks, nh, hd, ds) fp32 SSD states, checkpointed at block
+        granularity — block b holds the recurrent state *through the last
+        live token of block b*, which is exactly what a resume, CoW fork or
+        prefix hit at that block boundary must see. Hybrid (zamba2) adds the
+        shared-attention "k"/"v" planes of (G, num_blocks, KV, bs, Dh) with
+        G = num_layers // hybrid_period. The block axis sits at position 1
+        in *every* plane, so the engine's generic block-copy / table
+        machinery never inspects plane kinds — blocks are blocks. State
+        planes are full-precision only (quantized pools are attention-only).
         """
         from repro.kernels import ops
 
         cfg = self.cfg
-        assert cfg.family in ("dense", "vlm", "moe"), (
-            f"paged KV pool requires an attention KV cache, got family={cfg.family!r}"
+        fam = cfg.family
+        if fam in ("ssm", "hybrid"):
+            if ops.kv_cache_is_int4(dtype) or jnp.dtype(dtype) == jnp.int8:
+                raise ValueError(
+                    f"quantized block pools are attention-only; family={fam!r} "
+                    "state planes must stay full-precision (DESIGN.md §13)"
+                )
+            pool = dict(self._ssm_cache(cfg.num_layers, num_blocks, dtype))
+            if fam == "hybrid":
+                n_groups = cfg.num_layers // cfg.hybrid_period
+                dh = cfg.resolved_head_dim
+                k = jnp.zeros((n_groups, num_blocks, cfg.num_kv_heads, block_size, dh), dtype)
+                pool["k"], pool["v"] = k, jnp.zeros_like(k)
+            if mesh is not None:
+                from jax.sharding import NamedSharding
+
+                from repro.runtime import sharding as shd
+
+                specs = shd.state_pool_specs(cfg, mesh)
+                pool["conv"] = jax.device_put(pool["conv"], NamedSharding(mesh, specs["conv"]))
+                pool["ssm"] = jax.device_put(pool["ssm"], NamedSharding(mesh, specs["ssm"]))
+                if "k" in pool:
+                    sh = NamedSharding(mesh, shd.block_pool_spec(cfg, mesh))
+                    pool["k"] = jax.device_put(pool["k"], sh)
+                    pool["v"] = jax.device_put(pool["v"], sh)
+            return pool
+        assert fam in ("dense", "vlm", "moe"), (
+            f"paged KV pool requires an attention KV cache, got family={fam!r}"
         )
         dh = cfg.resolved_head_dim
         int4 = ops.kv_cache_is_int4(dtype)
@@ -492,7 +536,7 @@ class Model:
                 a, (kh, vh) = attn.attention_prefill(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, statics, clip)
                 h = h + a
                 if cfg.moe is not None:
-                    f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+                    f = moe.moe_ffn_infer(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
                 else:
                     f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
                 return shard_activation(h + f, "btd"), (kh, vh)
@@ -509,7 +553,9 @@ class Model:
             h = self._embed(params, batch)
 
             def body(h, lp):
-                out, c = mamba2.mamba_forward(lp["ssm"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, mode="prefill")
+                out, c = mamba2.mamba_forward(
+                    lp["ssm"], rmsnorm(h, lp["ln1"], cfg.norm_eps), cfg, mode="prefill", chunk=cfg.ssm_chunk
+                )
                 return shard_activation(h + out, "btd"), c
 
             h, cs = jax.lax.scan(body, h, params["layers"])
@@ -525,7 +571,9 @@ class Model:
                 gp, clip = xs
 
                 def inner(hh, lp):
-                    out, c = mamba2.mamba_forward(lp["ssm"], rmsnorm(hh, lp["ln1"], cfg.norm_eps), cfg, mode="prefill")
+                    out, c = mamba2.mamba_forward(
+                        lp["ssm"], rmsnorm(hh, lp["ln1"], cfg.norm_eps), cfg, mode="prefill", chunk=cfg.ssm_chunk
+                    )
                     return hh + out, c
 
                 h, cs = jax.lax.scan(inner, h, gp)
@@ -605,7 +653,7 @@ class Model:
             )
             h = h + a
             if cfg.moe is not None:
-                f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+                f = moe.moe_ffn_infer(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
             else:
                 f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
             return h + f, (nk, nv)
@@ -617,7 +665,8 @@ class Model:
         logits = self._mask_padded_vocab(logits)
         return logits, new_cache
 
-    def decode_step_paged(self, params, tokens, pool, block_tables, lens, active, qstate=None):
+    def decode_step_paged(self, params, tokens, pool, block_tables, lens, active,
+                          qstate=None, *, block_size=None):
         """Slot-batched decode over a block-paged KV pool (DESIGN.md §3).
 
         The paged sibling of ``decode_step_ragged``: tokens (S, 1); pool k/v
@@ -631,16 +680,24 @@ class Model:
         the fused Pallas paged-decode kernel (block-table-indexed pool loads,
         no HBM gather — DESIGN.md §3); otherwise the gather-then-dispatch
         reference. Returns (logits (S, V), new_pool).
+
+        ssm / hybrid families route to the StatePool decode branch
+        (DESIGN.md §13), which needs the kw-only ``block_size`` (the pure
+        state planes have no block-size axis to read it from).
         """
         cfg = self.cfg
+        qstate = qstate or default_qstate(cfg)
+        statics = _statics(cfg)
+        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+        if cfg.family in ("ssm", "hybrid"):
+            return self._decode_step_paged_state(
+                params, h, pool, block_tables, lens, active, qstate, statics, block_size
+            )
         assert cfg.family in ("dense", "vlm", "moe"), (
             f"paged decode requires an attention KV cache, got family={cfg.family!r}"
         )
-        qstate = qstate or default_qstate(cfg)
-        statics = _statics(cfg)
         int4 = pool["k"].dtype == jnp.uint8
         quantized = int4 or pool["k"].dtype == jnp.int8
-        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
 
         def body(h, xs):
             lp, clip, pk, pv, *sc = xs
@@ -650,7 +707,7 @@ class Model:
             )
             h = h + a
             if cfg.moe is not None:
-                f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+                f = moe.moe_ffn_infer(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
             else:
                 f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
             return h + f, nkv
@@ -664,8 +721,94 @@ class Model:
         logits = self._mask_padded_vocab(logits)
         return logits, dict(zip(keys, nkv))
 
+    def _decode_step_paged_state(self, params, h, pool, block_tables, lens, active,
+                                 qstate, statics, block_size):
+        """State-family decode over the paged StatePool (DESIGN.md §13).
+
+        Position ``lens[s]`` is being decoded, so the recurrent state
+        *through* position ``lens[s]-1`` is read from block ``(lens-1)//bs``
+        (where the previous decode step or the prefill checkpointed it) and
+        the updated state through ``lens[s]`` is written to block
+        ``lens//bs``. A full block's final checkpoint (its state through its
+        last token) lands while the write index still points *at* that
+        block; every later step writes strictly past it, so completed
+        (shareable, registered) blocks are never touched again — only the
+        partial tail block is overwritten in place, which is why the host
+        never registers partial blocks for state pools. Because every step
+        here is the same per-token ``_ssd_chunk`` / conv-window math as the
+        chunked prefill, preempt-and-recompute and prefix reuse reproduce
+        the uninterrupted trajectory bitwise.
+        """
+        cfg = self.cfg
+        bs = block_size
+        assert bs is not None, "state-family paged decode needs block_size"
+        read_bi = jnp.maximum(lens - 1, 0) // bs
+        write_bi = lens // bs
+        read_blk = jnp.take_along_axis(block_tables, read_bi[:, None], axis=1)[:, 0]
+        # inactive slots write to the reserved null block (id 0) so recycled
+        # blocks can't be corrupted mid-chunk — same gating as the KV planes
+        write_blk = jnp.where(
+            active, jnp.take_along_axis(block_tables, write_bi[:, None], axis=1)[:, 0], 0
+        )
+
+        def step(lp, hh, pconv, pssm):
+            cc = jnp.take(pconv, read_blk, axis=0)
+            cs = jnp.take(pssm, read_blk, axis=0)
+            out, c = mamba2.mamba_forward(
+                lp["ssm"], rmsnorm(hh, lp["ln1"], cfg.norm_eps), cfg, mode="decode",
+                cache={"conv": cc, "ssm": cs},
+            )
+            nconv = pconv.at[write_blk].set(c["conv"].astype(pconv.dtype))
+            nssm = pssm.at[write_blk].set(c["ssm"])
+            return hh + out, nconv, nssm
+
+        if cfg.family == "ssm":
+            def body(hh, xs):
+                lp, pconv, pssm = xs
+                hh, nconv, nssm = step(lp, hh, pconv, pssm)
+                return hh, (nconv, nssm)
+
+            h, (nconv, nssm) = jax.lax.scan(body, h, (params["layers"], pool["conv"], pool["ssm"]))
+            new_pool = {"conv": nconv, "ssm": nssm}
+        else:  # hybrid: groups of mamba layers + the weight-shared attention block
+            ng = cfg.num_layers // cfg.hybrid_period
+            pconv = pool["conv"].reshape((ng, cfg.hybrid_period) + pool["conv"].shape[1:])
+            pssm = pool["ssm"].reshape((ng, cfg.hybrid_period) + pool["ssm"].shape[1:])
+            h0 = h
+
+            def group(hh, xs):
+                gp, clip, gconv, gssm, pk, pv = xs
+
+                def inner(hhh, ys):
+                    lp, lconv, lssm = ys
+                    hhh, nconv, nssm = step(lp, hhh, lconv, lssm)
+                    return hhh, (nconv, nssm)
+
+                hh, (nconv, nssm) = jax.lax.scan(inner, hh, (gp, gconv, gssm))
+                cat = jnp.concatenate([hh, h0], axis=-1)
+                a, nkv = attn.attention_decode_paged(
+                    params["shared"]["attn"], rmsnorm(cat, params["shared"]["ln1"], cfg.norm_eps),
+                    cfg, statics, clip, pk, pv, block_tables, lens, active,
+                )
+                hh = hh + a
+                f = gated_mlp(params["shared"]["mlp"], rmsnorm(hh, params["shared"]["ln2"], cfg.norm_eps))
+                return hh + f, (nconv, nssm) + tuple(nkv)
+
+            h, (nconv, nssm, nk, nv) = jax.lax.scan(
+                group, h,
+                (params["layers"], qstate["shared_clip"], pconv, pssm, pool["k"], pool["v"]),
+            )
+            new_pool = {
+                "conv": nconv.reshape(pool["conv"].shape),
+                "ssm": nssm.reshape(pool["ssm"].shape),
+                "k": nk, "v": nv,
+            }
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"].astype(h.dtype))
+        return self._mask_padded_vocab(logits), new_pool
+
     def prefill_paged_chunk(self, params, tokens, pool, block_table, start, chunk_len,
-                            blk_t, off_t, qstate=None):
+                            blk_t, off_t, qstate=None, *, block_size=None):
         """One fixed-size chunk of a paged prefill for a single request.
 
         tokens (1, C) right-padded chunk; block_table (MB,) the request's
@@ -684,16 +827,25 @@ class Model:
         (DESIGN.md §10).
         Returns (logits (1, V) at the chunk's last live row, new_pool) —
         only the final chunk's logits seed sampling.
+
+        ssm / hybrid families route to the StatePool chunk branch
+        (DESIGN.md §13): per-token SSD recurrence with block-granular
+        conv/ssm checkpoints scattered to ``blk_t[::block_size]``.
         """
         cfg = self.cfg
+        qstate = qstate or default_qstate(cfg)
+        statics = _statics(cfg)
+        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
+        if cfg.family in ("ssm", "hybrid"):
+            return self._prefill_paged_chunk_state(
+                params, h, pool, block_table, start, chunk_len, blk_t, off_t,
+                qstate, statics, block_size,
+            )
         assert cfg.family in ("dense", "vlm", "moe"), (
             f"paged prefill requires an attention KV cache, got family={cfg.family!r}"
         )
-        qstate = qstate or default_qstate(cfg)
-        statics = _statics(cfg)
         int4 = pool["k"].dtype == jnp.uint8
         quantized = int4 or pool["k"].dtype == jnp.int8
-        h = jnp.take(params["embed"]["tokens"], tokens, axis=0)
 
         def body(h, xs):
             lp, clip, pk, pv, *sc = xs
@@ -703,7 +855,7 @@ class Model:
             )
             h = h + a
             if cfg.moe is not None:
-                f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+                f = moe.moe_ffn_infer(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
             else:
                 f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
             return h + f, nkv
@@ -718,6 +870,87 @@ class Model:
         logits = jnp.einsum("d,dv->v", h_last, params["head"].astype(h.dtype))[None]
         logits = self._mask_padded_vocab(logits)
         return logits, dict(zip(keys, nkv))
+
+    def _prefill_paged_chunk_state(self, params, h, pool, block_table, start, chunk_len,
+                                   blk_t, off_t, qstate, statics, block_size):
+        """State-family chunked prefill over the paged StatePool (DESIGN.md §13).
+
+        Resume state: the chunk needs the conv tail / SSD state through
+        global position ``start - 1``. The host keeps ``start`` block-aligned
+        (prefix hits truncate to full blocks; prefill_chunk % block_size == 0
+        is an engine gate), so that state is exactly the checkpoint of block
+        ``(start-1)//bs``; ``start == 0`` selects zeros instead (jnp.where
+        keeps the select NaN-safe regardless of what the gathered block
+        holds). This chunk's checkpoints scatter to ``blk_t[::bs]`` — the
+        host points pad rows at the null block, so pads-only blocks discard
+        themselves. Pad rows inside a live block are dt-masked in
+        ``mamba_paged_prefill_chunk``: the carried state passes through them
+        bitwise, so the tail checkpoint holds the state through the last
+        live token.
+        """
+        cfg = self.cfg
+        bs = block_size
+        assert bs is not None, "state-family paged prefill needs block_size"
+        ckpt_blks = blk_t[::bs]
+        read_blk = block_table[jnp.maximum(start - 1, 0) // bs]
+
+        def step(lp, hh, pconv, pssm):
+            cp = jnp.where(start > 0, pconv[read_blk], jnp.zeros_like(pconv[read_blk]))[None]
+            h0 = jnp.where(start > 0, pssm[read_blk], jnp.zeros_like(pssm[read_blk]))[None]
+            out, conv_ck, ssm_ck = mamba2.mamba_paged_prefill_chunk(
+                lp["ssm"], rmsnorm(hh, lp["ln1"], cfg.norm_eps), cfg, cp, h0, chunk_len,
+                block_size=bs,
+            )
+            nconv = pconv.at[ckpt_blks].set(conv_ck.astype(pconv.dtype))
+            nssm = pssm.at[ckpt_blks].set(ssm_ck)
+            return hh + out, nconv, nssm
+
+        if cfg.family == "ssm":
+            def body(hh, xs):
+                lp, pconv, pssm = xs
+                hh, nconv, nssm = step(lp, hh, pconv, pssm)
+                return shard_activation(hh, "btd"), (nconv, nssm)
+
+            h, (nconv, nssm) = jax.lax.scan(body, h, (params["layers"], pool["conv"], pool["ssm"]))
+            new_pool = {"conv": nconv, "ssm": nssm}
+        else:  # hybrid: groups of mamba layers + the weight-shared attention block
+            ng = cfg.num_layers // cfg.hybrid_period
+            pconv = pool["conv"].reshape((ng, cfg.hybrid_period) + pool["conv"].shape[1:])
+            pssm = pool["ssm"].reshape((ng, cfg.hybrid_period) + pool["ssm"].shape[1:])
+            h0_tok = h
+
+            def group(hh, xs):
+                gp, clip, gconv, gssm, pk, pv = xs
+
+                def inner(hhh, ys):
+                    lp, lconv, lssm = ys
+                    hhh, nconv, nssm = step(lp, hhh, lconv, lssm)
+                    return hhh, (nconv, nssm)
+
+                hh, (nconv, nssm) = jax.lax.scan(inner, hh, (gp, gconv, gssm))
+                cat = jnp.concatenate([hh, h0_tok], axis=-1)
+                a, nkv = attn.attention_prefill_chunk(
+                    params["shared"]["attn"], rmsnorm(cat, params["shared"]["ln1"], cfg.norm_eps),
+                    cfg, statics, clip, pk, pv, block_table, start, blk_t, off_t,
+                )
+                hh = hh + a
+                f = gated_mlp(params["shared"]["mlp"], rmsnorm(hh, params["shared"]["ln2"], cfg.norm_eps))
+                return shard_activation(hh + f, "btd"), (nconv, nssm) + tuple(nkv)
+
+            h, (nconv, nssm, nk, nv) = jax.lax.scan(
+                group, h,
+                (params["layers"], qstate["shared_clip"], pconv, pssm, pool["k"], pool["v"]),
+            )
+            new_pool = {
+                "conv": nconv.reshape(pool["conv"].shape),
+                "ssm": nssm.reshape(pool["ssm"].shape),
+                "k": nk, "v": nv,
+            }
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        idx = jnp.clip(chunk_len - 1, 0, h.shape[1] - 1)
+        h_last = jax.lax.dynamic_index_in_dim(h[0], idx, axis=0, keepdims=False)
+        logits = jnp.einsum("d,dv->v", h_last, params["head"].astype(h.dtype))[None]
+        return self._mask_padded_vocab(logits), new_pool
 
     def verify_paged_chunk(self, params, tokens, pool, block_table, start,
                            blk_t, off_t, qstate=None):
@@ -759,7 +992,7 @@ class Model:
             )
             h = h + a
             if cfg.moe is not None:
-                f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+                f = moe.moe_ffn_infer(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
             else:
                 f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
             return h + f, nkv
@@ -792,7 +1025,7 @@ class Model:
                 )
                 h = h + a
                 if cfg.moe is not None:
-                    f, _ = moe.moe_ffn(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
+                    f = moe.moe_ffn_infer(lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps), cfg)
                 else:
                     f = gated_mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps))
                 return h + f, (nk, nv)

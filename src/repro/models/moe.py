@@ -83,3 +83,35 @@ def moe_ffn(params: dict, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, dict]:
     dropped = 1.0 - keep.sum() / jnp.maximum(assign.sum(), 1)
     aux = {"moe_lb": lb, "moe_z": z, "moe_dropped": dropped}
     return out, aux
+
+
+def moe_ffn_infer(params: dict, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Capacity-free MoE FFN for the serving paths: x (B, S, D) -> (B, S, D).
+
+    Inference routing drops the training-time per-group capacity grid (no aux
+    losses, no token dropping): router dispatch is a dense per-token weight
+    over experts, batched across all live tokens of the decode/prefill call in
+    one all-experts einsum. No token count / group divisibility constraints,
+    so the jitted decode scan can route a ragged slot batch directly — the
+    MoE leg of the StatePool story (stateless but batched, DESIGN.md §13).
+    """
+    m = cfg.moe
+    E = m.num_experts
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # exact router softmax (DESIGN.md §5)
+    gate_vals, idx = jax.lax.top_k(probs, m.top_k)  # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    weights = (jax.nn.one_hot(idx, E, dtype=jnp.float32)
+               * gate_vals[..., None]).sum(axis=2)  # (B, S, E)
+
+    h = jnp.einsum("bsd,edf->bsef", x, params["moe_wi"].astype(x.dtype))
+    gate, up = jnp.split(h, 2, axis=-1)
+    hh = silu(gate) * up
+    expert_out = jnp.einsum("bsef,efd->bsed", hh, params["moe_wo"].astype(x.dtype))
+    out = jnp.einsum("bse,bsed->bsd", weights.astype(x.dtype), expert_out)
+
+    if m.num_shared:
+        from repro.models.layers import gated_mlp
+
+        out = out + gated_mlp(params["shared"], x)
+    return out

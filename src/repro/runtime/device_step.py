@@ -239,7 +239,8 @@ class PagedDeviceStep(_DeviceStep):
 
     def _prefill_chunk_fn(self, params, pool, tokens, table, start, chunk_len, blk_t, off_t):
         return self.model.prefill_paged_chunk(
-            params, tokens, pool, table, start, chunk_len, blk_t, off_t, self.qstate
+            params, tokens, pool, table, start, chunk_len, blk_t, off_t, self.qstate,
+            block_size=self.block_size,
         )
 
     def _verify_chunk_fn(self, params, pool, tokens, table, start, blk_t, off_t):
@@ -294,7 +295,8 @@ class PagedDeviceStep(_DeviceStep):
                   temperature, top_k, top_p, key, *, steps, sampler):
         def step_kv(tokens, pool, lens, active):
             return self.model.decode_step_paged(
-                params, tokens, pool, tables, lens, active, self.qstate
+                params, tokens, pool, tables, lens, active, self.qstate,
+                block_size=self.block_size,
             )
 
         return decode_scan(step_kv, pool, tokens, lens, active, budget,

@@ -55,16 +55,23 @@ per-request block tables:
                     the EXAQ histogram combine composes across partitions
                     (DESIGN.md §2/§3).
 
-Families: dense / moe (token-only attention decoders). SSM/hybrid/audio
-caches have no ragged sequence axis to slot-batch; vlm decode would work
-(its KV cache is regular) but the engines' prefill builds token-only
-batches — admitting vlm needs per-request ``vision_embeds`` plumbing first.
-``runtime.serve.generate`` keeps the rectangular loop for all of these.
+Families: dense / moe (token-only attention decoders) on both engines, and —
+paged only — ssm / hybrid through the architecture-agnostic StatePool
+(DESIGN.md §13): the pool pytree carries whatever per-layer plane groups the
+model config declares (attention K/V blocks, Mamba2 conv-tail + SSM-state
+planes checkpointed per block), the host scheduler treats blocks as blocks,
+and MoE routing batches across live slots inside the jitted decode scan.
+Audio caches aren't slot-ragged or block-paged; vlm decode would work (its
+KV cache is regular) but the engines' prefill builds token-only batches —
+admitting vlm needs per-request ``vision_embeds`` plumbing first.
+``runtime.serve.generate`` keeps the rectangular loop for those.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +81,7 @@ from repro.kernels.kv_codec import kv_cache_is_quantized
 from repro.runtime import sampling as smp
 from repro.runtime.device_step import PagedDeviceStep, SlotDeviceStep
 from repro.runtime.engine_core import (
+    EngineConfig,
     EngineCore,
     Generation,
     HostCore,
@@ -94,23 +102,90 @@ from repro.runtime.speculative import NgramDrafter, make_drafter
 __all__ = [
     "DataParallelEngine",
     "Engine",
+    "EngineConfig",
     "Generation",
     "PagedEngine",
     "Request",
+    "resolve_kv_dtype",
 ]
 
 # re-exported for existing importers; the host halves live in engine_core
 _ = (BlockPool, PoolExhausted, chain_hashes, NULL_BLOCK, _Slot, _PagedSlot)
 
+# families whose paged pool carries recurrent-state planes (conv tails + SSM
+# heads) checkpointed at block granularity instead of / alongside KV blocks
+# (DESIGN.md §13)
+STATE_FAMILIES = ("ssm", "hybrid")
+
+# "int4" has no jnp dtype: the string sentinel travels down to the pool
+# builder as-is (payload dtype uint8 — DESIGN.md §10). ``runtime.serve``
+# re-exports this map for its flag parsing.
+KV_DTYPES = {
+    "fp32": jnp.float32,
+    "fp16": jnp.float16,
+    "bf16": jnp.bfloat16,
+    "int8": jnp.int8,
+    "int4": "int4",
+}
+
+
+def resolve_kv_dtype(name: str):
+    """EngineConfig's string ``kv_dtype`` -> device cache dtype (or the
+    "int4" string sentinel)."""
+    try:
+        return KV_DTYPES[name]
+    except KeyError:
+        raise ValueError(
+            f"kv_dtype must be one of {sorted(KV_DTYPES)}, got {name!r}"
+        ) from None
+
+
+def kv_dtype_name(cache_dtype) -> str:
+    """Reverse of ``resolve_kv_dtype`` for the legacy ``cache_dtype=`` shims:
+    a device dtype (or the "int4" sentinel) -> the EngineConfig string key."""
+    if isinstance(cache_dtype, str):
+        if cache_dtype in KV_DTYPES:
+            return cache_dtype
+        raise ValueError(f"unknown cache dtype sentinel {cache_dtype!r}")
+    d = jnp.dtype(cache_dtype)
+    for name, dt in KV_DTYPES.items():
+        if not isinstance(dt, str) and jnp.dtype(dt) == d:
+            return name
+    raise ValueError(f"unsupported KV cache dtype {cache_dtype!r}")
+
 
 def _validate_engine_cfg(cfg, cache_dtype, *, paged: bool) -> None:
-    if cfg.family not in ("dense", "moe") or cfg.frontend is not None:
+    if cfg.frontend is not None:
         raise ValueError(
-            f"Engine supports token-only attention decoders (dense/moe), got "
-            f"family={cfg.family!r} frontend={cfg.frontend!r} (frontend models need "
-            "per-request embeds at prefill; ssm/hybrid/audio caches aren't slot-ragged)"
+            f"Engine supports token-only decoders, got frontend={cfg.frontend!r} "
+            "(frontend models need per-request embeds at prefill)"
         )
     quantized = kv_cache_is_quantized(cache_dtype)
+    if cfg.family in STATE_FAMILIES:
+        if not paged:
+            raise ValueError(
+                f"family={cfg.family!r} serves through the paged StatePool "
+                "(recurrent state checkpointed per block — DESIGN.md §13); the slot "
+                "engine's rectangular cache has no state planes — use PagedEngine"
+            )
+        if quantized:
+            raise ValueError(
+                "int8/int4 pools are attention-only (per-block scales — DESIGN.md "
+                f"§6/§10); family={cfg.family!r} state planes must stay full-precision"
+            )
+        if cfg.ssm_chunk != 1:
+            raise ValueError(
+                f"paged state serving needs ssm_chunk=1 (got {cfg.ssm_chunk}): the "
+                "chunked SSD scan reassociates the recurrence, so block-granular "
+                "checkpoints would not reproduce rectangular prefill bit-exactly "
+                "(DESIGN.md §13) — rebuild the config with ssm_chunk=1"
+            )
+    elif cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"Engine supports dense/moe attention decoders and paged ssm/hybrid "
+            f"state decoders, got family={cfg.family!r} (audio caches aren't "
+            "slot-ragged or block-paged)"
+        )
     if quantized and not paged:
         raise ValueError(
             "int8/int4 KV are paged-pool storage formats (per-block scales — DESIGN.md "
@@ -118,43 +193,86 @@ def _validate_engine_cfg(cfg, cache_dtype, *, paged: bool) -> None:
         )
 
 
+_LEGACY_ENGINE_KEYS = frozenset({
+    "max_slots", "max_seq", "block_size", "prefill_chunk", "num_blocks",
+    "eos_id", "steps_per_sync", "cache_dtype", "seed", "fused",
+    "max_inflight", "admit_watermark", "spec_k", "drafter",
+})
+
+
+def _resolve_config(config: EngineConfig | None, legacy_kw: dict, *, cls: str) -> EngineConfig:
+    """One construction surface, two spellings: either ``config=EngineConfig``
+    (canonical) or the legacy per-field kwargs (deprecated shim). Mixing them
+    is an error — a config is a complete statement of the engine shape, and
+    silently overriding fields would make two call sites disagree about what
+    was served."""
+    if config is not None:
+        if legacy_kw:
+            raise TypeError(
+                f"{cls}: pass either config=EngineConfig(...) or the legacy "
+                f"per-field kwargs, not both (got {sorted(legacy_kw)})"
+            )
+        if not isinstance(config, EngineConfig):
+            raise TypeError(f"{cls}: config must be an EngineConfig, got {type(config).__name__}")
+        return config
+    unknown = set(legacy_kw) - _LEGACY_ENGINE_KEYS
+    if unknown:
+        raise TypeError(f"{cls}: unexpected keyword arguments {sorted(unknown)}")
+    if "max_slots" not in legacy_kw or "max_seq" not in legacy_kw:
+        raise TypeError(f"{cls}: pass config=EngineConfig(...) (or legacy max_slots=/max_seq=)")
+    warnings.warn(
+        f"{cls}(max_slots=..., max_seq=..., ...) per-field construction is "
+        "deprecated; build an EngineConfig and pass it as the config argument",
+        DeprecationWarning, stacklevel=3,
+    )
+    kw = dict(legacy_kw)
+    if "cache_dtype" in kw:
+        kw["kv_dtype"] = kv_dtype_name(kw.pop("cache_dtype"))
+    return EngineConfig(**kw)
+
+
 class Engine(HostCore):
     """Continuous-batching serving engine for one model + qstate.
 
     Typical use::
 
-        eng = Engine(cfg, params, max_slots=8, max_seq=512, eos_id=2)
-        eng.submit([1, 5, 7], max_new=32)
+        eng = Engine(cfg, params, EngineConfig(max_slots=8, max_seq=512, eos_id=2))
+        eng.submit(Request([1, 5, 7], max_new=32))
         eng.submit([9, 9], max_new=16, sampling=SamplingParams(temperature=0.8))
         results = eng.run()          # {uid: Generation}
 
     or incrementally (arrival-driven traces): ``submit`` whenever requests
     arrive, ``step_chunk()`` to advance ``steps_per_sync`` decode steps.
+    ``EngineConfig`` is the canonical construction surface; the legacy
+    per-field kwargs (``max_slots=..., cache_dtype=...``) survive as a
+    deprecated shim.
     """
 
     def __init__(
         self,
         cfg,
         params,
+        config: EngineConfig | None = None,
         *,
-        max_slots: int,
-        max_seq: int,
         qstate=None,
-        eos_id: int | None = None,
-        steps_per_sync: int = 8,
-        cache_dtype=jnp.bfloat16,
-        seed: int = 0,
         mesh=None,
+        clock=None,
+        **legacy_kw,
     ):
+        config = _resolve_config(config, legacy_kw, cls=type(self).__name__)
+        cache_dtype = resolve_kv_dtype(config.kv_dtype)
         _validate_engine_cfg(cfg, cache_dtype, paged=isinstance(self, PagedEngine))
-        HostCore.__init__(self, max_slots=max_slots, max_seq=max_seq, eos_id=eos_id,
-                          steps_per_sync=steps_per_sync)
+        HostCore.__init__(self, max_slots=config.max_slots, max_seq=config.max_seq,
+                          eos_id=config.eos_id, steps_per_sync=config.steps_per_sync,
+                          clock=clock, max_inflight=config.max_inflight)
+        self.config = config
         self._dev = SlotDeviceStep(
-            cfg, params, qstate=qstate, max_slots=max_slots, max_seq=max_seq,
-            eos_id=eos_id, cache_dtype=cache_dtype, mesh=mesh,
+            cfg, params, qstate=qstate, max_slots=config.max_slots,
+            max_seq=config.max_seq, eos_id=config.eos_id,
+            cache_dtype=cache_dtype, mesh=mesh,
         )
         self._bind_device_step()
-        self._key = jax.random.PRNGKey(seed)
+        self._key = jax.random.PRNGKey(config.seed)
         self._cache_k, self._cache_v = self._dev.init_cache()
 
     def _bind_device_step(self):
@@ -166,8 +284,10 @@ class Engine(HostCore):
         self.qstate = self._dev.qstate
         self.cache_dtype = self._dev.cache_dtype
 
-    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY, *,
+    def submit(self, prompt, max_new: int | None = None,
+               sampling: smp.SamplingParams = smp.GREEDY, *,
                priority: int = 0, deadline: float | None = None) -> int:
+        """Submit a ``Request`` (canonical) or the legacy kwarg spread."""
         return super().submit(prompt, max_new, sampling, priority=priority, deadline=deadline)
 
     def _sample_first(self, slot: int, req: Request, logits) -> None:
@@ -295,65 +415,68 @@ class PagedEngine(EngineCore, Engine):
         self,
         cfg,
         params,
+        config: EngineConfig | None = None,
         *,
-        max_slots: int,
-        max_seq: int,
-        block_size: int = 16,
-        prefill_chunk: int = 32,
-        num_blocks: int | None = None,
         qstate=None,
-        eos_id: int | None = None,
-        steps_per_sync: int = 8,
-        cache_dtype=jnp.bfloat16,
-        seed: int = 0,
         mesh=None,
-        fused: bool | None = None,
         clock=None,
-        max_inflight: int | None = None,
-        admit_watermark: float | None = None,
-        spec_k: int = 0,
-        drafter=None,
+        **legacy_kw,
     ):
-        if spec_k < 0:
-            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
-        if fused is not None:
-            if fused and cfg.quant.softmax_impl != "exaq":
+        config = _resolve_config(config, legacy_kw, cls="PagedEngine")
+        cache_dtype = resolve_kv_dtype(config.kv_dtype)
+        if config.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {config.spec_k}")
+        if config.fused is not None:
+            if config.fused and cfg.quant.softmax_impl != "exaq":
                 raise ValueError(
                     f"fused=True needs softmax_impl='exaq' (static clip/LUT folded into the "
                     f"kernel), got {cfg.quant.softmax_impl!r}"
                 )
-            cfg = cfg.with_quant(use_fused_kernel=fused)
+            cfg = cfg.with_quant(use_fused_kernel=config.fused)
         _validate_engine_cfg(cfg, cache_dtype, paged=True)
-        self._quantized = kv_cache_is_quantized(cache_dtype)
-        EngineCore.__init__(
-            self, max_slots=max_slots, max_seq=max_seq, block_size=block_size,
-            prefill_chunk=prefill_chunk, num_blocks=num_blocks, eos_id=eos_id,
-            steps_per_sync=steps_per_sync, quantized=self._quantized,
-            clock=clock, max_inflight=max_inflight, admit_watermark=admit_watermark,
-        )
+        state_blocks = cfg.family in STATE_FAMILIES
+        if state_blocks:
+            if config.spec_k > 0:
+                raise ValueError(
+                    "speculative decoding needs CoW read-forks of the KV tail; state "
+                    "planes checkpoint only at block boundaries, so spec_k must be 0 "
+                    f"for family={cfg.family!r} (DESIGN.md §13)"
+                )
+            if config.prefill_chunk % config.block_size != 0:
+                raise ValueError(
+                    "state-pool prefill checkpoints at block boundaries inside each "
+                    f"chunk: prefill_chunk ({config.prefill_chunk}) must be a multiple "
+                    f"of block_size ({config.block_size}) (DESIGN.md §13)"
+                )
+        EngineCore.__init__(self, clock=clock, state_blocks=state_blocks,
+                            **config.core_kwargs())
+        self.config = config
         self._dev = PagedDeviceStep(
             cfg, params, qstate=qstate, num_blocks=self.num_blocks,
-            block_size=block_size, max_seq=max_seq, eos_id=eos_id,
-            cache_dtype=cache_dtype, mesh=mesh,
+            block_size=config.block_size, max_seq=config.max_seq,
+            eos_id=config.eos_id, cache_dtype=cache_dtype, mesh=mesh,
         )
         self._bind_device_step()
-        self._key = jax.random.PRNGKey(seed)
+        self._key = jax.random.PRNGKey(config.seed)
         self._pool = self._dev.init_pool()
         # raw jitted (pool, src, dst) -> pool CoW copy; tests drive it directly
         self._jit_copy_block = self._dev.copy_block
         # speculative decoding (DESIGN.md §12): spec_k > 0 replaces decode
         # chunks with per-slot draft/verify rounds; drafter may be a name
         # from the registry ("ngram"), a Drafter instance, or None (ngram)
-        self.spec_k = spec_k
+        self.spec_k = config.spec_k
+        drafter = config.drafter
         if isinstance(drafter, str):
             drafter = make_drafter(drafter)
-        if spec_k > 0 and drafter is None:
+        if self.spec_k > 0 and drafter is None:
             drafter = NgramDrafter()
         self.drafter = drafter
 
-    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY, *,
+    def submit(self, prompt, max_new: int | None = None,
+               sampling: smp.SamplingParams = smp.GREEDY, *,
                priority: int = 0, deadline: float | None = None) -> int:
-        if self.spec_k > 0 and sampling.temperature > 0:
+        samp = prompt.sampling if isinstance(prompt, Request) else sampling
+        if self.spec_k > 0 and samp.temperature > 0:
             raise ValueError(
                 "speculative decoding (spec_k > 0) is greedy-only: the accept rule "
                 "compares exact argmaxes (DESIGN.md §12); submit with temperature=0"
@@ -545,26 +668,41 @@ class DataParallelEngine:
     bench_serving's per-replica reporting.
     """
 
-    def __init__(self, cfg, params, *, replicas: int = 2, meshes=None, **engine_kw):
+    def __init__(self, cfg, params, config: EngineConfig | None = None, *,
+                 replicas: int | None = None, meshes=None, **engine_kw):
+        if replicas is None:
+            replicas = config.replicas if config is not None else 2
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
         if meshes is not None and len(meshes) != replicas:
             raise ValueError(f"got {len(meshes)} meshes for {replicas} replicas")
         meshes = meshes if meshes is not None else [None] * replicas
-        self.engines = [PagedEngine(cfg, params, mesh=m, **engine_kw) for m in meshes]
+        self.engines = [PagedEngine(cfg, params, config, mesh=m, **engine_kw)
+                        for m in meshes]
+        self.config = self.engines[0].config
         self._pending: list[Request] = []
         self._route: dict[int, tuple[int, int]] = {}  # global uid -> (replica, local uid)
         self._next_uid = 0
         self._results: dict[int, Generation] = {}
 
-    def submit(self, prompt, max_new: int, sampling: smp.SamplingParams = smp.GREEDY, *,
+    def submit(self, prompt, max_new: int | None = None,
+               sampling: smp.SamplingParams = smp.GREEDY, *,
                priority: int = 0, deadline: float | None = None) -> int:
-        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
+        """Submit a ``Request`` (canonical) or the legacy kwarg spread."""
+        if isinstance(prompt, Request):
+            if max_new is not None:
+                raise ValueError("pass either a Request or (prompt, max_new), not both")
+            req = prompt
+        else:
+            if max_new is None:
+                raise ValueError("max_new is required when submitting a raw prompt")
+            req = Request(prompt, max_new, sampling, int(priority), deadline)
+        toks = tuple(int(t) for t in np.asarray(req.prompt).reshape(-1))
         # validate against replica 0 (all replicas are configured identically)
-        self.engines[0]._validate_request(prompt, max_new)
+        self.engines[0]._validate_request(toks, req.max_new)
         uid = self._next_uid
         self._next_uid += 1
-        self._pending.append(Request(uid, prompt, max_new, sampling, int(priority), deadline))
+        self._pending.append(dataclasses.replace(req, prompt=toks, uid=uid))
         return uid
 
     def _dispatch(self) -> None:
@@ -579,8 +717,7 @@ class DataParallelEngine:
             if load >= self.engines[i].max_slots:
                 break  # every replica is saturated; keep the shared backlog
             req = self._pending.pop(0)
-            local = self.engines[i].submit(req.prompt, req.max_new, req.sampling,
-                                           priority=req.priority, deadline=req.deadline)
+            local = self.engines[i].submit(dataclasses.replace(req, uid=-1))
             self._route[req.uid] = (i, local)
 
     def has_work(self) -> bool:

@@ -32,6 +32,7 @@ Two classes:
 from __future__ import annotations
 
 import bisect
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -62,7 +63,12 @@ GREEDY = GreedySampling()
 
 @dataclass(frozen=True)
 class Request:
-    uid: int
+    """One generation request — the single submission surface of every engine
+    front (``submit``/``try_submit``/``AsyncFrontend.submit`` all accept one
+    in place of the legacy (prompt, max_new, ...) spread). ``uid`` is
+    engine-assigned at admission; user-constructed requests leave it at -1.
+    """
+
     prompt: tuple[int, ...]
     max_new: int
     sampling: Any = GREEDY
@@ -71,6 +77,50 @@ class Request:
     # (``HostCore.now()``) — None means no SLA.
     priority: int = 0
     deadline: float | None = None
+    uid: int = -1
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Single construction surface for every serving engine (jax-free).
+
+    Pool sizing, cache dtype, fusion / speculative knobs, and scheduling
+    knobs in one frozen value: ``launch/serve.py`` builds exactly one from
+    argparse (``args_to_config``) and hands it to whichever engine class the
+    config family selects; benches, tests, the chaos harness and the async
+    frontend pass it through unchanged. ``kv_dtype`` is a *string* key
+    (fp32 | bf16 | fp16 | int8 | int4) resolved to a device dtype at the
+    engine layer — this module stays jax-free. The legacy per-field kwarg
+    spreads survive as thin deprecated shims on the engine constructors.
+    """
+
+    max_slots: int
+    max_seq: int
+    block_size: int = 16
+    prefill_chunk: int = 32
+    num_blocks: int | None = None
+    eos_id: int | None = None
+    steps_per_sync: int = 8
+    kv_dtype: str = "bf16"
+    fused: bool | None = None       # None = auto (fused kernels when they apply)
+    seed: int = 0
+    max_inflight: int | None = None
+    admit_watermark: float | None = None
+    spec_k: int = 0                 # speculative draft length (0 = vanilla)
+    drafter: str | None = None      # "ngram" | "pool" (spec_k > 0 only)
+    replicas: int = 1               # DataParallelEngine fan-out
+
+    def core_kwargs(self) -> dict:
+        """kwargs for the host half (``EngineCore``) — the paged scheduler
+        knows nothing of dtypes, fusion or speculation."""
+        return dict(
+            max_slots=self.max_slots, max_seq=self.max_seq,
+            block_size=self.block_size, prefill_chunk=self.prefill_chunk,
+            num_blocks=self.num_blocks, eos_id=self.eos_id,
+            steps_per_sync=self.steps_per_sync, max_inflight=self.max_inflight,
+            admit_watermark=self.admit_watermark,
+            quantized=self.kv_dtype in ("int8", "int4"),
+        )
 
 
 @dataclass(frozen=True)
@@ -336,41 +386,62 @@ class HostCore:
             )
         return None
 
-    def _enqueue(self, prompt, max_new: int, sampling, priority: int,
-                 deadline: float | None) -> int:
+    def _as_request(self, prompt, max_new, sampling, priority,
+                    deadline) -> Request:
+        """Normalize the two submission forms — a ``Request`` value, or the
+        legacy ``(prompt, max_new, ...)`` spread — into one canonical
+        ``Request`` with an int-tuple prompt. The uid stays -1 here;
+        ``_enqueue`` assigns it at admission."""
+        if isinstance(prompt, Request):
+            if max_new is not None:
+                raise ValueError("pass either a Request or (prompt, max_new), not both")
+            r = prompt
+        else:
+            if max_new is None:
+                raise ValueError("max_new is required when submitting a raw prompt")
+            r = Request(prompt, max_new, sampling, int(priority), deadline)
+        toks = tuple(int(t) for t in np.asarray(r.prompt).reshape(-1))
+        return dataclasses.replace(r, prompt=toks)
+
+    def _enqueue(self, req: Request) -> int:
         uid = self._next_uid
         self._next_uid += 1
-        self._queue.append(Request(uid, prompt, max_new, sampling, int(priority), deadline))
+        req = dataclasses.replace(req, uid=uid)
+        self._queue.append(req)
         self._submit_time[uid] = self.now()
         return uid
 
-    def submit(self, prompt, max_new: int, sampling=GREEDY, *, priority: int = 0,
-               deadline: float | None = None) -> int:
+    def submit(self, prompt, max_new: int | None = None, sampling=GREEDY, *,
+               priority: int = 0, deadline: float | None = None) -> int:
         """Admit or die: malformed requests raise ValueError, shed load raises
         ``AdmissionRejected`` (offline callers treat both as fatal); returns
-        the uid. Frontends wanting structured outcomes use ``try_submit``."""
-        prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
-        self._validate_request(prompt, max_new)
+        the uid. Frontends wanting structured outcomes use ``try_submit``.
+
+        Accepts either a ``Request`` value (the canonical submission path) or
+        the legacy ``(prompt, max_new, ...)`` spread."""
+        req = self._as_request(prompt, max_new, sampling, priority, deadline)
+        self._validate_request(req.prompt, req.max_new)
         rej = self._admission_check()
         if rej is not None:
             raise AdmissionRejected(rej)
-        return self._enqueue(prompt, max_new, sampling, priority, deadline)
+        return self._enqueue(req)
 
-    def try_submit(self, prompt, max_new: int, sampling=GREEDY, *, priority: int = 0,
-                   deadline: float | None = None) -> int | Rejected:
+    def try_submit(self, prompt, max_new: int | None = None, sampling=GREEDY, *,
+                   priority: int = 0, deadline: float | None = None) -> int | Rejected:
         """Non-raising admission for the serving front: returns a uid, or a
         ``Rejected`` — non-retryable for malformed requests, retryable with a
-        backoff hint for shed load."""
+        backoff hint for shed load. Accepts a ``Request`` or the legacy
+        kwarg spread, like ``submit``."""
         try:
-            prompt = tuple(int(t) for t in np.asarray(prompt).reshape(-1))
-            self._validate_request(prompt, max_new)
+            req = self._as_request(prompt, max_new, sampling, priority, deadline)
+            self._validate_request(req.prompt, req.max_new)
         except (ValueError, TypeError) as e:
             return Rejected("invalid", detail=str(e), retryable=False,
                             occupancy=self._occupancy())
         rej = self._admission_check()
         if rej is not None:
             return rej
-        return self._enqueue(prompt, max_new, sampling, priority, deadline)
+        return self._enqueue(req)
 
     @property
     def num_active(self) -> int:
@@ -576,7 +647,7 @@ class EngineCore(HostCore):
                  prefill_chunk: int = 32, num_blocks: int | None = None,
                  eos_id: int | None = None, steps_per_sync: int = 8,
                  quantized: bool = False, clock=None, max_inflight: int | None = None,
-                 admit_watermark: float | None = None):
+                 admit_watermark: float | None = None, state_blocks: bool = False):
         # explicit base call: PagedEngine linearizes as (EngineCore, Engine,
         # HostCore) and Engine.__init__ must not run on this path
         HostCore.__init__(self, max_slots=max_slots, max_seq=max_seq, eos_id=eos_id,
@@ -594,6 +665,11 @@ class EngineCore(HostCore):
         self.pool = BlockPool(num_blocks, block_size)
         self._tables = np.full((max_slots, self.blocks_per_table), NULL_BLOCK, np.int32)
         self._quantized = quantized
+        # SSM/hybrid state pools checkpoint recurrent state at *block*
+        # granularity and decode overwrites the partial tail block in place,
+        # so only full blocks may enter the prefix index and cache hits must
+        # be block-aligned (DESIGN.md §13)
+        self.state_blocks = state_blocks
 
         self.stats.update(prompt_tokens=0, prefix_hit_tokens=0,
                           prefill_tokens=0, prefill_chunks=0, preemptions=0)
@@ -741,8 +817,8 @@ class EngineCore(HostCore):
         carry = self._preempt_carry.pop(req.uid, []) + done
         if carry:  # no empty entries: _shed_expired treats presence as TTFT-met
             self._preempt_carry[req.uid] = carry
-        cont = Request(req.uid, req.prompt + tuple(done), remaining, req.sampling,
-                       req.priority, req.deadline)
+        cont = Request(req.prompt + tuple(done), remaining, req.sampling,
+                       req.priority, req.deadline, uid=req.uid)
         doomed = set(s.table)
         if doomed and self.pending_copies:  # same staleness hazard as _cancel_slot
             self.pending_copies = [(a, b) for (a, b) in self.pending_copies
@@ -841,7 +917,19 @@ class EngineCore(HostCore):
                 cached += n
             # always re-prefill at least the last prompt token: sampling needs
             # its logits (a fully-cached prompt has KV but no logits)
-            cached = min(cached, len(req.prompt) - 1)
+            if self.state_blocks:
+                # state planes checkpoint at block boundaries only, and decode
+                # mutates partial tail blocks in place — a prefix hit is only
+                # usable up to the last *full* block strictly inside the
+                # prompt. Release over-matched blocks (lookup retained them).
+                limit = ((len(req.prompt) - 1) // self.block_size) * self.block_size
+                keep = min(cached, limit) // self.block_size
+                for b in table[keep:]:
+                    self.pool.release(b)
+                del table[keep:]
+                cached = keep * self.block_size
+            else:
+                cached = min(cached, len(req.prompt) - 1)
             try:
                 while len(table) < len(hashes):
                     table.append(self._alloc_fresh())
@@ -903,7 +991,9 @@ class EngineCore(HostCore):
         self.stats["prefill_tokens"] += n
         bs = self.block_size
         for bi, (h, ntok) in enumerate(s.hashes):
-            if bi * bs + ntok <= s.filled:
+            # state pools: partial tail blocks are decode-mutable in place, so
+            # only full blocks may ever enter the prefix index (DESIGN.md §13)
+            if bi * bs + ntok <= s.filled and (not self.state_blocks or ntok == bs):
                 self.pool.register(h, s.table[bi])
         if s.filled == len(s.req.prompt):
             s._prefilling = False

@@ -36,7 +36,7 @@ import time
 
 import numpy as np
 
-from repro.runtime.engine_core import EngineCore, Rejected
+from repro.runtime.engine_core import EngineConfig, EngineCore, Rejected
 from repro.runtime.kv_pool import NULL_BLOCK, PoolExhausted
 
 __all__ = [
@@ -116,6 +116,23 @@ def audit_block_invariants(core: EngineCore, held=()) -> None:
     # delivers their valid grid; a later reset would zero it)
     for _, dst in core.pending_copies:
         assert dst not in core._fresh_blocks
+
+    # StatePool cores (ssm/hybrid — DESIGN.md §13): decode overwrites a
+    # partial tail block's state planes in place, so only *full* blocks may
+    # ever be published to the prefix index — a partial-chain hash in the
+    # index would let a later request read state through more tokens than
+    # the hash names
+    if getattr(core, "state_blocks", False):
+        bs = core.block_size
+        for s in core._slots:
+            if s.free:
+                continue
+            for h, ntok in getattr(s, "hashes", ()):
+                if ntok < bs:
+                    assert h not in pool._index, (
+                        f"partial-tail hash published on a state pool "
+                        f"(ntok={ntok} < block_size={bs})"
+                    )
 
 
 # --------------------------------------------------------- host-side emulator
@@ -218,10 +235,22 @@ class EmulatedEngine(EngineCore):
     suite drive when no jax belongs in the process. Scheduling is production
     code; only token values come from the rng."""
 
-    def __init__(self, rng: np.random.Generator, *, vocab: int = 40,
-                 eos: int | None = None, **core_kw):
-        core_kw.setdefault("eos_id", eos)
-        super().__init__(**core_kw)
+    def __init__(self, rng: np.random.Generator, config: EngineConfig | None = None,
+                 *, vocab: int = 40, eos: int | None = None,
+                 state_blocks: bool = False, **core_kw):
+        if config is not None:
+            if core_kw:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or per-field core "
+                    f"kwargs, not both (got {sorted(core_kw)})"
+                )
+            core_kw = config.core_kwargs()
+            if eos is None:
+                eos = config.eos_id
+            core_kw["eos_id"] = eos
+        else:
+            core_kw.setdefault("eos_id", eos)
+        super().__init__(state_blocks=state_blocks, **core_kw)
         self._emu = HostDeviceEmulator(rng, vocab=vocab, eos=eos)
 
     def step_chunk(self, steps: int | None = None) -> int:

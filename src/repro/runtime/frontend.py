@@ -39,8 +39,9 @@ core at fuzz speed.
 from __future__ import annotations
 
 import asyncio
+import dataclasses
 
-from repro.runtime.engine_core import GREEDY, Rejected
+from repro.runtime.engine_core import GREEDY, Rejected, Request
 from repro.runtime.kv_pool import PoolExhausted
 
 __all__ = ["AsyncFrontend", "StreamHandle"]
@@ -172,17 +173,26 @@ class AsyncFrontend:
 
     # ------------------------------------------------------------- admission
 
-    async def submit(self, prompt, max_new: int, sampling=GREEDY, *,
+    async def submit(self, prompt, max_new: int | None = None, sampling=GREEDY, *,
                      priority: int = 0,
                      deadline: float | None = None) -> StreamHandle | Rejected:
         """Admit a request; returns a ``StreamHandle`` or a structured
         ``Rejected`` (non-retryable for malformed input, retryable with a
-        backoff hint under load shed). ``deadline`` is a relative TTFT
-        budget in the engine clock's units."""
+        backoff hint under load shed). Accepts an ``engine_core.Request``
+        (canonical) or the legacy ``(prompt, max_new, ...)`` spread.
+        ``deadline`` (or ``Request.deadline``) is a relative TTFT budget in
+        the engine clock's units."""
         async with self._lock:
-            abs_deadline = None if deadline is None else self.engine.now() + deadline
-            r = self.engine.try_submit(prompt, max_new, sampling,
-                                       priority=priority, deadline=abs_deadline)
+            if isinstance(prompt, Request):
+                req = prompt
+                if req.deadline is not None:
+                    req = dataclasses.replace(
+                        req, deadline=self.engine.now() + req.deadline)
+                r = self.engine.try_submit(req)
+            else:
+                abs_deadline = None if deadline is None else self.engine.now() + deadline
+                r = self.engine.try_submit(prompt, max_new, sampling,
+                                           priority=priority, deadline=abs_deadline)
             if isinstance(r, Rejected):
                 return r
             h = StreamHandle(self, r)

@@ -71,14 +71,16 @@ def cache_shardings(cfg, mesh, cache_struct):
 
 
 # "int4" has no jnp dtype: the string sentinel travels down to the pool
-# builder as-is (payload dtype uint8 — DESIGN.md §10)
-KV_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8, "int4": "int4"}
+# builder as-is (payload dtype uint8 — DESIGN.md §10). Canonical map lives
+# with the engines; re-exported here for flag parsing and older importers.
+from repro.runtime.engine import KV_DTYPES  # noqa: E402
 
 
 def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
              sampling=None, eos_id=None, seed: int = 0, paged: bool = False,
              block_size: int = 16, prefill_chunk: int = 32,
-             fused: bool | None = None, kv_dtype: str = "bf16"):
+             fused: bool | None = None, kv_dtype: str = "bf16",
+             config=None):
     """Batched generation driver (example/tests scale).
 
     Attention token decoders (dense/moe) route through the continuous-batching
@@ -97,18 +99,25 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
     per-block per-kv-head scales, dequantized inside the read paths
     (DESIGN.md §6); "int4" (paged only) packs two values per byte with
     4-bit per-sub-block scale codes on top (DESIGN.md §10).
-    Other families keep the rectangular greedy loop — ssm/hybrid/audio caches
-    have no ragged sequence axis for slots to share, and vlm needs per-request
+    ``paged=True`` additionally admits ssm/hybrid families through the
+    architecture-agnostic StatePool (DESIGN.md §13; requires
+    ``cfg.ssm_chunk == 1`` so block-granular state checkpoints reproduce the
+    rectangular scan). ``config`` (an ``engine.EngineConfig``) overrides the
+    per-field engine knobs wholesale — the canonical construction path.
+    Other families keep the rectangular greedy loop — audio caches are
+    neither slot-ragged nor block-paged, and vlm needs per-request
     vision_embeds plumbing the engine's prefill doesn't have yet.
 
     Returns (B, <= max_new) int32; rows are right-padded with ``eos_id`` (or 0)
     when EOS ends a row early, so the legacy rectangular contract holds.
     The fallback loop is greedy-only: passing ``sampling`` or ``eos_id`` for a
-    family it can't honor raises rather than silently ignoring them.
+    family it can't honor raises rather than silently ignoring them (but it
+    does honor fp ``kv_dtype`` values for the rectangular cache dtype).
     """
     B, S = prompt_tokens.shape
-    if cfg.family in ("dense", "moe") and cfg.frontend is None and cache is None:
-        from repro.runtime.engine import Engine, PagedEngine
+    engine_families = ("dense", "moe") + (("ssm", "hybrid") if paged else ())
+    if cfg.family in engine_families and cfg.frontend is None and cache is None:
+        from repro.runtime.engine import Engine, EngineConfig, PagedEngine
         from repro.runtime.sampling import GREEDY, SamplingParams
 
         if fused is not None and not paged:
@@ -130,15 +139,18 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
             raise ValueError(f"sampling list has {len(per_row)} entries for batch of {B}")
         if not all(isinstance(p, SamplingParams) for p in per_row):
             raise ValueError("sampling entries must be SamplingParams")
-        if paged:
-            eng = PagedEngine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
-                              eos_id=eos_id, seed=seed, block_size=block_size,
-                              prefill_chunk=prefill_chunk, fused=fused,
-                              cache_dtype=KV_DTYPES[kv_dtype])
-        else:
-            eng = Engine(cfg, params, qstate=qstate, max_slots=B, max_seq=S + max_new,
-                         eos_id=eos_id, seed=seed, cache_dtype=KV_DTYPES[kv_dtype])
-        uids = [eng.submit(np.asarray(prompt_tokens[b]), max_new, per_row[b]) for b in range(B)]
+        if config is None:
+            config = EngineConfig(
+                max_slots=B, max_seq=S + max_new, block_size=block_size,
+                prefill_chunk=prefill_chunk, eos_id=eos_id, kv_dtype=kv_dtype,
+                fused=fused, seed=seed,
+            )
+        cls = PagedEngine if paged else Engine
+        eng = cls(cfg, params, config, qstate=qstate)
+        from repro.runtime.engine_core import Request
+
+        uids = [eng.submit(Request(np.asarray(prompt_tokens[b]), max_new, per_row[b]))
+                for b in range(B)]
         results = eng.run()
         pad = eos_id if eos_id is not None else 0
         out = np.full((B, max_new), pad, np.int32)
@@ -148,15 +160,15 @@ def generate(params, cfg, prompt_tokens, max_new: int, cache=None, qstate=None,
         return jnp.asarray(out)
 
     if (sampling is not None or eos_id is not None or paged or fused is not None
-            or kv_dtype != "bf16"):
+            or kv_dtype in ("int8", "int4")):
         raise ValueError(
-            f"sampling/eos_id/paged/fused/kv_dtype require the engine path (dense/moe, no "
-            f"explicit cache); the rectangular loop for family={cfg.family!r} is greedy-only "
-            f"and unpaged"
+            f"sampling/eos_id/paged/fused/quantized kv_dtype require the engine path "
+            f"(no explicit cache); the rectangular loop for family={cfg.family!r} is "
+            f"greedy-only and unpaged"
         )
     prefill, decode = make_serve_fns(cfg, qstate)
     if cache is None:
-        cache = init_cache(cfg, B, S + max_new)
+        cache = init_cache(cfg, B, S + max_new, KV_DTYPES[kv_dtype])
     batch = {"tokens": prompt_tokens}
     if cfg.frontend == "vlm":
         batch["vision_embeds"] = jnp.zeros((B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)

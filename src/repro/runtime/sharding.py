@@ -255,6 +255,21 @@ def block_sub_scale_spec(cfg, mesh: Mesh) -> P:
     return P(None, None, None, None)
 
 
+def state_pool_specs(cfg, mesh: Mesh) -> dict[str, P]:
+    """Paged state-pool planes (DESIGN.md §13): "conv" (L, N, w-1, ch) and
+    "ssm" (L, N, nh, hd, ds). Like ``block_pool_spec``, the block axis is a
+    *global* pool shared by every request, so it stays unsharded; conv
+    channels / ssm heads go over 'model' when divisible, matching the
+    activation sharding of the mamba stack (``make_activation_rules``)."""
+    tp = model_axis_size(mesh)
+    ch_ax = "model" if _div(cfg.d_inner + 2 * cfg.ssm_state, tp) else None
+    heads_ax = "model" if _div(cfg.ssm_heads, tp) else None
+    return {
+        "conv": P(None, None, None, ch_ax),
+        "ssm": P(None, None, heads_ax, None, None),
+    }
+
+
 def ssm_cache_specs(cfg, mesh: Mesh) -> dict[str, P]:
     dp = data_axes(mesh)
     tp = model_axis_size(mesh)

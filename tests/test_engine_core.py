@@ -319,7 +319,7 @@ def test_pool_stats_merged_sums_fieldwise():
 def test_request_uses_host_greedy_default():
     """engine_core cannot import runtime.sampling (it imports jax); the host
     default must be an independent greedy sentinel with the same fields."""
-    r = Request(0, (1,), 1)
+    r = Request((1,), 1)
     assert r.sampling.temperature == 0.0
     assert r.sampling.top_k == 0
     assert r.sampling.top_p == 1.0

@@ -129,6 +129,103 @@ def test_engine_core_invariants_under_random_schedules(test_seed):
         check_invariants(core)
 
 
+def test_state_pool_invariants_under_random_schedules(test_seed):
+    """The base fuzzer re-run with ``state_blocks=True`` (DESIGN.md §13):
+    the same bursty shared-prefix traces, tight pools, random cancels and
+    preempt-and-recompute cycles, but with the StatePool registration rules
+    in force — prefix hits truncate to full blocks and mutable partial tails
+    must never appear in the prefix index (the extra clause
+    ``audit_block_invariants`` grows when ``core.state_blocks`` is set).
+    State pools are never quantized, so the fresh-scale queue must stay
+    empty for the whole trace."""
+    rng = np.random.default_rng(test_seed)
+    vocab, eos = 40, 1
+    for trace in range(FUZZ_TRACES):
+        bs = int(rng.choice([2, 4, 8]))
+        max_seq = int(rng.choice([32, 48, 64]))
+        max_slots = int(rng.integers(2, 5))
+        per_table = -(-max_seq // bs)
+        full = 1 + max_slots * per_table
+        num_blocks = int(rng.choice([full, max(per_table + 2, int(full * 0.5))]))
+        core = EngineCore(max_slots=max_slots, max_seq=max_seq, block_size=bs,
+                          prefill_chunk=int(rng.choice([4, 8, 16])),
+                          num_blocks=num_blocks, eos_id=eos,
+                          steps_per_sync=int(rng.integers(2, 9)),
+                          state_blocks=True)
+        prefixes = [tuple(rng.integers(2, vocab, int(rng.integers(0, 17))))
+                    for _ in range(3)]
+        submitted = 0
+        for step in range(FUZZ_STEPS):
+            for _ in range(int(rng.integers(0, 3))):
+                pre = prefixes[int(rng.integers(0, len(prefixes)))]
+                body = tuple(rng.integers(2, vocab, int(rng.integers(1, 13))))
+                prompt = (pre + body)[: max_seq - 2]
+                try:
+                    core.submit(list(prompt), int(rng.integers(1, 10)))
+                    submitted += 1
+                except ValueError:
+                    pass
+            try:
+                _host_step_chunk(core, rng, vocab, eos)
+            except PoolExhausted:
+                check_invariants(core)
+                break
+            check_invariants(core)
+            assert not core._fresh_blocks and not core.take_fresh_scale_ids(), \
+                "state pools are unquantized: no scale resets may queue"
+            if rng.random() < 0.25 and _cancel_random(core, rng):
+                check_invariants(core)
+        else:
+            while core.has_work():
+                try:
+                    _host_step_chunk(core, rng, vocab, eos)
+                except PoolExhausted:
+                    check_invariants(core)
+                    break
+                check_invariants(core)
+        assert submitted > 0, f"trace {trace} submitted nothing — widen the generator"
+        check_invariants(core)
+
+
+def test_state_pool_preempt_keeps_emitted_prefix(test_seed):
+    """Host check of the SSM preempt-and-recompute carry (DESIGN.md §13): a
+    scripted mid-decode preemption of every active ``state_blocks`` slot
+    must fold the tokens emitted so far into the continuation request —
+    final streams start with the captured prefix, land exactly ``max_new``
+    tokens (nothing lost, nothing doubled), and the allocator audit stays
+    clean through the preempt/readmit cycle. (Value-exact recompute needs
+    the real model and lives in test_state_pool.py; the emulator draws
+    token values from its rng.)"""
+    from repro.runtime.faults import EmulatedEngine
+
+    rng = np.random.default_rng(test_seed)
+    eng = EmulatedEngine(rng, max_slots=2, max_seq=48, block_size=4,
+                         prefill_chunk=8, steps_per_sync=4, eos_id=None,
+                         vocab=40, state_blocks=True)
+    prng = np.random.default_rng(test_seed + 1)
+    uids = [eng.submit(list(prng.integers(2, 40, 11)), 9) for _ in range(3)]
+    steps, prefixes = 0, {}
+    while eng.has_work():
+        eng.step_chunk()
+        check_invariants(eng)
+        steps += 1
+        if steps in (2, 4):  # two scripted preemption storms mid-decode
+            for i in range(eng.max_slots):
+                if eng._active[i]:
+                    uid = eng._slots[i].uid
+                    prefixes[uid] = list(eng.tokens_so_far(uid))
+                    eng._preempt(i)
+            check_invariants(eng)
+    results = {uid: list(g.tokens) for uid, g in eng.run().items()}
+    assert set(results) == set(uids)
+    assert all(len(t) == 9 for t in results.values())
+    assert eng.stats["preemptions"] > 0, "storms at chunks 2/4 preempted nothing"
+    for uid, pre in prefixes.items():
+        assert results[uid][: len(pre)] == pre, (
+            f"[seed {test_seed}] uid {uid}: preemption dropped emitted tokens"
+        )
+
+
 def _spec_event(core: EngineCore, rng, vocab: int) -> None:
     """One speculative lifecycle event on a random decoding slot (DESIGN.md
     §12): fork 1-3 draft branches, drain the queued device effects the way

@@ -67,7 +67,7 @@ def test_continuation_reenters_ahead_of_its_class():
     core = _core(max_slots=1)
     core._next_uid = 5  # uid 0 was "admitted" before the later arrivals
     late = core.submit([1, 2], 4, priority=1)
-    cont = Request(0, (1, 2, 3), 2, priority=1)  # uid 0 < late
+    cont = Request((1, 2, 3), 2, priority=1, uid=0)  # uid 0 < late
     core._queue.appendleft(cont)
     assert [r.uid for r in core._queue] == [0, late]
 
@@ -141,7 +141,7 @@ def test_victim_rank_orders_priority_then_slack(rng):
     order = sorted(slot_of.values(), key=core._victim_rank)
     assert [core._slots[i].uid for i in order] == [u0, u1, u2]
     # priority dominates slack: make the tight-deadline slot a worse class
-    core._slots[slot_of[u0]].req = Request(u0, (2,) * 4, 20, priority=7, deadline=10.0)
+    core._slots[slot_of[u0]].req = Request((2,) * 4, 20, priority=7, deadline=10.0, uid=u0)
     order = sorted(slot_of.values(), key=core._victim_rank)
     assert [core._slots[i].uid for i in order] == [u1, u2, u0]
 

@@ -1,0 +1,352 @@
+"""Architecture-agnostic StatePool serving + the EngineConfig/Request API.
+
+Three layers (DESIGN.md §13):
+
+  * Greedy parity — the paged engines must reproduce the rectangular
+    reference exactly for every served state family: pure-SSM
+    (``mamba2-1.3b``) and hybrid attention+SSM (``zamba2-2.7b``) against the
+    unpaged ``serve.generate`` loop, MoE (``deepseek-moe-16b``) against the
+    slot ``Engine``. Parity runs with fp32 params and an fp32 pool so the
+    only differences left are scheduling artifacts — i.e. bugs.
+
+  * State-plane lifecycle — block-granular SSM checkpoints must survive the
+    scheduler's whole repertoire: preempt-and-recompute of a mid-sequence
+    slot reproduces the uninterrupted output token-for-token, full-block
+    prefix reuse produces real cache hits with unchanged output, and
+    exhaustion of the shared pool under a pinned-block harness surfaces the
+    structured ``PoolExhausted`` (retryable + occupancy census), never a
+    bare error or corrupted state.
+
+  * Config surface — frozen ``EngineConfig``/``Request`` are THE
+    construction/submission path: the deprecated per-field kwargs still work
+    (with a DeprecationWarning), mixing both is a TypeError, and every
+    state-family gate (slot engine, quantized pools, ``ssm_chunk != 1``,
+    speculative decoding, unaligned prefill chunks) fails fast with an
+    actionable message.  ``launch/serve.py``'s ``args_to_config`` is checked
+    as a pure function over the CLI namespace.
+"""
+
+import argparse
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.runtime import serve as serve_rt
+from repro.runtime.engine import Engine, EngineConfig, PagedEngine
+from repro.runtime.engine_core import GREEDY, Request
+from repro.runtime.faults import ChaosHarness, audit_block_invariants
+from repro.runtime.kv_pool import PoolExhausted
+
+STATE_ARCHS = ("mamba2-1.3b", "zamba2-2.7b")
+
+
+def _state_model(arch: str):
+    """Reduced config (ssm_chunk=1 for state families — DESIGN.md §13) with
+    fp32 params: parity layers must see zero dtype noise."""
+    cfg = get_config(arch).reduced()
+    if cfg.family in ("ssm", "hybrid"):
+        cfg = dataclasses.replace(cfg, ssm_chunk=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def mamba2_model():
+    return _state_model("mamba2-1.3b")
+
+
+@pytest.fixture(scope="module")
+def zamba2_model():
+    return _state_model("zamba2-2.7b")
+
+
+@pytest.fixture(scope="module")
+def moe_model():
+    return _state_model("deepseek-moe-16b")
+
+
+def _prompts(rng, cfg, n, length):
+    return [rng.integers(1, cfg.vocab_size, size=(length,)) for _ in range(n)]
+
+
+# ------------------------------------------------------- greedy parity
+
+
+@pytest.mark.parametrize("arch", STATE_ARCHS)
+def test_state_family_paged_engine_matches_rect_generate(arch, test_seed):
+    """Pure-SSM and hybrid configs through ``PagedEngine`` must emit the
+    same greedy tokens as the unpaged rectangular ``serve.generate`` loop —
+    chunked prefill, block tables, and per-block state checkpoints must be
+    invisible in the output."""
+    cfg, params = _state_model(arch)
+    rng = np.random.default_rng(test_seed)
+    P, G, B = 13, 8, 3
+    prompts = _prompts(rng, cfg, B, P)
+
+    rect = np.asarray(serve_rt.generate(params, cfg, jnp.asarray(np.stack(prompts)),
+                                        G, kv_dtype="fp32"))
+
+    config = EngineConfig(max_slots=B, max_seq=P + G, block_size=4,
+                          prefill_chunk=8, kv_dtype="fp32")
+    eng = PagedEngine(cfg, params, config)
+    uids = [eng.submit(Request(p, G)) for p in prompts]
+    res = eng.run()
+    audit_block_invariants(eng)
+    for b, uid in enumerate(uids):
+        assert list(res[uid].tokens) == rect[b].tolist(), (
+            f"[seed {test_seed}] {arch} row {b}: paged StatePool diverged "
+            f"from the rectangular reference"
+        )
+    assert eng.mean_occupancy > 0.0
+
+
+def test_moe_paged_engine_matches_slot_engine(moe_model, test_seed):
+    """MoE layers contribute no pool state, but router dispatch must batch
+    across live slots identically in both engines: paged and slot greedy
+    tokens match exactly."""
+    cfg, params = moe_model
+    rng = np.random.default_rng(test_seed)
+    P, G, B = 13, 8, 2
+    prompts = _prompts(rng, cfg, B, P)
+    slot = Engine(cfg, params, EngineConfig(max_slots=B, max_seq=P + G,
+                                            kv_dtype="fp32"))
+    paged = PagedEngine(cfg, params, EngineConfig(max_slots=B, max_seq=P + G,
+                                                  block_size=4, prefill_chunk=8,
+                                                  kv_dtype="fp32"))
+    us = [slot.submit(Request(p, G)) for p in prompts]
+    up = [paged.submit(Request(p, G)) for p in prompts]
+    rs, rp = slot.run(), paged.run()
+    for a, b in zip(us, up):
+        assert list(rs[a].tokens) == list(rp[b].tokens)
+
+
+def test_serve_generate_routes_state_families_through_paged_engine(test_seed):
+    """``serve.generate(paged=True)`` is the user-facing entry: for an SSM
+    config it must route through the paged StatePool engine and still match
+    its own rectangular fallback (``paged=False``)."""
+    cfg, params = _state_model("mamba2-1.3b")
+    rng = np.random.default_rng(test_seed)
+    toks = jnp.asarray(np.stack(_prompts(rng, cfg, 2, 11)))
+    rect = np.asarray(serve_rt.generate(params, cfg, toks, 6, kv_dtype="fp32"))
+    paged = np.asarray(serve_rt.generate(params, cfg, toks, 6, paged=True,
+                                         block_size=4, prefill_chunk=8,
+                                         kv_dtype="fp32"))
+    np.testing.assert_array_equal(paged, rect)
+
+
+# ------------------------------------------- state-plane lifecycle
+
+
+def test_ssm_preempt_recompute_reproduces_uninterrupted_output(mamba2_model,
+                                                               test_seed):
+    """Preempt a mid-sequence Mamba2 slot, then let the scheduler recompute:
+    the final token stream must equal the uninterrupted run's exactly (the
+    recurrent state is rebuilt from the prompt + emitted prefix through the
+    same chunk-1 scan — DESIGN.md §13)."""
+    cfg, params = mamba2_model
+    rng = np.random.default_rng(test_seed)
+    prompt = rng.integers(1, cfg.vocab_size, size=(15,))
+    G = 12
+    config = EngineConfig(max_slots=1, max_seq=15 + G, block_size=4,
+                          prefill_chunk=8, kv_dtype="fp32", steps_per_sync=4)
+
+    clean = PagedEngine(cfg, params, config)
+    u = clean.submit(Request(prompt, G))
+    want = list(clean.run()[u].tokens)
+
+    eng = PagedEngine(cfg, params, config)
+    u = eng.submit(Request(prompt, G))
+    eng.step_chunk()  # prefill chunk(s) + the first decode burst
+    eng.step_chunk()
+    assert eng.num_active == 1
+    eng._preempt(0)  # mid-sequence preemption of the SSM slot
+    audit_block_invariants(eng)
+    got = list(eng.run()[u].tokens)
+    assert got == want, (
+        f"[seed {test_seed}] preempt-recompute diverged: {got} vs {want}"
+    )
+    assert eng.stats["preemptions"] == 1
+
+
+def test_ssm_prefix_reuse_full_blocks_only(mamba2_model, test_seed):
+    """A second request sharing a long prefix must hit the state-block prefix
+    cache (full blocks only — partial state tails are mutable and never
+    registered, DESIGN.md §13) and still match a cold engine's output."""
+    cfg, params = mamba2_model
+    rng = np.random.default_rng(test_seed)
+    prefix = rng.integers(1, cfg.vocab_size, size=(12,))
+    tails = [rng.integers(1, cfg.vocab_size, size=(3,)) for _ in range(2)]
+    prompts = [np.concatenate([prefix, t]) for t in tails]
+    G = 6
+    config = EngineConfig(max_slots=1, max_seq=15 + G, block_size=4,
+                          prefill_chunk=4, kv_dtype="fp32")
+
+    # cold engines: one request each, no reuse possible
+    want = []
+    for p in prompts:
+        eng = PagedEngine(cfg, params, config)
+        u = eng.submit(Request(p, G))
+        want.append(list(eng.run()[u].tokens))
+
+    # warm engine: sequential submissions, second must hit the prefix index
+    eng = PagedEngine(cfg, params, config)
+    u0 = eng.submit(Request(prompts[0], G))
+    got0 = list(eng.run()[u0].tokens)
+    u1 = eng.submit(Request(prompts[1], G))
+    got1 = list(eng.run()[u1].tokens)
+    audit_block_invariants(eng)
+    assert got0 == want[0] and got1 == want[1]
+    assert eng.stats["prefix_hit_tokens"] > 0, (
+        "shared 12-token prefix with block_size=4 produced no state-block hits"
+    )
+    # full-block-only registration: no partial tail may sit in the index
+    bs = eng.block_size
+    for s in eng._slots:
+        for h, ntok in getattr(s, "hashes", ()):
+            if ntok < bs:
+                assert h not in eng.pool._index
+
+
+def test_state_pool_exhaustion_is_structured(mamba2_model, test_seed):
+    """Starve the shared block pool under a live Mamba2 request: the
+    state-plane allocation path must surface the structured ``PoolExhausted``
+    (retryable flag + occupancy census), and the allocator must stay
+    audit-clean — no partial state allocation leaks."""
+    cfg, params = mamba2_model
+    rng = np.random.default_rng(test_seed)
+    config = EngineConfig(max_slots=2, max_seq=32, block_size=4,
+                          prefill_chunk=8, kv_dtype="fp32")
+    eng = PagedEngine(cfg, params, config)
+    # 9-token prompt holds 3 state blocks (12-token capacity); max_new=6
+    # forces decode growth past the boundary once the pool is pinned
+    eng.submit(Request(rng.integers(1, cfg.vocab_size, size=(9,)), 6))
+    eng.step_chunk()  # admit + first prefill chunk: the slot holds its blocks
+    harness = ChaosHarness(eng, rng)
+    harness.exhaust_pool()  # asserts the alloc-path raise is structured
+    with pytest.raises(PoolExhausted) as ei:
+        for _ in range(32):
+            eng.step_chunk()
+    assert ei.value.retryable is False  # sole request can never fit — terminal
+    assert ei.value.occupancy is not None
+    assert ei.value.occupancy.num_live >= len(harness.held)
+    audit_block_invariants(eng, held=harness.held)
+    harness.release_held()
+    audit_block_invariants(eng)
+
+
+# ---------------------------------------------- EngineConfig / Request API
+
+
+def test_engine_config_core_kwargs_round_trip():
+    config = EngineConfig(max_slots=3, max_seq=64, block_size=8,
+                          prefill_chunk=16, num_blocks=20, eos_id=5,
+                          steps_per_sync=4, kv_dtype="int8",
+                          max_inflight=7, admit_watermark=0.5)
+    kw = config.core_kwargs()
+    assert kw == dict(max_slots=3, max_seq=64, block_size=8, prefill_chunk=16,
+                      num_blocks=20, eos_id=5, steps_per_sync=4,
+                      max_inflight=7, admit_watermark=0.5, quantized=True)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        config.max_slots = 4
+
+
+def test_request_polymorphic_submit_rules():
+    """One submission surface: a ``Request`` XOR the legacy spread."""
+    from repro.runtime.faults import EmulatedEngine
+
+    rng = np.random.default_rng(0)
+    eng = EmulatedEngine(rng, EngineConfig(max_slots=2, max_seq=32))
+    uid = eng.submit(Request((3, 4, 5), 4, priority=2))
+    assert uid >= 0
+    assert eng.submit([3, 4, 5], 4) == uid + 1  # legacy spread still works
+    with pytest.raises(ValueError):
+        eng.submit(Request((3,), 2), 4)  # Request AND max_new
+    with pytest.raises(ValueError):
+        eng.submit([3, 4, 5])  # raw prompt without max_new
+    # uid is engine-assigned: a caller-supplied uid is overwritten, and the
+    # submitted Request object itself is never mutated (frozen semantics)
+    req = Request((7, 8), 2, uid=999)
+    assert eng.submit(req) != 999 and req.uid == 999
+
+
+def test_legacy_engine_kwargs_warn_and_match_config(smoke_model, test_seed):
+    """The deprecated per-field kwargs still construct a working engine (with
+    a DeprecationWarning) and produce the exact tokens the EngineConfig path
+    does."""
+    cfg, params = smoke_model
+    rng = np.random.default_rng(test_seed)
+    prompt = rng.integers(2, cfg.vocab_size, size=(10,))
+    config = EngineConfig(max_slots=2, max_seq=32, block_size=8,
+                          prefill_chunk=16, kv_dtype="fp32")
+    new = PagedEngine(cfg, params, config)
+    with pytest.warns(DeprecationWarning):
+        old = PagedEngine(cfg, params, max_slots=2, max_seq=32, block_size=8,
+                          prefill_chunk=16, cache_dtype=jnp.float32)
+    assert old.config == config
+    ua, ub = new.submit(Request(prompt, 5)), old.submit(prompt, 5)
+    assert list(new.run()[ua].tokens) == list(old.run()[ub].tokens)
+    with pytest.raises(TypeError):  # mixing config and legacy kwargs
+        PagedEngine(cfg, params, config, max_slots=2)
+
+
+@pytest.mark.parametrize("build", [
+    pytest.param(lambda cfg, params: Engine(
+        cfg, params, EngineConfig(max_slots=2, max_seq=32, kv_dtype="fp32")),
+        id="slot-engine"),
+    pytest.param(lambda cfg, params: PagedEngine(
+        cfg, params, EngineConfig(max_slots=2, max_seq=32, block_size=4,
+                                  prefill_chunk=8, kv_dtype="int8")),
+        id="quantized-pool"),
+    pytest.param(lambda cfg, params: PagedEngine(
+        cfg, params, EngineConfig(max_slots=2, max_seq=32, block_size=4,
+                                  prefill_chunk=8, kv_dtype="fp32", spec_k=2,
+                                  drafter="ngram")),
+        id="speculative"),
+    pytest.param(lambda cfg, params: PagedEngine(
+        cfg, params, EngineConfig(max_slots=2, max_seq=32, block_size=4,
+                                  prefill_chunk=6, kv_dtype="fp32")),
+        id="unaligned-prefill-chunk"),
+])
+def test_state_family_gates_fail_fast(mamba2_model, build):
+    """Every unsupported state-family combination raises at construction
+    with an actionable message, not deep in a jitted trace."""
+    cfg, params = mamba2_model
+    with pytest.raises(ValueError):
+        build(cfg, params)
+
+
+def test_state_family_requires_chunk1_scan(mamba2_model):
+    cfg, params = mamba2_model
+    cfg = dataclasses.replace(cfg, ssm_chunk=128)
+    with pytest.raises(ValueError, match="ssm_chunk"):
+        PagedEngine(cfg, params, EngineConfig(max_slots=2, max_seq=32,
+                                              block_size=4, prefill_chunk=8,
+                                              kv_dtype="fp32"))
+
+
+def test_args_to_config_maps_cli_namespace():
+    from repro.launch.serve import args_to_config
+
+    ns = argparse.Namespace(slots=4, prompt_len=24, shared_prefix=8, gen=16,
+                            block_size=8, prefill_chunk=16, num_blocks=0,
+                            eos_id=-1, kv_dtype="int4", fused=True, seed=3,
+                            online=False, max_inflight=9, spec_k=0,
+                            drafter="ngram", dp=2)
+    config = args_to_config(ns)
+    assert config == EngineConfig(max_slots=4, max_seq=48, block_size=8,
+                                  prefill_chunk=16, num_blocks=None,
+                                  eos_id=None, kv_dtype="int4", fused=True,
+                                  seed=3, replicas=2)
+    # offline runs never thread admission knobs; drafter only rides spec_k
+    assert config.max_inflight is None and config.drafter is None
+    ns.online, ns.eos_id, ns.spec_k, ns.num_blocks = True, 7, 2, 40
+    config = args_to_config(ns)
+    assert (config.max_inflight, config.eos_id, config.drafter,
+            config.num_blocks) == (9, 7, "ngram", 40)

@@ -35,6 +35,10 @@ informational context. Per-metric rules:
     too — greedy accept/reject over seeded drafts — so vanilla parity is a
     "bool" gate and the accepted-per-verify / steps-per-token-reduction
     speedup counters are exact-or-better floors.
+  * the per-architecture StatePool metrics (`serving.state_archs.*`) gate
+    paged-vs-unpaged greedy parity as "bool" per served config (mamba2 /
+    moe / hybrid) with occupancy and hit-rate floors — all deterministic
+    given the pinned seed.
 
 Metrics in the baseline that no rule matches are informational. Metrics the
 rules match that *disappear* from a fresh run fail (a silently dropped
@@ -113,6 +117,9 @@ SPEC = [
     ("serving.spec.greedy_parity_vs_vanilla", "bool"),
     ("serving.spec.accepted_per_verify", "floor"),
     ("serving.spec.steps_per_token_reduction_x", "floor"),
+    ("serving.state_archs.*.greedy_parity_vs_unpaged", "bool"),
+    ("serving.state_archs.*.mean_occupancy", "floor"),
+    ("serving.state_archs.*.prefix_hit_rate", "floor"),
 ]
 FLOOR_EPS = 1e-9  # fp-serialization slack for the exact-or-better rules
 
